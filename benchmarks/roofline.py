@@ -1,0 +1,171 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run's compiled artifacts.
+
+  compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+  memory term     = HLO_bytes / HBM_bw               (per chip)
+  collective term = collective_bytes / link_bw       (per chip)
+
+HLO_FLOPs / HLO_bytes / collective bytes come from the trip-count-corrected
+HLO text analysis (repro.launch.hlo_analysis) — raw XLA cost_analysis counts
+scan bodies once and is recorded alongside for reference.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per training step; for
+prefill it is 2*N*D, for one decode token 2*N*B.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.configs import ARCHS, SHAPES_BY_NAME
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+DRYRUN_JSON = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
+
+
+def model_flops(arch_name: str, shape_name: str) -> float:
+    """Useful (algorithmic) FLOPs for the whole step, all chips."""
+    cfg = ARCHS[arch_name]
+    shape = SHAPES_BY_NAME[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    # decode: one token per sequence + attention reads over the cache
+    flops = 2.0 * n_active * shape.global_batch
+    if not cfg.attention_free:
+        # hybrid archs only attend in their shared blocks (n_macro slots)
+        n_attn_layers = (cfg.num_layers // cfg.hybrid.attn_every
+                         if cfg.hybrid is not None else cfg.num_layers)
+        flops += (4.0 * n_attn_layers * shape.global_batch * shape.seq_len
+                  * cfg.num_heads * cfg.head_dim)
+    return flops
+
+
+def kernelized_memory_bytes(arch_name: str, shape_name: str, n_dev: int,
+                            args_bytes: float) -> float:
+    """Per-device HBM traffic of a fully-kernelized implementation — the
+    parsed `hbm_bytes` charges flash-attention score tensors as HBM, but in
+    the Pallas kernels (repro/kernels, interpret-validated) those tiles are
+    VMEM-resident. Model:
+      decode  : read weights + the whole cache once      = args_bytes
+      train   : weights/opt traffic (~3x args: read fwd+bwd, grad+opt r/w)
+                + residual-stream activations (~6 passes: fwd w+r, remat
+                re-read, bwd r/w) + KV write/read
+      prefill : args + activations (3 passes) + KV cache build
+    """
+    cfg = ARCHS[arch_name]
+    shape = SHAPES_BY_NAME[shape_name]
+    if shape.kind == "decode":
+        return args_bytes
+    data_ways = 16 if n_dev == 256 else 32
+    b_loc = max(shape.global_batch // data_ways, 1)
+    act = cfg.num_layers * b_loc * shape.seq_len * cfg.d_model * 2
+    kv = (cfg.num_layers * b_loc * shape.seq_len
+          * max(cfg.num_kv_heads, 1) * cfg.head_dim * 2 * 2)
+    if shape.kind == "train":
+        return 3.0 * args_bytes + 6.0 * act + 2.0 * kv
+    return args_bytes + 3.0 * act + 2.0 * kv
+
+
+def roofline_row(key: str, cell: dict) -> dict:
+    arch, shape_name, mesh = key.split("/")
+    n_dev = cell["n_devices"]
+    flops_pd = cell["hlo"]["flops"]
+    bytes_pd = cell["hlo"]["hbm_bytes"]
+    coll_pd = cell["collectives"].get("total_bytes", 0.0)
+    args_b = cell["memory"]["argument_bytes"] or 0
+
+    t_compute = flops_pd / PEAK_FLOPS
+    t_memory = bytes_pd / HBM_BW
+    t_coll = coll_pd / LINK_BW
+    t_mem_kern = kernelized_memory_bytes(arch, shape_name, n_dev,
+                                         args_b) / HBM_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(arch, shape_name)
+    t_ideal = mf / n_dev / PEAK_FLOPS
+    t_bound = max(terms.values())
+    t_bound_kern = max(t_compute, t_mem_kern, t_coll)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": cell["mesh"],
+        "compute_s": t_compute, "memory_s": t_memory,
+        "collective_s": t_coll, "mem_kern_s": t_mem_kern,
+        "dominant": dominant,
+        "model_flops_total": mf,
+        "useful_flop_ratio": mf / n_dev / max(flops_pd, 1.0),
+        # fraction of roofline: ideal compute time / achievable bound
+        "roofline_fraction": t_ideal / max(t_bound, 1e-12),
+        # same, assuming the Pallas kernels keep attention tiles in VMEM
+        "roofline_fraction_kern": t_ideal / max(t_bound_kern, 1e-12),
+        "argument_gib": args_b / 2 ** 30,
+        "compile_s": cell.get("compile_s"),
+    }
+
+
+def build_table(path: str = DRYRUN_JSON, mesh: str = "single"):
+    with open(path) as f:
+        results = json.load(f)
+    rows, skips, errors = [], [], []
+    for key, cell in sorted(results.items()):
+        if not key.endswith("/" + mesh):
+            continue
+        if cell.get("status") == "skipped":
+            skips.append((key, cell.get("reason", "")))
+        elif cell.get("status") == "error":
+            errors.append((key, cell.get("error", "")))
+        else:
+            rows.append(roofline_row(key, cell))
+    return rows, skips, errors
+
+
+def format_table(rows) -> str:
+    hdr = (f"{'arch':<22}{'shape':<13}{'compute_s':>10}{'memory_s':>10}"
+           f"{'coll_s':>9}{'memK_s':>9} {'dominant':<11}{'useful':>7}"
+           f"{'roofl%':>7}{'roofK%':>7}{'args GiB':>9}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:<22}{r['shape']:<13}{r['compute_s']:>10.4f}"
+            f"{r['memory_s']:>10.4f}{r['collective_s']:>9.3f}"
+            f"{r['mem_kern_s']:>9.3f} "
+            f"{r['dominant']:<11}{r['useful_flop_ratio']:>7.2f}"
+            f"{100*r['roofline_fraction']:>6.1f}%"
+            f"{100*r['roofline_fraction_kern']:>6.1f}%"
+            f"{r['argument_gib']:>9.2f}")
+    return "\n".join(lines)
+
+
+def bench_rows(path: str = DRYRUN_JSON):
+    """CSV rows for run.py."""
+    out = []
+    try:
+        rows, skips, errors = build_table(path)
+    except FileNotFoundError:
+        return [("roofline_table", 0.0, f"missing {path} (run dryrun first)")]
+    for r in rows:
+        out.append((f"roofline_{r['arch']}_{r['shape']}",
+                    r["roofline_fraction"],
+                    f"dom={r['dominant']},useful={r['useful_flop_ratio']:.2f}"))
+    out.append(("roofline_cells_ok", float(len(rows)), ""))
+    out.append(("roofline_cells_skipped", float(len(skips)),
+                "long_500k on full-attention archs"))
+    out.append(("roofline_cells_error", float(len(errors)), ""))
+    return out
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    rows, skips, errors = build_table(mesh=mesh)
+    print(format_table(rows))
+    print(f"\n{len(rows)} cells, {len(skips)} skipped, {len(errors)} errors")
+    for k, why in skips:
+        print(f"  SKIP {k}: {why}")
+    for k, why in errors:
+        print(f"  ERR  {k}: {why}")

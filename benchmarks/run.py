@@ -1,0 +1,40 @@
+"""Benchmark harness: one function per paper table/figure plus the
+TPU-adaptation and roofline benches. Prints ``name,value,derived`` CSV.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks.ssd_benches import ALL_SSD_BENCHES
+    from benchmarks.tiercache_bench import tiercache_policies
+    from benchmarks.roofline import bench_rows as roofline_rows
+
+    benches = list(ALL_SSD_BENCHES) + [tiercache_policies, roofline_rows]
+    if quick:
+        benches = [ALL_SSD_BENCHES[0], ALL_SSD_BENCHES[3], roofline_rows]
+
+    print("name,value,derived")
+    failures = 0
+    for bench in benches:
+        t0 = time.time()
+        try:
+            rows = bench()
+        except Exception as e:  # noqa: BLE001
+            print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for name, value, derived in rows:
+            print(f"{name},{value:.6g},\"{derived}\"")
+        print(f"_bench_{bench.__name__}_wall_s,{time.time()-t0:.1f},")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""One benchmark per paper table/figure (deliverable d).
+
+Each function returns a list of (name, value_ms_or_ratio, derived) tuples
+that run.py prints as CSV. Mapping to the paper:
+
+  bursty_bandwidth_cliff   -> Fig. 3 / 9a   (cliff location, level latencies)
+  daily_steady_bandwidth   -> Fig. 4        (baseline daily latency)
+  writes_breakdown         -> Fig. 5        (SLC / SLC2TLC / TLC, WA)
+  ips_normalized           -> Fig. 10       (IPS vs baseline, bursty+daily)
+  ips_agc_normalized       -> Fig. 11       (IPS vs IPS/agc, daily)
+  coop_normalized          -> Fig. 12       (cooperative vs write volume)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.ssd_paper import PAPER_SSD
+from repro.core.ssd.driver import (DEFAULT_SCALE, LOGICAL_SPACE_CAP,
+                                   eval_cell, geomean)
+from repro.core.ssd.sim import run_trace
+from repro.core.ssd.workloads import TRACE_NAMES, make_trace
+
+CFG = PAPER_SSD.scaled(DEFAULT_SCALE)
+HEADLINE = ("hm_0", "hm_1", "proj_0", "prxy_0", "stg_0", "wdev_0")
+
+
+def bursty_bandwidth_cliff():
+    """Fig 3/9a: per-write latency levels around the SLC-cache cliff."""
+    n_logical = min(CFG.total_pages, LOGICAL_SPACE_CAP)
+    cache_pages = CFG.slc_cap_pages * CFG.num_planes
+    n = 3 * cache_pages
+    trace = {"arrival_ms": np.zeros(n, np.float32),
+             "lba": (np.arange(n) % (n_logical - 8)).astype(np.int32),
+             "is_write": np.ones(n, np.int8)}
+    rows = []
+    for policy in ("baseline", "ips"):
+        lat, _ = run_trace(CFG, policy, trace, closed_loop=True,
+                           n_logical=n_logical)
+        lat = np.asarray(lat)
+        pre = lat[: cache_pages - CFG.num_planes].mean()
+        post = lat[cache_pages + CFG.num_planes:].mean()
+        rows.append((f"fig3_{policy}_pre_cliff_ms", pre, "SLC level"))
+        rows.append((f"fig3_{policy}_post_cliff_ms", post,
+                     "post-cliff level"))
+    return rows
+
+
+def daily_steady_bandwidth():
+    """Fig 4: daily-use stays near SLC latency for the baseline."""
+    rows = []
+    for name in ("hm_0", "usr_0"):
+        r = eval_cell(CFG, name, "baseline", "daily")
+        rows.append((f"fig4_{name}_baseline_daily_ms",
+                     r["mean_write_latency_ms"],
+                     f"wa={r['wa_paper']:.3f}"))
+    return rows
+
+
+def writes_breakdown():
+    """Fig 5: writes split into SLC / migration / TLC + WA (baseline)."""
+    rows = []
+    for mode in ("bursty", "daily"):
+        for name in HEADLINE:
+            r = eval_cell(CFG, name, "baseline", mode)
+            total = max(r["slc_writes"] + r["tlc_writes"], 1.0)
+            rows.append((f"fig5_{mode}_{name}_wa", r["wa_paper"],
+                         f"slc={r['slc_writes']/total:.2f},"
+                         f"tlc={r['tlc_writes']/total:.2f},"
+                         f"mig={r['migrations']:.0f}"))
+    return rows
+
+
+def _normalized(policy, mode, names=TRACE_NAMES):
+    out = {}
+    for name in names:
+        base = eval_cell(CFG, name, "baseline", mode)
+        r = eval_cell(CFG, name, policy, mode)
+        out[name] = (
+            r["mean_write_latency_ms"] / base["mean_write_latency_ms"],
+            r["wa_paper"] / base["wa_paper"])
+    return out
+
+
+def ips_normalized():
+    """Fig 10: IPS normalized latency/WA. Paper: bursty 0.77x; daily 1.3x
+    latency, 0.53x WA."""
+    rows = []
+    for mode in ("bursty", "daily"):
+        norm = _normalized("ips", mode)
+        lat = [v[0] for v in norm.values()]
+        wa = [v[1] for v in norm.values()]
+        rows.append((f"fig10_{mode}_ips_latency_ratio",
+                     float(np.mean(lat)), "paper 0.77 bursty / 1.3 daily"))
+        rows.append((f"fig10_{mode}_ips_wa_ratio", float(np.mean(wa)),
+                     "paper ~1.0 bursty / 0.53 daily"))
+        for name, (l, w) in norm.items():
+            rows.append((f"fig10_{mode}_{name}", l, f"wa_ratio={w:.2f}"))
+    return rows
+
+
+def ips_agc_normalized():
+    """Fig 11: IPS/agc daily. Paper: 0.75x latency, 0.59x WA; stg_0/wdev_0
+    latency exceptions (AGC cannot keep up)."""
+    rows = []
+    norm = _normalized("ips_agc", "daily")
+    lat = [v[0] for v in norm.values()]
+    wa = [v[1] for v in norm.values()]
+    rows.append(("fig11_daily_agc_latency_ratio", float(np.mean(lat)),
+                 "paper 0.75"))
+    rows.append(("fig11_daily_agc_wa_ratio", float(np.mean(wa)),
+                 "paper 0.59"))
+    ips = _normalized("ips", "daily", names=("stg_0", "wdev_0"))
+    for name in ("stg_0", "wdev_0"):
+        rows.append((f"fig11_exception_{name}_agc_vs_ips",
+                     norm[name][0] / ips[name][0],
+                     ">1 = AGC lags plain IPS (paper's exception)"))
+    return rows
+
+
+def coop_volume_sweep():
+    """Fig 12a: bursty cooperative vs total write volume. The paper's Fig 12
+    baseline is a dynamic SLC cache of the same 64GB class (at 64GB written
+    "all data can be written into SLC cache ... same write latency"), so the
+    comparison here uses an equal-capacity baseline: ratio == 1 while the
+    burst fits, then falls below 1 as coop's IPS region keeps minting fresh
+    SLC (paper: 1.0 at 64GB -> 0.79 at 136GB)."""
+    import dataclasses
+    import jax.numpy as jnp
+    from repro.core.ssd.driver import _agc_waste_p
+    from repro.core.ssd.sim import run_trace, summarize
+    n_logical = min(CFG.total_pages, LOGICAL_SPACE_CAP)
+    big_base = dataclasses.replace(
+        CFG, slc_cache_gb=CFG.coop_ips_gb + CFG.coop_traditional_gb)
+    rows = []
+    for repeat in (2, 4, 7):
+        trace = make_trace("hm_0", n_logical, mode="bursty",
+                           capacity_pages=CFG.total_pages, repeat=repeat)
+        vols = {}
+        for policy, cfg_ in (("baseline", big_base), ("coop", CFG)):
+            lat, st = run_trace(cfg_, policy, trace, closed_loop=True,
+                                n_logical=n_logical,
+                                waste_p=_agc_waste_p("hm_0"))
+            summ = summarize(lat, {"is_write": jnp.asarray(
+                trace["is_write"])}, st)
+            vols[policy] = float(summ["mean_write_latency_ms"])
+        pages = trace["n_ops"]
+        coop_pages = ((CFG.coop_ips_pages + CFG.coop_trad_pages)
+                      * CFG.num_planes)
+        rows.append((f"fig12a_volume_{repeat}x",
+                     vols["coop"] / vols["baseline"],
+                     f"volume={pages/coop_pages:.2f}x coop cache"))
+    return rows
+
+
+def coop_normalized():
+    """Fig 12: cooperative design vs write volume (64->136GB analogue:
+    volume multiples of the coop cache)."""
+    rows = []
+    norm = _normalized("coop", "daily", names=HEADLINE)
+    rows.append(("fig12_daily_coop_latency_ratio",
+                 float(np.mean([v[0] for v in norm.values()])),
+                 "paper 0.78"))
+    rows.append(("fig12_daily_coop_wa_ratio",
+                 float(np.mean([v[1] for v in norm.values()])),
+                 "paper 0.67"))
+    bursty = _normalized("coop", "bursty", names=("hm_0", "proj_0"))
+    for name, (l, w) in bursty.items():
+        rows.append((f"fig12_bursty_{name}_coop_latency", l,
+                     "large cache absorbs burst"))
+    return rows
+
+
+def wear_and_lifetime():
+    """Paper §IV.D.2 (wear leveling discussion): IPS replaces block erases
+    with reprogram cycles — erase count is the wear-leveling metric the
+    paper proposes. Report erases + total NAND programs per policy (daily,
+    flush included): fewer erases and fewer programs = longer lifetime."""
+    rows = []
+    for name in ("hm_0", "proj_0", "usr_0"):
+        base = eval_cell(CFG, name, "baseline", "daily")
+        for policy in ("ips", "ips_agc", "coop"):
+            r = eval_cell(CFG, name, policy, "daily")
+            er = r["erases"] / max(base["erases"], 1.0)
+            rows.append((f"wear_{name}_{policy}_erase_ratio", er,
+                         f"wa_raw={r['wa_raw']:.2f} vs base "
+                         f"{base['wa_raw']:.2f}"))
+    return rows
+
+
+ALL_SSD_BENCHES = (bursty_bandwidth_cliff, daily_steady_bandwidth,
+                   writes_breakdown, ips_normalized, ips_agc_normalized,
+                   coop_normalized, coop_volume_sweep, wear_and_lifetime)

@@ -1,0 +1,56 @@
+"""Reproduce the paper's headline results (Figs. 9-12) on the scaled drive.
+
+Prints the full normalized table: write latency and write amplification of
+IPS / IPS-agc / cooperative vs the Turbo-Write baseline, bursty and daily.
+
+Run: PYTHONPATH=src python examples/ssd_repro.py [--workloads hm_0,stg_0]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.ssd_paper import PAPER_SSD
+from repro.core.ssd.driver import DEFAULT_SCALE, eval_cell
+from repro.core.ssd.workloads import TRACE_NAMES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workloads", default=",".join(TRACE_NAMES))
+    ap.add_argument("--scale", type=int, default=DEFAULT_SCALE)
+    args = ap.parse_args()
+    names = args.workloads.split(",")
+    cfg = PAPER_SSD.scaled(args.scale)
+    print(f"simulated SSD: {cfg.capacity_gb:.1f} GB (1/{args.scale} of the "
+          f"paper's 384 GB), SLC cache {cfg.slc_cap_pages*cfg.num_planes} "
+          f"pages")
+
+    agg = {}
+    for mode in ("bursty", "daily"):
+        print(f"\n=== {mode} (normalized to baseline) ===")
+        print(f"{'workload':<9}" + "".join(
+            f"{p+' lat':>12}{p+' wa':>10}" for p in ("ips", "agc", "coop")))
+        for name in names:
+            base = eval_cell(cfg, name, "baseline", mode)
+            row = f"{name:<9}"
+            for policy in ("ips", "ips_agc", "coop"):
+                r = eval_cell(cfg, name, policy, mode)
+                nl = (r["mean_write_latency_ms"]
+                      / base["mean_write_latency_ms"])
+                nw = r["wa_paper"] / base["wa_paper"]
+                agg.setdefault((mode, policy), []).append((nl, nw))
+                row += f"{nl:>12.2f}{nw:>10.2f}"
+            print(row)
+    print("\n=== means (paper targets in brackets) ===")
+    paper = {("bursty", "ips"): "0.77/1.0", ("daily", "ips"): "1.3/0.53",
+             ("daily", "ips_agc"): "0.75/0.59",
+             ("daily", "coop"): "0.78/0.67"}
+    for (mode, policy), vals in agg.items():
+        lat = np.mean([v[0] for v in vals])
+        wa = np.mean([v[1] for v in vals])
+        tgt = paper.get((mode, policy), "-")
+        print(f"{mode:>7} {policy:<8} lat={lat:.2f} wa={wa:.2f}   [{tgt}]")
+
+
+if __name__ == "__main__":
+    main()

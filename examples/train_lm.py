@@ -1,0 +1,24 @@
+"""End-to-end training example: train a ~100M-parameter LM for a few
+hundred steps with checkpoint/restart.
+
+The default below is sized for this CPU container (a ~10M model, 200
+steps, minutes). For the full ~100M run on real hardware:
+
+  PYTHONPATH=src python examples/train_lm.py --d-model 768 --layers 12 \
+      --vocab 32000 --steps 300 --batch 32 --seq 512
+
+This is the same driver as `repro.launch.train` — pjit sharding, async
+checkpoints, stateless-resumable data pipeline.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    defaults = ["--arch", "yi-6b", "--reduced", "--d-model", "256",
+                "--layers", "4", "--vocab", "2048", "--steps", "200",
+                "--batch", "8", "--seq", "256", "--log-every", "20",
+                "--ckpt-dir", "/tmp/repro_train_lm", "--ckpt-every", "100"]
+    # user args override defaults
+    sys.argv = [sys.argv[0]] + defaults + sys.argv[1:]
+    main()

@@ -1,0 +1,47 @@
+"""Dev smoke: reduced config of every arch — loss, prefill, decode+tick."""
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.core.tiercache.manager import serve_tick, zero_metrics
+from repro.core.tiercache.policy import Policy
+from repro.models import build_model, make_train_batch
+from repro.models.model_zoo import default_tier_spec
+
+only = sys.argv[1:] or list(ARCHS)
+failures = []
+for name in only:
+    cfg = ARCHS[name].reduced()
+    try:
+        bundle = build_model(cfg)
+        key = jax.random.PRNGKey(0)
+        params = jax.jit(bundle.init)(key)
+        batch = make_train_batch(cfg, batch=2, seq_len=64)
+        loss, metrics = jax.jit(bundle.loss)(params, batch)
+        assert jnp.isfinite(loss), f"loss not finite: {loss}"
+
+        spec = default_tier_spec(64, hot_window=16, page_tokens=8, group=16)
+        cache, logits = jax.jit(
+            lambda p, b: bundle.prefill(p, b, spec))(params, batch)
+        assert jnp.all(jnp.isfinite(logits)), "prefill logits not finite"
+
+        token = jnp.ones((2, 1), jnp.int32)
+        logits2, kv_new = jax.jit(
+            lambda p, t, c: bundle.decode(p, t, c, spec))(params, token, cache)
+        assert jnp.all(jnp.isfinite(logits2)), "decode logits not finite"
+
+        if bundle.cache_kind in ("gqa", "mla", "encdec_self"):
+            cache2, m = serve_tick(cache, bundle.cache_kind, spec,
+                                   Policy.IPS_AGC, kv_new,
+                                   zero_metrics())
+            assert int(cache2["total_len"]) == int(cache["total_len"]) + 1
+        print(f"OK   {name:24s} loss={float(loss):.3f}")
+    except Exception as e:  # noqa: BLE001
+        failures.append(name)
+        print(f"FAIL {name}: {type(e).__name__}: {e}")
+        traceback.print_exc(limit=8)
+print("failures:", failures or "none")
+sys.exit(1 if failures else 0)

@@ -1,0 +1,13 @@
+from repro.configs.base import (ArchConfig, EncDecConfig, HybridConfig,
+                                MLAConfig, MoEConfig, SHAPES, SHAPES_BY_NAME,
+                                ShapeConfig, SSMConfig, VLMConfig,
+                                shape_applicable)
+from repro.configs.registry import (ARCH_IDS, ARCHS, dryrun_cells, get_arch,
+                                    get_shape)
+
+__all__ = [
+    "ArchConfig", "EncDecConfig", "HybridConfig", "MLAConfig", "MoEConfig",
+    "SHAPES", "SHAPES_BY_NAME", "ShapeConfig", "SSMConfig", "VLMConfig",
+    "shape_applicable", "ARCH_IDS", "ARCHS", "dryrun_cells", "get_arch",
+    "get_shape",
+]

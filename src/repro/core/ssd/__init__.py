@@ -1,0 +1,8 @@
+from repro.core.ssd.config import SSDConfig, TimingConfig
+from repro.core.ssd.sim import (CTR, POLICIES, SimState, flush_cache,
+                                init_state, make_step, run_trace, summarize)
+from repro.core.ssd.workloads import TRACE_NAMES, TRACES, make_trace
+
+__all__ = ["SSDConfig", "TimingConfig", "CTR", "POLICIES", "SimState",
+           "flush_cache", "init_state", "make_step", "run_trace",
+           "summarize", "TRACE_NAMES", "TRACES", "make_trace"]

@@ -1,0 +1,4 @@
+from repro.core.tiercache.quant import (DENSITY_RATIO, dequantize_int4,
+                                        quantize_int4)
+
+__all__ = ["DENSITY_RATIO", "dequantize_int4", "quantize_int4"]

@@ -1,0 +1,143 @@
+"""Tiered KV-cache arena layout.
+
+Two tiers per cache "channel" (k, v, or the MLA latent):
+
+* dense tier — packed int4 + groupwise scales, absolute-indexed
+  positions [0, dense_len). The TLC analogue.
+* hot tier — bf16 sliding window holding positions
+  [dense_len, total_len), slot j = position dense_len + j. The SLC analogue.
+
+An "in-place switch" (repack) converts the oldest hot pages to int4 at the
+dense watermark and slides the hot window — density conversion, not
+migration, is the reclamation primitive (paper §IV.A, DESIGN.md §3).
+
+Raw channels (MLA RoPE key) follow the same dense/hot split without
+quantization. All state is a flat dict of arrays with a leading layer
+(or macro-slot) dimension, plus shared scalars `dense_len` / `total_len`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiercache.quant import quantize_int4
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    s_max: int                  # max logical tokens (cache capacity target)
+    hot_window: int = 1024      # bf16 tail capacity (tokens)
+    page_tokens: int = 256      # repack granularity ("two layers" analogue)
+    group: int = 64             # int4 quant group along the feature axis
+
+    @property
+    def s_dense(self) -> int:   # dense tier capacity
+        return self.s_max + self.hot_window
+
+    def __post_init__(self):
+        assert self.hot_window % self.page_tokens == 0
+
+
+# channel schemas per cache kind: (packed, scales, hot) names for quantized
+# channels; single-buffer names for raw channels.
+QUANT_CHANNELS = {
+    "gqa": (("k4", "k4_sc", "kh"), ("v4", "v4_sc", "vh")),
+    "mla": (("c4", "c4_sc", "ch"),),
+    "encdec_self": (("k4", "k4_sc", "kh"), ("v4", "v4_sc", "vh")),
+}
+RAW_CHANNELS = {
+    "gqa": (),
+    "mla": ("krope",),
+    "encdec_self": (),
+}
+
+
+def gqa_layer_zeros(n_slots, b, spec: TierSpec, hkv, hd,
+                    sc_dtype=jnp.bfloat16):
+    g = spec.group
+    return {
+        "k4": jnp.zeros((n_slots, b, spec.s_dense, hkv, hd // 2), jnp.uint8),
+        "k4_sc": jnp.zeros((n_slots, b, spec.s_dense, hkv, hd // g), sc_dtype),
+        "v4": jnp.zeros((n_slots, b, spec.s_dense, hkv, hd // 2), jnp.uint8),
+        "v4_sc": jnp.zeros((n_slots, b, spec.s_dense, hkv, hd // g), sc_dtype),
+        "kh": jnp.zeros((n_slots, b, spec.hot_window, hkv, hd), jnp.bfloat16),
+        "vh": jnp.zeros((n_slots, b, spec.hot_window, hkv, hd), jnp.bfloat16),
+    }
+
+
+def mla_layer_zeros(n_slots, b, spec: TierSpec, rank, rope_dim,
+                    sc_dtype=jnp.bfloat16):
+    g = spec.group
+    return {
+        "c4": jnp.zeros((n_slots, b, spec.s_dense, rank // 2), jnp.uint8),
+        "c4_sc": jnp.zeros((n_slots, b, spec.s_dense, rank // g), sc_dtype),
+        "ch": jnp.zeros((n_slots, b, spec.hot_window, rank), jnp.bfloat16),
+        # raw channel: dense region [0, s_dense) absolute + hot [s_dense, +W)
+        "krope": jnp.zeros((n_slots, b, spec.s_dense + spec.hot_window,
+                            rope_dim), jnp.bfloat16),
+    }
+
+
+def cross_static_zeros(n_slots, b, f, hkv, hd, group=64,
+                       sc_dtype=jnp.bfloat16):
+    return {
+        "ck4": jnp.zeros((n_slots, b, f, hkv, hd // 2), jnp.uint8),
+        "ck4_sc": jnp.zeros((n_slots, b, f, hkv, hd // group), sc_dtype),
+        "cv4": jnp.zeros((n_slots, b, f, hkv, hd // 2), jnp.uint8),
+        "cv4_sc": jnp.zeros((n_slots, b, f, hkv, hd // group), sc_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Building the tiers from a bulk prefill (burst write)
+# ---------------------------------------------------------------------------
+
+
+def split_for_prefill(s: int, spec: TierSpec):
+    """How a bulk write of s tokens splits into (dense_prefix, hot_tail)."""
+    w0 = max(0, s - spec.hot_window)
+    w0 = (w0 + spec.page_tokens - 1) // spec.page_tokens * spec.page_tokens
+    w0 = min(w0, s)
+    return w0, s - w0
+
+
+def fill_quant_channel(buffers, packed_name, sc_name, hot_name, values,
+                       spec: TierSpec):
+    """values: (n_slots, B, S, ...feat) bf16 bulk write -> tier buffers."""
+    s = values.shape[2]
+    w0, tail = split_for_prefill(s, spec)
+    out = dict(buffers)
+    if w0:
+        pk, sc = quantize_int4(values[:, :, :w0], spec.group)
+        out[packed_name] = jax.lax.dynamic_update_slice(
+            buffers[packed_name], pk.astype(buffers[packed_name].dtype),
+            (0,) * buffers[packed_name].ndim)
+        out[sc_name] = jax.lax.dynamic_update_slice(
+            buffers[sc_name], sc.astype(buffers[sc_name].dtype),
+            (0,) * buffers[sc_name].ndim)
+    if tail:
+        hot = values[:, :, w0:]
+        out[hot_name] = jax.lax.dynamic_update_slice(
+            buffers[hot_name], hot.astype(buffers[hot_name].dtype),
+            (0,) * buffers[hot_name].ndim)
+    return out, w0
+
+
+def fill_raw_channel(buffers, name, values, spec: TierSpec):
+    """Raw (unquantized) channel: dense part absolute, hot part at s_dense."""
+    s = values.shape[2]
+    w0, tail = split_for_prefill(s, spec)
+    out = dict(buffers)
+    buf = buffers[name]
+    if w0:
+        buf = jax.lax.dynamic_update_slice(
+            buf, values[:, :, :w0].astype(buf.dtype), (0,) * buf.ndim)
+    if tail:
+        idx = [0] * buf.ndim
+        idx[2] = spec.s_dense
+        buf = jax.lax.dynamic_update_slice(
+            buf, values[:, :, w0:].astype(buf.dtype), tuple(idx))
+    out[name] = buf
+    return out, w0

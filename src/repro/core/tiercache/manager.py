@@ -1,0 +1,162 @@
+"""Functional tiered-cache manager: append, in-place switch (repack),
+policy ticks, and traffic metrics.
+
+All functions are jit/shard_map-safe: caches are flat dicts of arrays with a
+leading slot (layer) dimension plus scalar watermarks; repack counts are
+trace-static and gated with `lax.cond`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiercache.layout import (QUANT_CHANNELS, RAW_CHANNELS,
+                                         TierSpec)
+from repro.core.tiercache.policy import Policy, PolicyPlan, plan_for
+from repro.core.tiercache.quant import quantize_int4
+
+
+def zero_metrics():
+    return {"hbm_read_bytes": jnp.float32(0.0),
+            "hbm_write_bytes": jnp.float32(0.0),
+            "repack_tokens": jnp.float32(0.0),
+            "stall_events": jnp.float32(0.0),
+            "appended_tokens": jnp.float32(0.0)}
+
+
+def _nbytes(arr_slice_shape, dtype):
+    n = 1
+    for d in arr_slice_shape:
+        n *= d
+    return float(n) * jnp.dtype(dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Repack: the in-place switch
+# ---------------------------------------------------------------------------
+
+
+def _dus_dim2(buf, update, idx):
+    start = (0, 0, idx) + (0,) * (buf.ndim - 3)
+    return jax.lax.dynamic_update_slice(buf, update.astype(buf.dtype), start)
+
+
+def repack_pages(layers, kind, spec: TierSpec, dense_len, n_pages: int,
+                 staging_copy: bool):
+    """Move the oldest n_pages*page_tokens hot tokens into the dense tier.
+
+    Returns (new_layers, read_bytes, write_bytes) — byte counts are static
+    floats for the fixed move size (callers gate with cond/where).
+    """
+    t = n_pages * spec.page_tokens
+    out = dict(layers)
+    read_b = 0.0
+    write_b = 0.0
+    for (pk, sc, hot) in QUANT_CHANNELS[kind]:
+        vals = jax.lax.dynamic_slice_in_dim(layers[hot], 0, t, axis=2)
+        packed, scales = quantize_int4(vals, spec.group)
+        out[pk] = _dus_dim2(out[pk], packed, dense_len)
+        out[sc] = _dus_dim2(out[sc], scales, dense_len)
+        rolled = jnp.roll(layers[hot], -t, axis=2)
+        out[hot] = rolled
+        read_b += _nbytes(vals.shape, layers[hot].dtype)
+        wb = _nbytes(packed.shape, jnp.uint8) + _nbytes(scales.shape,
+                                                        layers[sc].dtype)
+        write_b += wb * (2.0 if staging_copy else 1.0)
+    for name in RAW_CHANNELS[kind]:
+        buf = layers[name]
+        hot_start = spec.s_dense
+        vals = jax.lax.dynamic_slice_in_dim(buf, hot_start, t, axis=2)
+        buf = _dus_dim2(buf, vals, dense_len)
+        # roll the hot region only
+        hot_region = jax.lax.dynamic_slice_in_dim(
+            buf, hot_start, spec.hot_window, axis=2)
+        buf = _dus_dim2(buf, jnp.roll(hot_region, -t, axis=2), hot_start)
+        out[name] = buf
+        read_b += _nbytes(vals.shape, buf.dtype)
+        write_b += _nbytes(vals.shape, buf.dtype) * (2.0 if staging_copy else 1.0)
+    return out, read_b, write_b
+
+
+def _append_token(layers, kind, spec: TierSpec, kv_new, hot_idx):
+    """kv_new: tuple of (n_slots, B, 1, ...) matching the kind's channels."""
+    out = dict(layers)
+    write_b = 0.0
+    quant = QUANT_CHANNELS[kind]
+    for (pk, sc, hot), val in zip(quant, kv_new[: len(quant)]):
+        out[hot] = _dus_dim2(out[hot], val, hot_idx)
+        write_b += _nbytes(val.shape, out[hot].dtype)
+    for name, val in zip(RAW_CHANNELS[kind], kv_new[len(quant):]):
+        out[name] = _dus_dim2(out[name], val, spec.s_dense + hot_idx)
+        write_b += _nbytes(val.shape, out[name].dtype)
+    return out, write_b
+
+
+# ---------------------------------------------------------------------------
+# Policy tick: one decode step's cache maintenance + append
+# ---------------------------------------------------------------------------
+
+
+def serve_tick(cache, kind, spec: TierSpec, policy: Policy, kv_new,
+               metrics=None, layers_key="layers"):
+    """Apply (policy-driven repack; append kv_new) to `cache`.
+
+    cache: {layers_key: channel dict, "dense_len": i32, "total_len": i32}.
+    kv_new: tuple of per-channel (n_slots,B,1,...) new values.
+    Returns (cache', metrics').
+    """
+    if metrics is None:
+        metrics = zero_metrics()
+    plan = plan_for(policy, spec.hot_window, spec.page_tokens)
+    layers = cache[layers_key]
+    dense_len, total_len = cache["dense_len"], cache["total_len"]
+    hot_occ = total_len - dense_len
+
+    # --- background (AGC) pass: bg_pages whenever a full page is hot ---
+    if plan.bg_pages:
+        pred = hot_occ >= plan.bg_pages * spec.page_tokens + 1
+        new_lyr, rb, wb = repack_pages(layers, kind, spec, dense_len,
+                                       plan.bg_pages, False)
+        layers = jax.tree.map(lambda new, old: jnp.where(pred, new, old),
+                              new_lyr, layers)
+        moved = jnp.where(pred, plan.bg_pages * spec.page_tokens, 0)
+        dense_len = dense_len + moved
+        metrics = dict(metrics)
+        metrics["hbm_read_bytes"] += jnp.where(pred, rb, 0.0)
+        metrics["hbm_write_bytes"] += jnp.where(pred, wb, 0.0)
+        metrics["repack_tokens"] += moved.astype(jnp.float32)
+
+    # --- sync path: hot window (about to be) full ---
+    hot_occ = total_len - dense_len
+    pred_sync = hot_occ + 1 > spec.hot_window
+    new_lyr, rb, wb = repack_pages(layers, kind, spec, dense_len,
+                                   plan.sync_pages, plan.staging_copy)
+    layers = jax.tree.map(lambda new, old: jnp.where(pred_sync, new, old),
+                          new_lyr, layers)
+    moved = jnp.where(pred_sync, plan.sync_pages * spec.page_tokens, 0)
+    dense_len = dense_len + moved
+    metrics = dict(metrics)
+    metrics["hbm_read_bytes"] += jnp.where(pred_sync, rb, 0.0)
+    metrics["hbm_write_bytes"] += jnp.where(pred_sync, wb, 0.0)
+    metrics["repack_tokens"] += moved.astype(jnp.float32)
+    metrics["stall_events"] += pred_sync.astype(jnp.float32)
+
+    # --- append the new token to the hot tier ---
+    hot_idx = total_len - dense_len
+    layers, wb_append = _append_token(layers, kind, spec, kv_new, hot_idx)
+    metrics["hbm_write_bytes"] += wb_append
+    metrics["appended_tokens"] += 1.0
+
+    out = dict(cache)
+    out[layers_key] = layers
+    out["dense_len"] = dense_len
+    out["total_len"] = total_len + 1
+    return out, metrics
+
+
+def write_amplification(metrics, logical_bytes_per_token=None):
+    """HBM write bytes / logically appended KV bytes — the WA analogue."""
+    appended = jnp.maximum(metrics["appended_tokens"], 1.0)
+    if logical_bytes_per_token is None:
+        return metrics["hbm_write_bytes"] / appended
+    return metrics["hbm_write_bytes"] / (appended * logical_bytes_per_token)

@@ -1,0 +1,47 @@
+"""Density encodings for the tiered KV cache.
+
+The paper's SLC (1 bit/cell, fast) vs TLC (3 bits/cell, dense) maps to
+bf16 pages (fast append/read) vs packed-int4 pages (4x tokens per byte,
+dequant on read). Symmetric groupwise int4: two nibbles per uint8 along the
+trailing feature axis, one f32 scale per group.
+
+These jnp functions are the oracle for `repro.kernels.ips_repack` and the
+dry-run/CPU path of the serving stack.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT4_MAX = 7.0
+DENSITY_RATIO = 4  # bf16 -> int4(+scales) ~= 4x tokens per byte
+
+
+def quantize_int4(x, group: int = 64):
+    """x: (..., F) with F % group == 0 -> (packed uint8 (..., F//2),
+    scales f32 (..., F//group))."""
+    f = x.shape[-1]
+    assert f % group == 0 and (group % 2 == 0), (f, group)
+    xg = x.astype(jnp.float32).reshape(*x.shape[:-1], f // group, group)
+    scale = jnp.max(jnp.abs(xg), axis=-1) / INT4_MAX          # (..., G)
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xg / safe[..., None]), -INT4_MAX, INT4_MAX)
+    q = (q + 8.0).astype(jnp.uint8).reshape(*x.shape[:-1], f)
+    lo, hi = q[..., 0::2], q[..., 1::2]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, scale
+
+
+def dequantize_int4(packed, scales, group: int = 64, dtype=jnp.bfloat16):
+    """Inverse of quantize_int4. packed: (..., F//2); scales: (..., F//group)."""
+    f = packed.shape[-1] * 2
+    lo = (packed & 0x0F).astype(jnp.int32) - 8
+    hi = (packed >> 4).astype(jnp.int32) - 8
+    q = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], f)
+    qg = q.reshape(*packed.shape[:-1], f // group, group).astype(jnp.float32)
+    x = qg * scales[..., None]
+    return x.reshape(*packed.shape[:-1], f).astype(dtype)
+
+
+def quant_error_bound(group: int = 64) -> float:
+    """Max relative error of a symmetric int4 group: half an LSB step."""
+    return 0.5 / INT4_MAX

@@ -1,0 +1,62 @@
+"""Deterministic synthetic token pipeline.
+
+Design goals that matter at 1000+ nodes (DESIGN.md §5):
+  * stateless — batch(step) is a pure function of (seed, step, host), so a
+    restarted or replaced host replays exactly without coordination;
+  * host-sharded — each host materializes only its slice of the global
+    batch (shard_index/num_shards), matching the mesh's data axis;
+  * resumable — checkpoint stores only the step counter.
+
+Tokens are a mixture of Zipf-distributed unigrams and short repeated
+n-grams, giving a learnable (compressible) stream so example train runs
+show decreasing loss rather than flat noise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_exponent: float = 1.1
+    ngram_repeat: int = 8        # repeat window: makes the stream learnable
+
+
+def _zipf_logits(vocab: int, exponent: float):
+    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    return -exponent * jnp.log(ranks)
+
+
+def make_batch(cfg: DataConfig, step, *, shard_index: int = 0,
+               num_shards: int = 1):
+    """Returns {tokens: (local_batch, seq_len) int32} for this host."""
+    local = cfg.global_batch // num_shards
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    key = jax.random.fold_in(key, shard_index)
+    logits = _zipf_logits(cfg.vocab_size, cfg.zipf_exponent)
+    raw = jax.random.categorical(
+        key, logits[None, None, :], shape=(local, cfg.seq_len))
+    # overlay short-range repetition: token[t] = token[t - R] half the time
+    r = cfg.ngram_repeat
+    rep_key = jax.random.fold_in(key, 1)
+    coin = jax.random.bernoulli(rep_key, 0.5, (local, cfg.seq_len))
+    rolled = jnp.roll(raw, r, axis=1)
+    tokens = jnp.where(coin & (jnp.arange(cfg.seq_len)[None, :] >= r),
+                       rolled, raw)
+    return {"tokens": tokens.astype(jnp.int32)}
+
+
+def batch_iterator(cfg: DataConfig, start_step: int = 0, *,
+                   shard_index: int = 0, num_shards: int = 1):
+    step = start_step
+    while True:
+        yield step, make_batch(cfg, step, shard_index=shard_index,
+                               num_shards=num_shards)
+        step += 1

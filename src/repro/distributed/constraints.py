@@ -1,0 +1,69 @@
+"""Activation sharding constraints.
+
+GSPMD propagation from FSDP-sharded weights (d_model on `data`) can win
+over batch sharding inside the residual stream — observed in the compiled
+HLO as batch-replicated attention/MLP with feature-sharded activations
+(EXPERIMENTS.md §Perf iteration 1). MaxText-style explicit constraints on
+the residual stream pin activations to (batch: data[+pod], seq/feature:
+per-call) and let the weight all-gathers happen where intended.
+
+The launcher registers the active mesh before tracing; without one (CPU
+unit tests) every constraint is a no-op.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    _MESH = mesh
+
+
+@contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    prev = _MESH
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_mesh(prev)
+
+
+def _batch_axes():
+    return ("pod", "data") if "pod" in _MESH.axis_names else ("data",)
+
+
+def _axes_size(entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= _MESH.shape[a]
+    return n
+
+
+def constrain(x, *dims):
+    """with_sharding_constraint(x, P(*dims)) fitted for divisibility;
+    'batch' is replaced by the mesh's batch axes. No-op without a mesh."""
+    if _MESH is None or x is None:
+        return x
+    fitted = []
+    for size, d in zip(x.shape, dims):
+        if d == "batch":
+            d = _batch_axes()
+        fitted.append(d if size % _axes_size(d) == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*fitted)))
+
+
+def constrain_bsd(x):
+    """Residual stream (B, S, D): batch-sharded, feature-replicated."""
+    return constrain(x, "batch", None, None)

@@ -1,0 +1,199 @@
+"""Partition rules: parameter/batch/cache PartitionSpecs for every arch.
+
+Strategy (DESIGN.md §5): FSDP on the `data` axis x TP/EP on the `model`
+axis; `pod` (when present) is pure data parallelism across ICI-disjoint
+pods. Weights shard their d_model-ish dim on `data` (all-gathered per layer
+under scan — ZeRO-3 style) and their head/FFN/expert dim on `model`.
+
+jit in_shardings demand exact divisibility, so every spec is fitted
+against the mesh: a dim that does not divide its assigned axis (56/24/8/6
+heads vs model=16, batch=1 vs data) falls back to replication on that dim.
+The resulting redundancy shows up in the roofline's MODEL_FLOPS/HLO_FLOPs
+ratio and is attacked in EXPERIMENTS.md §Perf (e.g. KV caches shard their
+SEQUENCE dim on `model` instead of the non-dividing head dim).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axes_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def fit_spec(mesh: Mesh, spec_dims, shape) -> P:
+    """Drop (replicate) any spec entry whose dim isn't divisible."""
+    fitted = []
+    for dim, entry in zip(shape, spec_dims):
+        fitted.append(entry if dim % _axes_size(mesh, entry) == 0 else None)
+    return P(*fitted)
+
+
+# trailing-dim role specs; leading dims (layer stack, expert stack handled
+# explicitly) get None. FSDP(data) on the d_model-ish dim x Megatron-TP
+# (model) on heads/FFN — iteration 6 (EXPERIMENTS.md §Perf) tried pure
+# output-dim ZeRO-3 sharding instead and REGRESSED 10x: consecutive
+# matmuls with both weights output-sharded force activation all-gathers
+# between them. This layout keeps the TP pair (column- then row-parallel,
+# one small psum per block) and pays the per-layer weight gather on data.
+_ROLE_SPECS = {
+    "wq": ("data", "model", None),
+    "wk": ("data", "model", None),
+    "wv": ("data", "model", None),
+    "wo": ("model", None, "data"),
+    "w_dkv": ("data", None),
+    "w_uk": (None, "model", None),
+    "w_uv": (None, "model", None),
+    "router": ("data", None),
+    "in_proj": ("data", "model"),
+    "out_proj": ("model", "data"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+}
+_MLP_SPECS = {"w_gate": ("data", "model"), "w_up": ("data", "model"),
+              "w_down": ("model", "data")}
+_MOE_SPECS = {"w_gate": ("model", "data", None),
+              "w_up": ("model", "data", None),
+              "w_down": ("model", None, "data")}
+
+
+# decode-mode layouts: FSDP(data) weight sharding is poison for decode —
+# every token would all-gather the entire model over the data axis
+# (observed: arctic decode collective term 11.9 s/step). Decode replicates
+# non-expert weights across data (TP-only on model) and shards MoE experts
+# 2D: experts on model x FFN-hidden on data (local contractions + one small
+# psum, no weight gathers). EXPERIMENTS.md §Perf iteration 4.
+_MOE_SPECS_DECODE = {"w_gate": ("model", None, "data"),
+                     "w_up": ("model", None, "data"),
+                     "w_down": ("model", "data", None)}
+
+
+def _leaf_spec(mesh, path_names, leaf, mode="train") -> P:
+    name = path_names[-1]
+    in_moe = "moe" in path_names
+    nd = leaf.ndim
+
+    model_size = mesh.shape.get("model", 1)
+
+    if name == "embed":
+        role = ("model", "data") if mode == "train" else ("model", None)
+    elif name == "unembed":
+        role = ("data", "model") if mode == "train" else (None, "model")
+    elif name in ("w_gate", "w_up", "w_down"):
+        if in_moe:
+            role = (_MOE_SPECS if mode == "train" else _MOE_SPECS_DECODE)[name]
+        else:
+            role = _MLP_SPECS[name]
+    elif mode == "decode" and name in ("wq", "wk", "wv", "wo"):
+        # TP-only decode: column-parallel on heads when divisible, else
+        # row-parallel on the contracted dim (psum per layer, tiny at B~1xS)
+        if name == "wo":
+            role = (("model", None, None) if leaf.shape[-3] % model_size == 0
+                    else (None, "model", None))
+        else:
+            role = ((None, "model", None) if leaf.shape[-2] % model_size == 0
+                    else ("model", None, None))
+    elif name in _ROLE_SPECS:
+        role = _ROLE_SPECS[name]
+    else:
+        role = ()                     # norms, biases, scalars: replicate
+
+    if len(role) > nd:
+        role = role[-nd:] if nd else ()
+    if mode == "decode" and not in_moe:
+        role = tuple(None if r == "data" else r for r in role)
+    lead = (None,) * (nd - len(role))
+    return fit_spec(mesh, lead + tuple(role), leaf.shape)
+
+
+def param_specs(mesh: Mesh, params, mode: str = "train"):
+    """PartitionSpec pytree matching `params`, fitted to the mesh."""
+    def f(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k)))
+                 for k in path]
+        return _leaf_spec(mesh, names, leaf, mode)
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def param_shardings(mesh: Mesh, params, mode: str = "train"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(mesh, params, mode))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(mesh: Mesh, batch):
+    ba = batch_axes(mesh)
+
+    def f(path, leaf):
+        dims = (ba,) + (None,) * (leaf.ndim - 1)
+        return fit_spec(mesh, dims, leaf.shape)
+    return jax.tree_util.tree_map_with_path(f, batch)
+
+
+# KV tiers shard their SEQUENCE dim on `model` — it always divides (power
+# of two >> 16) where head counts (8/4/1/6/56) usually don't; decode
+# attention over a sequence-sharded cache parallelizes via GSPMD's
+# partitioned softmax reductions (the decode path is scan-free for Sq=1).
+_CACHE_DIM_ROLES = {
+    # name -> (dims after (slots, B): role per dim)
+    "k4": ("model", None, None), "k4_sc": ("model", None, None),
+    "v4": ("model", None, None), "v4_sc": ("model", None, None),
+    "kh": ("model", None, None), "vh": ("model", None, None),
+    "ck4": ("model", None, None), "ck4_sc": ("model", None, None),
+    "cv4": ("model", None, None), "cv4_sc": ("model", None, None),
+    # MLA latent: sequence on model, rank replicated
+    "c4": ("model", None), "c4_sc": ("model", None), "ch": ("model", None),
+    "krope": ("model", None),
+    # SSM states: heads on model
+    "conv": (None, "model"), "ssm": ("model", None, None),
+    "macro_conv": (None, "model"), "macro_ssm": ("model", None, None),
+    "tail_conv": (None, "model"), "tail_ssm": ("model", None, None),
+}
+
+
+def cache_specs(mesh: Mesh, cache):
+    """Specs for a decode cache pytree: leading slot dim replicated, batch
+    dim on the data(+pod) axes, feature dims per _CACHE_DIM_ROLES."""
+    ba = batch_axes(mesh)
+
+    def f(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k)))
+                 for k in path]
+        name = names[-1]
+        if leaf.ndim == 0:
+            return P()
+        if name in ("total_len", "dense_len"):
+            return P()
+        roles = _CACHE_DIM_ROLES.get(name, ())
+        # layout: (slots, B, *feature-dims) except macro_* which are
+        # (n_macro, ae, B, ...): put batch axis right before feature roles
+        nd = leaf.ndim
+        n_feat = min(len(roles), nd - 2) if nd >= 2 else 0
+        roles = roles[len(roles) - n_feat:] if n_feat else ()
+        lead = [None] * (nd - n_feat)
+        # batch dim = the dim just before features
+        if nd - n_feat - 1 >= 1:
+            lead[nd - n_feat - 1] = ba
+        return fit_spec(mesh, tuple(lead) + tuple(roles), leaf.shape)
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def logits_spec(mesh: Mesh):
+    return P(batch_axes(mesh), None)

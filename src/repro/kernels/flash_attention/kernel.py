@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: causal flash-attention forward (training shapes).
+
+Grid (B, H, Sq_blocks, KV_blocks) with the KV dimension innermost so the
+online-softmax accumulators live in VMEM scratch across KV iterations.
+GQA is handled in the index map (kv head = h // g) — no expanded K/V ever
+exists in HBM. Fully-masked KV blocks (start beyond the causal frontier)
+skip their compute via pl.when.
+
+Block sizing: bq x bk score tiles (default 256x256 = 256 KiB f32 in VMEM)
+with MXU-aligned contraction dims (hd in {64,128,256}).
+
+This kernel is the TPU realization of the jnp `_flash_fwd` path — it is
+what turns the §Roofline "memory_s" column into "mem_kern_s": score tiles
+never touch HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, out_ref, lse_ref,
+                      m_scr, l_scr, acc_scr, *, bq, bk, hd):
+    qs = pl.program_id(2)
+    ks = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ks == 0)
+    def _init():
+        m_scr[:] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[:] = jnp.zeros_like(l_scr)
+        acc_scr[:] = jnp.zeros_like(acc_scr)
+
+    # causal frontier: skip blocks whose first key is past the last query
+    @pl.when(ks * bk <= qs * bq + bq - 1)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * (1.0 / (hd ** 0.5))  # (bq,hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)                  # (bk,hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (bq,bk)
+        q_pos = qs * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ks * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos <= q_pos
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev, acc_prev = m_scr[:], l_scr[:], acc_scr[:]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc_prev * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[:], l_scr[:], acc_scr[:] = m_new, l_new, acc_new
+
+    @pl.when(ks == nk - 1)
+    def _flush():
+        l_safe = jnp.maximum(l_scr[:], 1e-30)
+        out_ref[0, 0] = (acc_scr[:] / l_safe).astype(out_ref.dtype)
+        lse_ref[0, 0] = (m_scr[:] + jnp.log(l_safe))[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_fwd_pallas(q, k, v, *, bq: int = 256, bk: int = 256,
+                     interpret: bool = False):
+    """q: (B,S,H,hd); k/v: (B,S,Hkv,hd), causal self-attention with iota
+    positions. Returns (out (B,H,S,hd) f32, lse (B,H,S) f32)."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0
+    qt = q.transpose(0, 2, 1, 3)                              # (B,H,S,hd)
+    kernel = functools.partial(_flash_fwd_kernel, bq=bq, bk=bk, hd=hd)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(b, h, s // bq, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bb, hh, qs, ks: (bb, hh, qs, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda bb, hh, qs, ks: (bb, ks, hh // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda bb, hh, qs, ks: (bb, ks, hh // g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bb, hh, qs, ks: (bb, hh, qs, 0)),
+            pl.BlockSpec((1, 1, bq), lambda bb, hh, qs, ks: (bb, hh, qs)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, k, v)
+    return out, lse

@@ -1,0 +1,28 @@
+"""Jit'd wrapper: TPU flash-attention forward, jnp fallback elsewhere.
+
+On TPU this would back `repro.models.attention.attend_chunked`'s train
+path (plug point: `_flash` custom_vjp's forward); on CPU the jnp path is
+used and this module exists for interpret-mode validation + the roofline's
+kernelized memory model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_fwd_pallas
+from repro.kernels.flash_attention.ref import flash_ref
+
+
+def flash_attention_fwd(q, k, v, *, use_pallas: bool | None = None,
+                        interpret: bool = False, bq: int = 256,
+                        bk: int = 256):
+    """Causal self-attention forward. Returns (out (B,S,H,hd), lse)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        out, lse = flash_fwd_pallas(q, k, v, bq=bq, bk=bk,
+                                    interpret=interpret)
+    else:
+        out, lse = flash_ref(q, k, v)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype), lse

@@ -1,0 +1,21 @@
+"""Oracle for the train-side flash attention kernel: causal self-attention
+with contiguous iota positions, GQA via virtual expansion. Thin wrapper
+over the model's jnp flash forward (itself verified against naive softmax
+attention in tests/test_models.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import _flash_fwd
+
+
+def flash_ref(q, k, v, *, chunk: int = 256):
+    """q: (B,S,H,hd); k/v: (B,S,Hkv,hd). Returns (out (B,H,S,hd_v) f32,
+    lse (B,H,S) f32)."""
+    s = q.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    out, res = _flash_fwd(q, k, v, qf, pos, pos, None, True, chunk)
+    lse = res[-1]
+    return out, lse

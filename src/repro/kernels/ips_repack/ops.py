@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the in-place arena repack.
+
+On TPU this calls the Pallas kernel (aliased, truly in-place); on CPU (this
+container / the dry-run) it falls back to the jnp oracle with buffer
+donation, which XLA also performs in place when possible.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ips_repack.kernel import repack_pallas
+from repro.kernels.ips_repack.ref import repack_ref, unpack_ref  # noqa: F401
+
+
+def repack(arena_u8, *, tokens: int, feat: int, group: int = 64,
+           use_pallas: bool | None = None, interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return repack_pallas(arena_u8, tokens=tokens, feat=feat, group=group,
+                             interpret=interpret)
+    return jax.jit(repack_ref, static_argnames=("tokens", "feat", "group"),
+                   donate_argnums=0)(arena_u8, tokens, feat, group)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the in-place arena repack (SLC->TLC switch analogue).
+
+Arena byte layout per page (page = `tokens` cache entries of `feat` bf16s):
+  before: [tokens * feat * 2 bytes of bf16 data]
+  after:  [tokens * feat / 2 bytes of packed int4
+           | tokens * (feat/group) * 2 bytes of bf16 scales
+           | unused tail = freed capacity]
+
+The freed tail (page_bytes - packed_bytes - scale_bytes) is the new
+writable capacity — the reprogrammed region holds the same tokens at ~4x
+density, which is the paper's in-place switch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiercache.quant import quantize_int4
+
+
+def page_layout(tokens: int, feat: int, group: int):
+    data_bytes = tokens * feat * 2
+    packed_bytes = tokens * feat // 2
+    scale_bytes = tokens * (feat // group) * 2
+    assert packed_bytes + scale_bytes <= data_bytes
+    return data_bytes, packed_bytes, scale_bytes
+
+
+def repack_ref(arena_u8, tokens: int, feat: int, group: int = 64):
+    """arena_u8: (pages, page_bytes) uint8 holding bf16 data. Returns the
+    arena with every page densified in place."""
+    pages, page_bytes = arena_u8.shape
+    data_bytes, packed_bytes, scale_bytes = page_layout(tokens, feat, group)
+    assert page_bytes >= data_bytes
+
+    raw = arena_u8[:, :data_bytes].reshape(pages, tokens * feat, 2)
+    vals = jax.lax.bitcast_convert_type(raw, jnp.bfloat16)
+    vals = vals.reshape(pages, tokens, feat)
+
+    packed, scales = quantize_int4(vals, group)               # u8 / f32
+    packed_flat = packed.reshape(pages, packed_bytes)
+    scale_u8 = jax.lax.bitcast_convert_type(
+        scales.astype(jnp.bfloat16), jnp.uint8).reshape(pages, scale_bytes)
+
+    out = arena_u8
+    out = out.at[:, :packed_bytes].set(packed_flat)
+    out = out.at[:, packed_bytes: packed_bytes + scale_bytes].set(scale_u8)
+    return out
+
+
+def unpack_ref(arena_u8, tokens: int, feat: int, group: int = 64,
+               dtype=jnp.bfloat16):
+    """Read back a densified page: (pages, tokens, feat) dequantized."""
+    from repro.core.tiercache.quant import dequantize_int4
+    pages, _ = arena_u8.shape
+    _, packed_bytes, scale_bytes = page_layout(tokens, feat, group)
+    packed = arena_u8[:, :packed_bytes].reshape(pages, tokens, feat // 2)
+    scale_u8 = arena_u8[:, packed_bytes: packed_bytes + scale_bytes]
+    scales = jax.lax.bitcast_convert_type(
+        scale_u8.reshape(pages, tokens, feat // group, 2), jnp.bfloat16)
+    return dequantize_int4(packed, scales.astype(jnp.float32), group, dtype)

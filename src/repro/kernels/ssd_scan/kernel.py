@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk contraction.
+
+One grid program handles one (batch, chunk) pair entirely in VMEM:
+  - cumulative decay within the chunk,
+  - the causal-masked (C B^T) * L quadratic term -> y_intra,
+  - the end-of-chunk state contribution.
+
+The per-head loop is statically unrolled: per head the score matrix is
+(Q, Q) f32 — for the default Q=256 that is a 256 KiB VMEM temporary and the
+two matmuls per head hit the MXU with 128-aligned contraction dims
+(Q multiples of 128, hd=64/128, N=64/128).
+
+VMEM budget at (Q=256, nh=32, hd=64, N=128):
+  x/y 1 MiB each (bf16), state 1 MiB (f32), B/C/scores < 0.5 MiB — well
+  under the ~16 MiB/core budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_intra_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, state_ref, cum_ref, *, q, nh, hd, n):
+    x = x_ref[0, 0].astype(jnp.float32)                   # (Q, nh, hd)
+    dt = dt_ref[0, 0]                                     # (Q, nh) f32
+    A = a_ref[:]                                          # (nh,)
+    B = b_ref[0, 0].astype(jnp.float32)                   # (Q, N)
+    C = c_ref[0, 0].astype(jnp.float32)                   # (Q, N)
+
+    cb = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # (Q, Q), shared
+    causal = jnp.tril(jnp.ones((q, q), jnp.float32))
+
+    a = dt * A[None, :]                                   # (Q, nh)
+    cum = jnp.cumsum(a, axis=0)                           # (Q, nh)
+    cum_ref[0, 0] = cum
+
+    for h in range(nh):                                   # static unroll
+        cum_h = cum[:, h]
+        seg = cum_h[:, None] - cum_h[None, :]
+        L = jnp.exp(seg) * causal
+        scores = cb * L * dt[None, :, h]                  # (Q, Q)
+        y_h = jnp.dot(scores, x[:, h, :],
+                      preferred_element_type=jnp.float32)  # (Q, hd)
+        y_ref[0, 0, :, h, :] = y_h.astype(y_ref.dtype)
+
+        w = jnp.exp(cum_h[-1] - cum_h) * dt[:, h]         # (Q,)
+        state_h = jnp.dot(x[:, h, :].T, B * w[:, None],
+                          preferred_element_type=jnp.float32)  # (hd, N)
+        state_ref[0, 0, h] = state_h
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_pallas(x, dt, A, B, C, *, interpret: bool = False):
+    """x: (Bt, nc, Q, nh, hd); dt: (Bt, nc, Q, nh) f32; A: (nh,) f32;
+    B/C: (Bt, nc, Q, N). Returns (y_intra, states, cum) matching ref."""
+    bt, nc, q, nh, hd = x.shape
+    n = B.shape[-1]
+    kernel = functools.partial(_ssd_intra_kernel, q=q, nh=nh, hd=hd, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(bt, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, nh, hd), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, q, nh), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((nh,), lambda b, c: (0,)),
+            pl.BlockSpec((1, 1, q, n), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, nh, hd), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, nh, hd, n), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, q, nh), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt, nc, q, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((bt, nc, nh, hd, n), jnp.float32),
+            jax.ShapeDtypeStruct((bt, nc, q, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, B, C)

@@ -1,0 +1,55 @@
+"""Jit'd wrapper: full chunked SSD scan assembled from the Pallas intra-chunk
+kernel plus the (cheap, sequential) jnp inter-chunk recurrence.
+
+Drop-in equivalent of `repro.models.mamba2.ssd_chunked` for TPU execution;
+the models keep the pure-jnp path for the CPU dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_pallas
+from repro.kernels.ssd_scan.ref import intra_chunk_ref
+
+
+def ssd_chunked_kernel(x, dt, A, B, C, chunk: int, h0=None, *,
+                       use_pallas: bool | None = None,
+                       interpret: bool = False):
+    """Same contract as models.mamba2.ssd_chunked."""
+    b, s, nh, hd = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    xf = x.astype(jnp.float32).reshape(b, nc, q, nh, hd)
+    dtc = dt.reshape(b, nc, q, nh)
+    Bc = B.astype(jnp.float32).reshape(b, nc, q, n)
+    Cc = C.astype(jnp.float32).reshape(b, nc, q, n)
+
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        y_intra, states, cum = ssd_intra_pallas(
+            xf, dtc, A, Bc, Cc, interpret=interpret)
+        y_intra = y_intra.astype(jnp.float32)
+    else:
+        y_intra, states, cum = intra_chunk_ref(xf, dtc, A, Bc, Cc)
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+
+    def step(h, inp):
+        st, dec = inp
+        h_out = h
+        return dec[:, :, None, None] * h + st, h_out
+
+    h_final, h_enter = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_enter = h_enter.swapaxes(0, 1)
+
+    in_decay = jnp.exp(cum)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc, in_decay, h_enter)
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y.astype(x.dtype), h_final

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the Mamba2 SSD intra-chunk contraction.
+
+Given chunked inputs, produces the intra-chunk output and per-chunk states;
+the (cheap, sequential) inter-chunk recurrence is shared jnp code in ops.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def intra_chunk_ref(x, dt, A, B, C):
+    """x: (Bt, nc, Q, nh, hd) f32; dt: (Bt, nc, Q, nh) f32; A: (nh,) f32;
+    B, C: (Bt, nc, Q, N) f32.
+    Returns (y_intra (Bt,nc,Q,nh,hd), states (Bt,nc,nh,hd,N),
+             cum (Bt,nc,Q,nh))."""
+    q = x.shape[2]
+    a = dt * A[None, None, None, :]
+    cum = jnp.cumsum(a, axis=2)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", C, B)
+    scores = cb[..., None] * L * dt[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, x)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", B, decay_to_end * dt, x)
+    return y_intra, states, cum

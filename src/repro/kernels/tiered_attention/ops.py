@@ -1,0 +1,60 @@
+"""Jit'd wrapper: full tiered decode attention = Pallas dense-tier partial
+(int4, fused dequant) merged with the bf16 hot-tail partial (jnp — the tail
+is a few hundred tokens) and the current token's own K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tiered_attention.kernel import dense_tier_partial_pallas
+from repro.kernels.tiered_attention.ref import (dense_tier_partial_ref,
+                                                merge_partials)
+
+
+def _bf16_partial(q, k, v, valid):
+    """q: (B,Hkv,G,hd) f32; k/v: (B,W,Hkv,hd); valid: (B,W) bool."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bkgd,bskd->bkgs", q,
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    m = jnp.max(scores, axis=-1)
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def tiered_decode_attention(q, lc, dense_len, total_len, k_new, v_new, *,
+                            group: int = 64, use_pallas: bool | None = None,
+                            interpret: bool = False):
+    """q: (B, 1, H, hd) post-RoPE; lc: one layer's tier dict
+    {k4,k4_sc,v4,v4_sc,kh,vh}; k_new/v_new: (B,1,Hkv,hd) current token.
+    Returns (B, 1, H, hd) attention output (pre out-projection)."""
+    b, _, h, hd = q.shape
+    hkv = lc["kh"].shape[2]
+    g = h // hkv
+    qg = q[:, 0].reshape(b, hkv, g, hd).astype(jnp.float32)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
+    if use_pallas or interpret:
+        dense = dense_tier_partial_pallas(
+            qg, lc["k4"], lc["k4_sc"], lc["v4"], lc["v4_sc"], dense_len,
+            group=group, interpret=interpret)
+    else:
+        dense = dense_tier_partial_ref(
+            qg, lc["k4"], lc["k4_sc"], lc["v4"], lc["v4_sc"], dense_len,
+            group=group)
+
+    w = lc["kh"].shape[1]
+    hot_valid = dense_len + jnp.arange(w)[None, :] < total_len
+    hot_valid = jnp.broadcast_to(hot_valid, (b, w))
+    hot = _bf16_partial(qg, lc["kh"], lc["vh"], hot_valid)
+
+    self_valid = jnp.ones((b, 1), bool)
+    self_p = _bf16_partial(qg, k_new, v_new, self_valid)
+
+    out, _, _ = merge_partials([dense, hot, self_p])       # (B,Hkv,G,hd)
+    return out.reshape(b, 1, h, hd)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for tiered decode attention (dense int4 tier).
+
+Produces the online-softmax partial statistics (m, l, acc) of one decode
+query against the int4 tier only; ops.py merges them with the bf16 hot
+tail. Keeping the kernel's contract at partial-statistics level makes the
+oracle comparison exact and the hot-tail handling trivially shared.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.tiercache.quant import dequantize_int4
+
+
+def dense_tier_partial_ref(q, k4, k4_sc, v4, v4_sc, dense_len, group=64):
+    """q: (B, Hkv, G, hd) f32; k4/v4: (B, S, Hkv, hd//2) u8;
+    scales: (B, S, Hkv, hd//group); dense_len: scalar i32.
+    Returns (m (B,Hkv,G), l (B,Hkv,G), acc (B,Hkv,G,hd)) in f32."""
+    b, s, hkv, _ = k4.shape
+    hd = q.shape[-1]
+    scale = 1.0 / (hd ** 0.5)
+    k = dequantize_int4(k4, k4_sc.astype(jnp.float32), group,
+                        jnp.float32)                       # (B,S,Hkv,hd)
+    v = dequantize_int4(v4, v4_sc.astype(jnp.float32), group, jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", q, k) * scale
+    valid = (jnp.arange(s) < dense_len)[None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    m = jnp.max(scores, axis=-1)
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(valid, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return m, l, acc
+
+
+def merge_partials(parts):
+    """Combine online-softmax partials [(m,l,acc), ...] -> (out, m, l)."""
+    m, l, acc = parts[0]
+    for m2, l2, acc2 in parts[1:]:
+        m_new = jnp.maximum(m, m2)
+        c1 = jnp.exp(m - m_new)
+        c2 = jnp.exp(m2 - m_new)
+        l = l * c1 + l2 * c2
+        acc = acc * c1[..., None] + acc2 * c2[..., None]
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out, m, l

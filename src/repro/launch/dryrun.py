@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape) cell, lower + compile the real step
+function (train_step / prefill_step / serve_step) against ShapeDtypeStruct
+inputs on the production mesh — 16x16 single-pod and 2x16x16 multi-pod —
+and record memory_analysis / cost_analysis / parsed collective bytes for
+the roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.json
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, dryrun_cells, get_arch, get_shape
+from repro.core.tiercache.policy import Policy
+from repro.distributed.constraints import activation_mesh
+from repro.distributed.sharding import (cache_specs, param_specs,
+                                        train_batch_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, input_specs, params_specs
+from repro.models.model_zoo import build_model
+from repro.serve.engine import make_serve_step
+from repro.train.train_step import TrainState, make_train_step
+from repro.optim import make_optimizer
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def lower_cell(arch_name: str, shape_name: str, mesh, *,
+               moe_dispatch: str = "einsum", policy=Policy.IPS_AGC):
+    """Returns (lowered, compiled, info-dict) for one dry-run cell."""
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    bundle = build_model(cfg, moe_dispatch=moe_dispatch)
+    p_specs = params_specs(bundle)
+    p_shard = _named(mesh, param_specs(mesh, p_specs))
+
+    if shape.kind == "train":
+        opt_init, _ = make_optimizer(cfg.optimizer)
+        opt_specs = jax.eval_shape(opt_init, p_specs)
+        opt_shard = jax.tree.map(
+            lambda leaf_spec: leaf_spec,
+            _named(mesh, param_specs_like(opt_specs, p_specs, mesh)))
+        state_specs = TrainState(params=p_specs, opt_state=opt_specs,
+                                 step=jax.ShapeDtypeStruct((), jnp.int32))
+        state_shard = TrainState(params=p_shard, opt_state=opt_shard,
+                                 step=NamedSharding(mesh, P()))
+        batch = batch_specs(cfg, shape.global_batch, shape.seq_len)
+        batch_shard = _named(mesh, train_batch_specs(mesh, batch))
+        step_fn = make_train_step(bundle)
+        jitted = jax.jit(step_fn, in_shardings=(state_shard, batch_shard))
+        with mesh, activation_mesh(mesh):
+            lowered = jitted.lower(state_specs, batch)
+
+    elif shape.kind == "prefill":
+        specs = input_specs(bundle, shape, policy)
+        from repro.serve.engine import make_prefill_step, make_tier_spec
+        tier = make_tier_spec(bundle, shape.seq_len, policy)
+        prefill = make_prefill_step(bundle, tier)
+        batch = specs["batch"]
+        batch_shard = _named(mesh, train_batch_specs(mesh, batch))
+        jitted = jax.jit(prefill, in_shardings=(p_shard, batch_shard))
+        with mesh, activation_mesh(mesh):
+            lowered = jitted.lower(p_specs, batch)
+
+    else:  # decode
+        specs = input_specs(bundle, shape, policy)
+        serve_step = make_serve_step(bundle, specs["tier_spec"], policy)
+        from repro.distributed.sharding import batch_axes, fit_spec
+        # decode-mode weight layout: TP-only + 2D expert sharding (§Perf it.4)
+        p_shard = _named(mesh, param_specs(mesh, p_specs, mode="decode"))
+        cache_shard = _named(mesh, cache_specs(mesh, specs["cache"]))
+        tok_shard = NamedSharding(
+            mesh, fit_spec(mesh, (batch_axes(mesh), None),
+                           specs["token"].shape))
+        metr_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                  specs["metrics"])
+        jitted = jax.jit(serve_step, in_shardings=(
+            p_shard, cache_shard, tok_shard, metr_shard))
+        with mesh, activation_mesh(mesh):
+            lowered = jitted.lower(p_specs, specs["cache"], specs["token"],
+                                   specs["metrics"])
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    from repro.launch.hlo_analysis import analyze_hlo
+    hlo_text = compiled.as_text()
+    hlo = analyze_hlo(hlo_text)
+    if os.environ.get("DUMP_HLO_DIR"):
+        import zstandard as zstd
+        d = os.environ["DUMP_HLO_DIR"]
+        os.makedirs(d, exist_ok=True)
+        fname = f"{arch_name}_{shape_name}_{mesh.devices.size}.hlo.zst"
+        with open(os.path.join(d, fname), "wb") as f:
+            f.write(zstd.ZstdCompressor(level=3).compress(
+                hlo_text.encode()))
+    info = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": mesh.devices.size,
+        "compile_s": round(compile_s, 1),
+        # per-device; argument bytes are exact (params+opt+cache shards),
+        # temp bytes are the CPU backend's buffer assignment — an upper
+        # bound, not TPU-representative (EXPERIMENTS.md §Dry-run note)
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+        # raw XLA cost_analysis counts while bodies ONCE (scan-undercounted)
+        "cost_raw": {"flops": cost.get("flops"),
+                     "bytes_accessed": cost.get("bytes accessed")},
+        # trip-count-corrected per-device analysis from optimized HLO text
+        "hlo": {"flops": hlo["flops"], "hbm_bytes": hlo["hbm_bytes"],
+                "n_whiles": hlo["n_whiles"]},
+        "collectives": hlo["collectives"],
+    }
+    return lowered, compiled, info
+
+
+def param_specs_like(opt_specs, p_specs, mesh):
+    """Optimizer-state specs: reuse the param leaf's spec when shapes match,
+    otherwise replicate (adafactor's factored vectors, scalars)."""
+    from repro.distributed.sharding import param_specs as pspec_fn
+    pspecs = pspec_fn(mesh, p_specs)
+
+    flat_p = {tuple(str(k) for k in path): spec for path, spec in
+              jax.tree_util.tree_flatten_with_path(pspecs)[0]}
+    flat_shapes = {tuple(str(k) for k in path): leaf.shape for path, leaf in
+                   jax.tree_util.tree_flatten_with_path(p_specs)[0]}
+
+    def match(path, leaf):
+        names = tuple(str(k) for k in path)
+        # strip the optimizer-state prefix ('.mu'/'.nu'/'.vr'/'.vc' etc.)
+        for key, spec in flat_p.items():
+            if names[-len(key):] == key and flat_shapes[key] == leaf.shape:
+                return spec
+        return P()
+    return jax.tree_util.tree_map_with_path(match, opt_specs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--moe-dispatch", default="einsum",
+                    choices=("einsum", "gather"))
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    if args.all:
+        cells = [(a.name, s.name, ok, why) for a, s, ok, why in dryrun_cells()]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, True, "")]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for mesh_name, mesh in meshes:
+        for arch, shape, ok, why in cells:
+            key = f"{arch}/{shape}/{mesh_name}"
+            if key in results and results[key].get("status") == "ok":
+                print(f"SKIP (cached) {key}")
+                continue
+            if not ok:
+                results[key] = {"status": "skipped", "reason": why}
+                print(f"SKIP {key}: {why}")
+            else:
+                print(f"LOWER+COMPILE {key} ...", flush=True)
+                t0 = time.time()
+                try:
+                    _, compiled, info = lower_cell(
+                        arch, shape, mesh, moe_dispatch=args.moe_dispatch)
+                    info["status"] = "ok"
+                    results[key] = info
+                    print(f"  ok in {time.time()-t0:.0f}s: "
+                          f"flops={info['hlo']['flops']:.3e} "
+                          f"args={info['memory']['argument_bytes']/2**30:.2f}GiB "
+                          f"coll={info['collectives'].get('total_bytes',0)/2**30:.3f}GiB",
+                          flush=True)
+                    del compiled
+                except Exception as e:  # noqa: BLE001
+                    results[key] = {"status": "error",
+                                    "error": f"{type(e).__name__}: {e}"}
+                    print(f"  ERROR {key}: {type(e).__name__}: {e}")
+                    traceback.print_exc(limit=4)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    n_skip = sum(1 for v in results.values() if v.get("status") == "skipped")
+    n_err = sum(1 for v in results.values() if v.get("status") == "error")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {args.out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Production mesh factory.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run driver must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE first jax init.
+
+Axes:
+  single-pod: (data=16, model=16)           — 256 chips (one v5e pod)
+  multi-pod:  (pod=2, data=16, model=16)    — 512 chips, `pod` crosses DCN
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 8, model: int = 2):
+    """Small mesh for CPU shard_map tests (host platform devices)."""
+    return jax.make_mesh((n_devices // model, model), ("data", "model"))

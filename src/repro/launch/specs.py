@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's inputs.
+
+No device allocation happens here: params/optimizer state come from
+jax.eval_shape over the real init, caches from eval_shape over the real
+cache builders, batches are written out directly. Modality frontends are
+stubs per the assignment: whisper gets (B, frames, d_model) embeddings,
+llava gets (B, patches, d_model).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.tiercache.manager import zero_metrics
+from repro.models.model_zoo import ModelBundle, default_tier_spec
+from repro.serve.engine import make_tier_spec
+from repro.core.tiercache.policy import Policy
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, batch: int, seq_len: int) -> Dict:
+    out = {"tokens": sds((batch, seq_len), jnp.int32)}
+    if cfg.vlm is not None:
+        out["patch_embeds"] = sds((batch, cfg.vlm.num_patches, cfg.d_model),
+                                  jnp.bfloat16)
+    if cfg.encdec is not None:
+        out["frames"] = sds((batch, cfg.encdec.encoder_seq_len, cfg.d_model),
+                            jnp.bfloat16)
+    return out
+
+
+def params_specs(bundle: ModelBundle):
+    return jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+
+
+def decode_cache_specs(bundle: ModelBundle, batch: int, seq_len: int,
+                       policy: Policy = Policy.IPS_AGC):
+    spec = make_tier_spec(bundle, seq_len, policy)
+    cache = jax.eval_shape(
+        lambda: bundle.make_decode_cache(batch, seq_len, spec))
+    return cache, spec
+
+
+def metrics_specs():
+    return jax.eval_shape(zero_metrics)
+
+
+def input_specs(bundle: ModelBundle, shape: ShapeConfig,
+                policy: Policy = Policy.IPS_AGC) -> Dict:
+    """Everything the (arch x shape) cell's step function consumes."""
+    cfg = bundle.cfg
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    if shape.kind == "decode":
+        cache, spec = decode_cache_specs(bundle, shape.global_batch,
+                                         shape.seq_len, policy)
+        return {"token": sds((shape.global_batch, 1), jnp.int32),
+                "cache": cache, "tier_spec": spec,
+                "metrics": metrics_specs()}
+    raise ValueError(shape.kind)

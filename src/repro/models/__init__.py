@@ -1,0 +1,5 @@
+from repro.models.model_zoo import (ModelBundle, build_model,
+                                    default_tier_spec, make_train_batch)
+
+__all__ = ["ModelBundle", "build_model", "default_tier_spec",
+           "make_train_batch"]

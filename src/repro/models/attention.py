@@ -1,0 +1,263 @@
+"""GQA/MQA attention with chunked (flash-style) online-softmax computation.
+
+Sharding-aware design notes (these choices come from reading the compiled
+HLO of early revisions — EXPERIMENTS.md §Perf):
+
+* KV heads are expanded to the full head count VIRTUALLY (broadcast fused
+  into the dot) instead of a grouped (B,S,Hkv,G,hd) layout — the grouped
+  reshape blocked GSPMD from propagating head-sharding through attention,
+  replicating the whole attention computation across the model axis.
+* `positions` may be rank-1 (S,) — the train/prefill path passes an iota,
+  so causal masks and RoPE tables are batch-independent (a (Sq,C) mask per
+  chunk instead of a (B,...,Sq,C) monster hoisted out of the layer scan).
+* The Sq==1 decode path is scan-free so a sequence-sharded KV cache
+  parallelizes across the model axis via partitioned softmax reductions.
+
+Layouts: q (B,Sq,H,hd); k/v (B,Sk,Hkv,hd); scores (B,H,Sq,C).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, init_dense
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype=jnp.bfloat16):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d, (h, hd), dtype=dtype),
+        "wk": init_dense(kk, d, (hkv, hd), dtype=dtype),
+        "wv": init_dense(kv, d, (hkv, hd), dtype=dtype),
+        "wo": (init_dense(ko, h * hd, d, dtype=dtype)).reshape(h, hd, d),
+    }
+
+
+def _expand_kv(kc, g):
+    """(B, C, Hkv, hd) -> (B, C, Hkv*g, hd) as a broadcast (fuses into dot)."""
+    b, c, hkv, hd = kc.shape
+    if g == 1:
+        return kc
+    return jnp.broadcast_to(kc[:, :, :, None, :],
+                            (b, c, hkv, g, hd)).reshape(b, c, hkv * g, hd)
+
+
+def _mask(q_pos, kv_pos, kv_valid, causal):
+    """Broadcastable mask of shape (B?, 1, Sq?, C). Accepts rank-1
+    (batch-uniform) or rank-2 position/validity arrays."""
+    def q_side(p):      # -> (B?, 1, Sq, 1)
+        return p[:, None, :, None] if p.ndim == 2 else p[None, None, :, None]
+
+    def kv_side(p):     # -> (B?, 1, 1, C)
+        return p[:, None, None, :] if p.ndim == 2 else p[None, None, None, :]
+
+    mask = None
+    if causal:
+        mask = kv_side(kv_pos) <= q_side(q_pos)
+    if kv_valid is not None:
+        vm = kv_side(kv_valid)
+        mask = vm if mask is None else (mask & vm)
+    return mask
+
+
+def attend_chunked(q, k, v, *, q_positions, kv_positions, kv_valid=None,
+                   causal=True, chunk=512):
+    """Online-softmax attention over KV chunks.
+
+    q_positions: (Sq,) or (B, Sq); kv_positions: (Sk,) or (B, Sk);
+    kv_valid: optional (Sk,) or (B, Sk) bool.
+    Returns (B, Sq, H, hd_v) in q.dtype.
+    """
+    b, sq, h, hd = q.shape
+    hd_v = v.shape[-1]
+    hkv = k.shape[2]
+    g = h // hkv
+    sk = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+
+    if sq == 1:
+        ke = _expand_kv(k, g).astype(jnp.float32)
+        ve = _expand_kv(v, g).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bchd->bhqc", qf, ke)
+        mask = _mask(q_positions, kv_positions, kv_valid, causal)
+        if mask is not None:
+            s = jnp.where(mask, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        if mask is not None:
+            p = jnp.where(mask, p, 0.0)
+        out = jnp.einsum("bhqc,bchd->bhqd", p, ve)
+        out = out / jnp.maximum(jnp.sum(p, axis=-1), 1e-30)[..., None]
+        return out.swapaxes(1, 2).reshape(b, sq, h, hd_v).astype(q.dtype)
+
+    # pad KV side to a chunk multiple; pads are masked via kv_valid
+    chunk = min(chunk, sk)
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_valid is None:
+            kv_valid = jnp.arange(sk + pad) < sk
+        else:
+            zeros_shape = ((pad,) if kv_valid.ndim == 1 else (b, pad))
+            kv_valid = jnp.concatenate(
+                [kv_valid, jnp.zeros(zeros_shape, bool)],
+                axis=kv_valid.ndim - 1)
+        if kv_positions is not None:
+            pad_pos = jnp.full((pad,) if kv_positions.ndim == 1 else (b, pad),
+                               2 ** 30, jnp.int32)
+            kv_positions = jnp.concatenate([kv_positions, pad_pos],
+                                           axis=kv_positions.ndim - 1)
+
+    out = _flash(q, k, v, qf, q_positions, kv_positions, kv_valid,
+                 causal, chunk)
+    return out.swapaxes(1, 2).reshape(b, sq, h, hd_v).astype(q.dtype)
+
+
+def _slice_kv_side(arr, start, length):
+    if arr is None:
+        return None
+    return jax.lax.dynamic_slice_in_dim(arr, start, length,
+                                        axis=arr.ndim - 1)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def _flash(q, k, v, qf, q_positions, kv_positions, kv_valid, causal, chunk):
+    out, _ = _flash_fwd(q, k, v, qf, q_positions, kv_positions, kv_valid,
+                        causal, chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, qf, q_positions, kv_positions, kv_valid, causal,
+               chunk):
+    """FlashAttention forward: online softmax over KV chunks; residuals are
+    (inputs, out, lse) only — per-chunk probability tensors are NEVER saved
+    (the backward recomputes them chunk-by-chunk). This is what keeps the
+    memory roofline term sane at trainer shapes (EXPERIMENTS.md §Perf it.3).
+    Returns out (B,H,Sq,hd_v) f32."""
+    b, sq, h, hd = q.shape
+    g = h // k.shape[2]
+    n = k.shape[1] // chunk
+
+    def body(carry, i):
+        m, l, acc = carry
+        start = i * chunk
+        ke = _expand_kv(jax.lax.dynamic_slice_in_dim(k, start, chunk, 1),
+                        g).astype(jnp.float32)
+        ve = _expand_kv(jax.lax.dynamic_slice_in_dim(v, start, chunk, 1),
+                        g).astype(jnp.float32)
+        s_c = jnp.einsum("bqhd,bchd->bhqc", qf, ke)
+        mask = _mask(q_positions, _slice_kv_side(kv_positions, start, chunk),
+                     _slice_kv_side(kv_valid, start, chunk), causal)
+        if mask is not None:
+            s_c = jnp.where(mask, s_c, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s_c, axis=-1))
+        p = jnp.exp(s_c - m_new[..., None])
+        if mask is not None:
+            p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqc,bchd->bhqd", p, ve)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, h, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, v.shape[-1]), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    return out, (q, k, v, qf, q_positions, kv_positions, kv_valid, out, lse)
+
+
+def _flash_bwd(causal, chunk, res, dout):
+    """FlashAttention backward: recompute p per chunk; accumulate dq in the
+    carry, emit per-chunk dk/dv (group-reduced for GQA)."""
+    q, k, v, qf, q_positions, kv_positions, kv_valid, out, lse = res
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    n = k.shape[1] // chunk
+    scale = 1.0 / (hd ** 0.5)
+    doutf = dout.astype(jnp.float32)
+    delta = jnp.sum(doutf * out, axis=-1)                    # (B,H,Sq)
+
+    def body(dq, i):
+        start = i * chunk
+        k_c = jax.lax.dynamic_slice_in_dim(k, start, chunk, 1)
+        v_c = jax.lax.dynamic_slice_in_dim(v, start, chunk, 1)
+        ke = _expand_kv(k_c, g).astype(jnp.float32)
+        ve = _expand_kv(v_c, g).astype(jnp.float32)
+        s_c = jnp.einsum("bqhd,bchd->bhqc", qf, ke)
+        mask = _mask(q_positions, _slice_kv_side(kv_positions, start, chunk),
+                     _slice_kv_side(kv_valid, start, chunk), causal)
+        if mask is not None:
+            s_c = jnp.where(mask, s_c, NEG_INF)
+        p = jnp.exp(s_c - lse[..., None])                    # (B,H,Sq,C)
+        if mask is not None:
+            p = jnp.where(mask, p, 0.0)
+        dp = jnp.einsum("bhqd,bchd->bhqc", doutf, ve)
+        ds = p * (dp - delta[..., None])                     # (B,H,Sq,C)
+        dq = dq + jnp.einsum("bhqc,bchd->bqhd", ds, ke)
+        dk_c = jnp.einsum("bhqc,bqhd->bchd", ds, qf)         # vs SCALED q
+        dv_c = jnp.einsum("bhqc,bhqd->bchd", p, doutf)
+        # reduce the virtual group expansion back to Hkv heads
+        dk_c = dk_c.reshape(b, chunk, hkv, g, hd).sum(3)
+        dv_c = dv_c.reshape(b, chunk, hkv, g, v.shape[-1]).sum(3)
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, sq, h, hd), jnp.float32)
+    dq, (dk_chunks, dv_chunks) = jax.lax.scan(body, dq0, jnp.arange(n))
+    dk = dk_chunks.swapaxes(0, 1).reshape(b, n * chunk, hkv, hd)
+    dv = dv_chunks.swapaxes(0, 1).reshape(b, n * chunk, hkv, v.shape[-1])
+    # q received `scale` via qf; dq above is w.r.t. qf, so scale it back
+    dq = (dq * scale).astype(q.dtype)
+    import numpy as np
+    f0 = lambda a: (np.zeros(a.shape, jax.dtypes.float0)
+                    if a is not None else None)
+    return (dq, dk.astype(k.dtype), dv.astype(v.dtype),
+            jnp.zeros_like(qf),      # qf cotangent folded into dq
+            f0(q_positions), f0(kv_positions), f0(kv_valid))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def qkv_project(params, cfg, x, positions, rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_project(params, attn_out):
+    return jnp.einsum("bshk,hkd->bsd", attn_out, params["wo"])
+
+
+def apply_attention(params, cfg, x, positions, *, causal=True, chunk=512,
+                    rope=True):
+    """Full self-attention (training / prefill compute). Returns (y, (k, v)).
+
+    positions: (S,) batch-uniform iota (keeps masks/RoPE tables tiny)."""
+    q, k, v = qkv_project(params, cfg, x, positions, rope=rope)
+    out = attend_chunked(q, k, v, q_positions=positions,
+                         kv_positions=positions, causal=causal, chunk=chunk)
+    return out_project(params, out), (k, v)
+
+
+def apply_cross_attention(params, cfg, x, k, v, *, chunk=512):
+    """Cross-attention: q from x, precomputed k/v (no RoPE, non-causal)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    out = attend_chunked(q, k, v, q_positions=None, kv_positions=None,
+                         causal=False, chunk=chunk)
+    return out_project(params, out)

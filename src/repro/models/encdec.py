@@ -1,0 +1,152 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+The audio frontend (mel + conv) is a STUB per the assignment: the model
+consumes precomputed frame embeddings (B, F, d_model). The encoder uses
+fixed sinusoidal positions, no RoPE (whisper-faithful); the decoder uses
+RoPE instead of whisper's learned positions because the assigned decode
+shapes (32k) exceed any learned table (deviation noted in DESIGN.md).
+
+Decode: tiered self-attention cache (IPS-KV) + a static int4 cross-attention
+cache built once at prefill — the cross cache is pure "dense tier" (read
+only, never appended to), the cleanest instance of the paper's density
+argument.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiercache.quant import dequantize_int4
+from repro.distributed.constraints import constrain_bsd
+from repro.models import attention as attn_lib
+from repro.models.layers import (apply_mlp, chunked_softmax_xent, embed,
+                                 init_embedding, init_mlp, rms_norm)
+from repro.models.transformer import gqa_decode_tiered, unembed_matrix
+
+
+def sinusoidal_positions(length: int, dim: int, dtype=jnp.bfloat16):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (jnp.log(10_000.0) / max(dim - 2, 1)))
+    ang = pos * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"attn": attn_lib.init_attention(k1, cfg, dtype=dtype),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def _init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"self_attn": attn_lib.init_attention(k1, cfg, dtype=dtype),
+            "cross_attn": attn_lib.init_attention(k2, cfg, dtype=dtype),
+            "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "lnx": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def init_encdec(key, cfg, dtype=jnp.bfloat16):
+    ec = cfg.encdec
+    k_emb, k_enc, k_dec, k_un = jax.random.split(key, 4)
+    return {
+        "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+            jax.random.split(k_enc, ec.num_encoder_layers)),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+            jax.random.split(k_dec, cfg.num_layers)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "unembed": (0.02 * jax.random.normal(
+            k_un, (cfg.d_model, cfg.vocab_size), jnp.float32)).astype(dtype),
+    }
+
+
+def encode(params, cfg, frames, *, remat=True, attn_chunk=512):
+    """frames: (B, F, D) precomputed embeddings -> (B, F, D)."""
+    b, f, d = frames.shape
+    x = frames + sinusoidal_positions(f, d, frames.dtype)[None]
+    x = constrain_bsd(x)
+    positions = jnp.arange(f, dtype=jnp.int32)
+
+    def body(h, lp):
+        h = constrain_bsd(h)
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        a, _ = attn_lib.apply_attention(lp["attn"], cfg, hn, positions,
+                                        causal=False, chunk=attn_chunk,
+                                        rope=False)
+        h = h + a
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        return h + apply_mlp(lp["mlp"], hn, cfg.act), None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decoder_hidden(params, cfg, tokens, enc_out, *, remat=True,
+                   attn_chunk=512, collect_kv=False):
+    """Teacher-forced decoder pass. Returns (hidden, (self_kvs, cross_kvs))."""
+    b, s = tokens.shape
+    x = constrain_bsd(embed(params["embed"], tokens))
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(h, lp):
+        h = constrain_bsd(h)
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        a, self_kv = attn_lib.apply_attention(
+            lp["self_attn"], cfg, hn, positions, causal=True, chunk=attn_chunk)
+        h = h + a
+        hn = rms_norm(h, lp["lnx"], cfg.norm_eps)
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"])
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"])
+        h = h + attn_lib.apply_cross_attention(lp["cross_attn"], cfg, hn,
+                                               ck, cv, chunk=attn_chunk)
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + apply_mlp(lp["mlp"], hn, cfg.act)
+        return h, ((self_kv, (ck, cv)) if collect_kv else None)
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, kvs = jax.lax.scan(body, x, params["dec_layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), kvs
+
+
+def encdec_loss(params, cfg, frames, tokens, *, remat=True, attn_chunk=512):
+    enc_out = encode(params, cfg, frames, remat=remat, attn_chunk=attn_chunk)
+    hidden, _ = decoder_hidden(params, cfg, tokens, enc_out, remat=remat,
+                               attn_chunk=attn_chunk)
+    loss = chunked_softmax_xent(hidden[:, :-1], unembed_matrix(params),
+                                tokens[:, 1:])
+    return loss, {"loss": loss, "aux_loss": jnp.float32(0.0)}
+
+
+def encdec_decode_step(params, cfg, token, cache, *, quant_group=64):
+    """cache: {"layers": {self tiers..., ck4, ck4_sc, cv4, cv4_sc},
+    "dense_len", "total_len"}. Cross tiers are static int4."""
+    total_len, dense_len = cache["total_len"], cache["dense_len"]
+    x = embed(params["embed"], token)
+    positions = total_len[None].astype(jnp.int32)
+
+    def body(h, xs):
+        lp, lc = xs
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        a, kv_new = gqa_decode_tiered(lp["self_attn"], cfg, hn, positions,
+                                      lc, dense_len, total_len, quant_group)
+        h = h + a
+        hn = rms_norm(h, lp["lnx"], cfg.norm_eps)
+        ck = dequantize_int4(lc["ck4"], lc["ck4_sc"], quant_group)
+        cv = dequantize_int4(lc["cv4"], lc["cv4_sc"], quant_group)
+        h = h + attn_lib.apply_cross_attention(lp["cross_attn"], cfg, hn,
+                                               ck, cv, chunk=2048)
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + apply_mlp(lp["mlp"], hn, cfg.act)
+        return h, kv_new
+
+    x, new_kvs = jax.lax.scan(body, x, (params["dec_layers"], cache["layers"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ unembed_matrix(params)).astype(jnp.float32)
+    return logits, new_kvs

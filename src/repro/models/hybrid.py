@@ -1,0 +1,245 @@
+"""SSM and hybrid LMs: mamba2-370m (pure SSM) and zamba2 (Mamba2 backbone +
+shared attention block every `attn_every` layers).
+
+Zamba2 structure: `n_macro = L // attn_every` macro blocks, each = attn_every
+Mamba2 layers followed by ONE application of the weight-shared attention
+block (its KV cache gets one tiered slot per macro); remaining layers form a
+tail of plain Mamba2 layers. The shared block's cache is the only place the
+paper's technique applies to this family (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as m2
+from repro.models.layers import (apply_mlp, chunked_softmax_xent, embed,
+                                 init_embedding, init_mlp, rms_norm)
+from repro.distributed.constraints import constrain_bsd
+from repro.models.transformer import gqa_decode_tiered, unembed_matrix
+
+
+# ---------------------------------------------------------------------------
+# Mamba layer wrapper (pre-norm + residual)
+# ---------------------------------------------------------------------------
+
+
+def _init_mamba_layer(key, cfg, dtype):
+    return {"ln": jnp.zeros((cfg.d_model,), dtype),
+            "mamba": m2.init_mamba2(key, cfg, dtype=dtype)}
+
+
+def _apply_mamba_layer(lp, cfg, x, *, states=None, collect_state=False):
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    if states is None:
+        y, st = m2.apply_mamba2(lp["mamba"], cfg, h,
+                                return_state=collect_state)
+    else:
+        y, st = m2.apply_mamba2_decode(lp["mamba"], cfg, h, *states)
+    return x + y, st
+
+
+# ---------------------------------------------------------------------------
+# Pure SSM LM (mamba2-370m)
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_lm(key, cfg, dtype=jnp.bfloat16):
+    k_emb, k_layers, k_un = jax.random.split(key, 3)
+    params = {
+        "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: _init_mamba_layer(k, cfg, dtype))(
+            jax.random.split(k_layers, cfg.num_layers)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (0.02 * jax.random.normal(
+            k_un, (cfg.d_model, cfg.vocab_size), jnp.float32)).astype(dtype)
+    return params
+
+
+def ssm_lm_hidden(params, cfg, tokens, *, remat=True, collect_state=False):
+    x = constrain_bsd(embed(params["embed"], tokens))
+
+    def body(h, lp):
+        h, st = _apply_mamba_layer(lp, cfg, constrain_bsd(h),
+                                   collect_state=collect_state)
+        return h, st
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, states = jax.lax.scan(body, x, params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), states
+
+
+def ssm_lm_loss(params, cfg, tokens, *, remat=True):
+    hidden, _ = ssm_lm_hidden(params, cfg, tokens, remat=remat)
+    loss = chunked_softmax_xent(hidden[:, :-1], unembed_matrix(params),
+                                tokens[:, 1:])
+    return loss, {"loss": loss, "aux_loss": jnp.float32(0.0)}
+
+
+def ssm_lm_decode_step(params, cfg, token, states):
+    """states: (conv (L,B,dc-1,dxc), ssm (L,B,nh,hd,N) f32)."""
+    x = embed(params["embed"], token)
+
+    def body(h, xs):
+        lp, st = xs
+        h, st_new = _apply_mamba_layer(lp, cfg, h, states=st)
+        return h, st_new
+    x, new_states = jax.lax.scan(body, x, (params["layers"], states))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ unembed_matrix(params)).astype(jnp.float32)
+    return logits, new_states
+
+
+def ssm_state_shapes(cfg, batch):
+    s = cfg.ssm
+    d_xc = s.d_inner(cfg.d_model) + 2 * s.d_state
+    nh = s.num_heads(cfg.d_model)
+    L = cfg.num_layers
+    return (
+        jnp.zeros((L, batch, s.d_conv - 1, d_xc), jnp.bfloat16),
+        jnp.zeros((L, batch, nh, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid LM
+# ---------------------------------------------------------------------------
+
+
+def hybrid_structure(cfg):
+    n_macro = cfg.num_layers // cfg.hybrid.attn_every
+    tail = cfg.num_layers - n_macro * cfg.hybrid.attn_every
+    return n_macro, tail
+
+
+def init_hybrid_lm(key, cfg, dtype=jnp.bfloat16):
+    n_macro, tail = hybrid_structure(cfg)
+    ae = cfg.hybrid.attn_every
+    k_emb, k_m, k_t, k_sh, k_un = jax.random.split(key, 5)
+
+    macro_keys = jax.random.split(k_m, n_macro * ae)
+    macro = jax.vmap(lambda k: _init_mamba_layer(k, cfg, dtype))(macro_keys)
+    macro = jax.tree.map(
+        lambda a: a.reshape(n_macro, ae, *a.shape[1:]), macro)
+
+    ks1, ks2 = jax.random.split(k_sh)
+    shared = {
+        "attn": attn_lib.init_attention(ks1, cfg, dtype=dtype),
+        "mlp": init_mlp(ks2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    params = {
+        "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "macro": macro,
+        "shared": shared,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if tail:
+        params["tail"] = jax.vmap(lambda k: _init_mamba_layer(k, cfg, dtype))(
+            jax.random.split(k_t, tail))
+    if not cfg.tie_embeddings:
+        params["unembed"] = (0.02 * jax.random.normal(
+            k_un, (cfg.d_model, cfg.vocab_size), jnp.float32)).astype(dtype)
+    return params
+
+
+def _apply_shared_block(shared, cfg, x, positions, *, attn_chunk=512):
+    h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+    a, kv = attn_lib.apply_attention(shared["attn"], cfg, h, positions,
+                                     chunk=attn_chunk)
+    x = x + a
+    h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+    return x + apply_mlp(shared["mlp"], h, cfg.act), kv
+
+
+def hybrid_lm_hidden(params, cfg, tokens, *, remat=True, attn_chunk=512,
+                     collect_kv=False, collect_state=False):
+    x = constrain_bsd(embed(params["embed"], tokens))
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def macro_body(h, macro_params):
+        def inner(hh, lp):
+            hh, st = _apply_mamba_layer(lp, cfg, constrain_bsd(hh),
+                                        collect_state=collect_state)
+            return hh, st
+        h, states = jax.lax.scan(inner, h, macro_params)
+        h = constrain_bsd(h)
+        h, kv = _apply_shared_block(params["shared"], cfg, h, positions,
+                                    attn_chunk=attn_chunk)
+        return h, (kv if collect_kv else None,
+                   states if collect_state else None)
+
+    mb = jax.checkpoint(macro_body, prevent_cse=False) if remat else macro_body
+    x, (kvs, macro_states) = jax.lax.scan(mb, x, params["macro"])
+
+    tail_states = None
+    if "tail" in params:
+        def tail_body(h, lp):
+            h, st = _apply_mamba_layer(lp, cfg, h,
+                                       collect_state=collect_state)
+            return h, st
+        tb = jax.checkpoint(tail_body, prevent_cse=False) if remat else tail_body
+        x, tail_states = jax.lax.scan(tb, x, params["tail"])
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if collect_state:
+        return hidden, (kvs, macro_states, tail_states)
+    return hidden, kvs
+
+
+def hybrid_lm_loss(params, cfg, tokens, *, remat=True, attn_chunk=512):
+    hidden, _ = hybrid_lm_hidden(params, cfg, tokens, remat=remat,
+                                 attn_chunk=attn_chunk)
+    loss = chunked_softmax_xent(hidden[:, :-1], unembed_matrix(params),
+                                tokens[:, 1:])
+    return loss, {"loss": loss, "aux_loss": jnp.float32(0.0)}
+
+
+def hybrid_decode_step(params, cfg, token, cache, *, quant_group=64):
+    """cache: {"macro_conv","macro_ssm" (n_macro,ae,B,...), "attn" tiered
+    slots (n_macro leading), "tail_conv","tail_ssm", "dense_len","total_len"}.
+    Returns (logits, new_cache_pieces) — append/repack handled by tiercache.
+    """
+    total_len, dense_len = cache["total_len"], cache["dense_len"]
+    x = embed(params["embed"], token)
+    positions = total_len[None].astype(jnp.int32)
+
+    def macro_body(h, xs):
+        mp, conv, ssm, attn_slot = xs
+        def inner(hh, ys):
+            lp, cst, sst = ys
+            hh, st = _apply_mamba_layer(lp, cfg, hh, states=(cst, sst))
+            return hh, st
+        h, states = jax.lax.scan(inner, h, (mp, conv, ssm))
+        hn = rms_norm(h, params["shared"]["ln1"], cfg.norm_eps)
+        a, kv_new = gqa_decode_tiered(params["shared"]["attn"], cfg, hn,
+                                      positions, attn_slot, dense_len,
+                                      total_len, quant_group)
+        h = h + a
+        hn = rms_norm(h, params["shared"]["ln2"], cfg.norm_eps)
+        h = h + apply_mlp(params["shared"]["mlp"], hn, cfg.act)
+        return h, (states, kv_new)
+
+    x, (macro_states, new_kvs) = jax.lax.scan(
+        macro_body, x,
+        (params["macro"], cache["macro_conv"], cache["macro_ssm"],
+         cache["attn"]))
+
+    tail_states = None
+    if "tail" in params:
+        def tail_body(h, ys):
+            lp, cst, sst = ys
+            h, st = _apply_mamba_layer(lp, cfg, h, states=(cst, sst))
+            return h, st
+        x, tail_states = jax.lax.scan(
+            tail_body, x, (params["tail"], cache["tail_conv"],
+                           cache["tail_ssm"]))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ unembed_matrix(params)).astype(jnp.float32)
+    return logits, {"macro_states": macro_states, "attn_kv": new_kvs,
+                    "tail_states": tail_states}

@@ -1,0 +1,122 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings, chunked cross-entropy.
+
+Functional style: params are nested dicts of jnp arrays; every layer is a
+pure function. Compute dtype is the config dtype (bf16) with f32 for
+normalization statistics, softmax, and the loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(key, d_in: int, d_out, scale: float = 0.02, dtype=jnp.bfloat16):
+    """Dense weight (d_in, *d_out); trunc-normal-ish init."""
+    shape = (d_in,) + (d_out if isinstance(d_out, tuple) else (d_out,))
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, D) rotary over D; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv_freq = rope_frequencies(d, theta)                     # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]                       # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {"w_down": init_dense(k2, d_ff, d_model, dtype=dtype)}
+    if act in ("silu", "geglu"):
+        params["w_gate"] = init_dense(k1, d_model, d_ff, dtype=dtype)
+        params["w_up"] = init_dense(k3, d_model, d_ff, dtype=dtype)
+    else:  # relu2 / gelu: single in-projection
+        params["w_up"] = init_dense(k1, d_model, d_ff, dtype=dtype)
+    return params
+
+
+def apply_mlp(params, x, act: str):
+    if act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"])
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding & chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def chunked_softmax_xent(hidden, unembed, labels, mask=None, chunk: int = 512):
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    hidden: (B, S, D); unembed: (D, V); labels: (B, S) int32;
+    mask: (B, S) float or None. Scans over sequence chunks — peak memory is
+    (B, chunk, V) per step, recomputed in the backward pass (this sits under
+    the remat'd loss).
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+
+    def piece(h_c, y_c, m_c):
+        logits = (h_c @ unembed).astype(jnp.float32)          # (B, c, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * m_c
+        return jnp.sum(nll), jnp.sum(m_c)
+
+    def body(carry, xs):
+        h_c, y_c, m_c = xs
+        loss, cnt = piece(h_c, y_c, m_c)
+        return (carry[0] + loss, carry[1] + cnt), None
+
+    xs = (
+        hidden[:, : n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1),
+        labels[:, : n * chunk].reshape(b, n, chunk).swapaxes(0, 1),
+        mask[:, : n * chunk].reshape(b, n, chunk).swapaxes(0, 1),
+    )
+    (loss, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    if rem:
+        l2, c2 = piece(hidden[:, n * chunk:], labels[:, n * chunk:], mask[:, n * chunk:])
+        loss, cnt = loss + l2, cnt + c2
+    return loss / jnp.maximum(cnt, 1.0)

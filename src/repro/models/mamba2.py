@@ -1,0 +1,176 @@
+"""Mamba2 block — SSD (state space duality) with chunked parallel scan.
+
+Follows the SSD decomposition (Dao & Gu, 2024): within a chunk the output is
+a masked quadratic contraction; across chunks a small recurrence over
+per-chunk states. Scalar A per head, ngroups=1 (B/C shared across heads).
+
+jnp implementation here is the oracle / dry-run path; the intra-chunk
+contraction has a Pallas TPU kernel in `repro.kernels.ssd_scan`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, rms_norm
+
+
+def init_mamba2(key, cfg, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    nh = s.num_heads(d)
+    d_xc = d_in + 2 * s.d_state
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "in_proj": init_dense(k1, d, d_in + d_xc + nh, dtype=dtype),
+        "conv_w": (0.1 * jax.random.normal(k2, (s.d_conv, d_xc), jnp.float32)
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((d_xc,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),               # A = -exp(0) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": init_dense(k3, d_in, d, dtype=dtype),
+    }
+
+
+def _split_proj(params, cfg, x):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    proj = x @ params["in_proj"]
+    z = proj[..., :d_in]
+    xc = proj[..., d_in: d_in + d_in + 2 * s.d_state]
+    dt = proj[..., -nh:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    return z, xc, dt
+
+
+def _causal_conv(params, cfg, xc, conv_state=None):
+    """Depthwise causal conv over (B, S, d_xc). Returns (out, new_state)."""
+    s = cfg.ssm
+    w = params["conv_w"].astype(jnp.float32)                  # (d_conv, d_xc)
+    if conv_state is None:
+        pad = jnp.zeros((xc.shape[0], s.d_conv - 1, xc.shape[-1]), xc.dtype)
+    else:
+        pad = conv_state.astype(xc.dtype)
+    full = jnp.concatenate([pad, xc], axis=1)                 # (B, S+dc-1, d_xc)
+    windows = jnp.stack(
+        [full[:, i: i + xc.shape[1]] for i in range(s.d_conv)], axis=0)
+    out = jnp.einsum("kbsd,kd->bsd", windows.astype(jnp.float32), w)
+    out = jax.nn.silu(out + params["conv_b"].astype(jnp.float32))
+    new_state = full[:, full.shape[1] - (s.d_conv - 1):]
+    return out.astype(xc.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (B,S,nh,hd) bf16; dt: (B,S,nh) f32; A: (nh,) f32 (negative);
+    B, C: (B,S,N) — shared across heads (ngroups=1).
+    Returns (y (B,S,nh,hd), h_final (B,nh,hd,N) f32).
+    """
+    b, s, nh, hd = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, nh, hd)
+    dtc = dt.reshape(b, nc, q, nh)
+    Bc = B.astype(jnp.float32).reshape(b, nc, q, n)
+    Cc = C.astype(jnp.float32).reshape(b, nc, q, n)
+
+    a = dtc * A[None, None, None, :]                          # (B,nc,Q,nh) <= 0
+    cum = jnp.cumsum(a, axis=2)                               # within-chunk
+
+    # --- intra-chunk (quadratic, causal-masked) ---
+    # L[h,i,j] = exp(cum_i - cum_j + a_j ... ) ; standard segsum: decay from j to i
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,Qi,Qj,nh)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                # (B,nc,Qi,Qj)
+    scores = cb[..., None] * L * dtc[:, :, None, :, :]        # (B,nc,Qi,Qj,nh)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xf)
+
+    # --- per-chunk states ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,Q,nh)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                        Bc, decay_to_end * dtc, xf)           # (B,nc,nh,hd,N)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (B,nc,nh)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+
+    def step(h, inp):
+        st, dec = inp
+        h_out = h                                             # state entering chunk
+        h_new = dec[:, :, None, None] * h + st
+        return h_new, h_out
+
+    h_final, h_enter = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_enter = h_enter.swapaxes(0, 1)                          # (B,nc,nh,hd,N)
+
+    # --- inter-chunk contribution ---
+    in_decay = jnp.exp(cum)                                   # decay from chunk start
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc, in_decay, h_enter)
+
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y.astype(x.dtype), h_final
+
+
+def apply_mamba2(params, cfg, x, *, conv_state=None, ssm_state=None,
+                 return_state=False):
+    """Full-sequence Mamba2 block. x: (B,S,D) -> (y, states)."""
+    s = cfg.ssm
+    nh = s.num_heads(cfg.d_model)
+    d_in = s.d_inner(cfg.d_model)
+    z, xc, dt = _split_proj(params, cfg, x)
+    xc, conv_state_new = _causal_conv(params, cfg, xc, conv_state)
+    x_in = xc[..., :d_in]
+    B = xc[..., d_in: d_in + s.d_state]
+    C = xc[..., d_in + s.d_state:]
+    A = -jnp.exp(params["A_log"])
+    xh = x_in.reshape(*x_in.shape[:2], nh, s.head_dim)
+    y, h = ssd_chunked(xh, dt, A, B, C, s.chunk_size, h0=ssm_state)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(*x.shape[:2], d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, (conv_state_new, h)
+    return out, None
+
+
+def apply_mamba2_decode(params, cfg, x, conv_state, ssm_state):
+    """Single-token recurrent step. x: (B,1,D).
+
+    conv_state: (B, d_conv-1, d_xc); ssm_state: (B,nh,hd,N) f32.
+    Returns (y (B,1,D), (conv_state, ssm_state)).
+    """
+    s = cfg.ssm
+    nh = s.num_heads(cfg.d_model)
+    d_in = s.d_inner(cfg.d_model)
+    z, xc, dt = _split_proj(params, cfg, x)                   # S=1
+    xc, conv_state = _causal_conv(params, cfg, xc, conv_state)
+    x_in = xc[..., :d_in]
+    B = xc[..., d_in: d_in + s.d_state]
+    C = xc[..., d_in + s.d_state:]
+    A = -jnp.exp(params["A_log"])
+
+    xh = x_in.reshape(x.shape[0], 1, nh, s.head_dim).astype(jnp.float32)
+    dt1 = dt[:, 0]                                            # (B,nh)
+    decay = jnp.exp(dt1 * A[None, :])                         # (B,nh)
+    contrib = (dt1[:, :, None, None] * xh[:, 0, :, :, None]
+               * B[:, 0, None, None, :].astype(jnp.float32))  # (B,nh,hd,N)
+    h = decay[:, :, None, None] * ssm_state + contrib
+    y = jnp.einsum("bhpn,bn->bhp", h, C[:, 0].astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xh[:, 0]
+    y = y.reshape(x.shape[0], 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], (conv_state, h)

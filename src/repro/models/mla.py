@@ -1,0 +1,105 @@
+"""DeepSeek Multi-head Latent Attention (MLA).
+
+The KV cache holds only the compressed latent c_kv (rank r) plus a shared
+RoPE key — this is the arch whose cache design is closest in spirit to the
+paper's density argument, and the IPS tiercache quantizes the latent pages.
+
+Decode uses the absorbed formulation: W_uk is folded into the query so
+scores are taken directly against the latent cache without materializing
+full keys.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attend_chunked
+from repro.models.layers import apply_rope, init_dense, rms_norm
+
+
+def init_mla(key, cfg, dtype=jnp.bfloat16):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "wq": init_dense(k1, d, (h, qk), dtype=dtype),
+        "w_dkv": init_dense(k2, d, m.kv_lora_rank + m.qk_rope_head_dim, dtype=dtype),
+        "w_uk": init_dense(k3, m.kv_lora_rank, (h, m.qk_nope_head_dim), dtype=dtype),
+        "w_uv": init_dense(k4, m.kv_lora_rank, (h, m.v_head_dim), dtype=dtype),
+        "wo": init_dense(k5, h * m.v_head_dim, d, dtype=dtype).reshape(
+            h, m.v_head_dim, d),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype=dtype),
+    }
+
+
+def latent_project(params, cfg, x, positions):
+    """x -> (c_kv (B,S,r), k_rope (B,S,rope_dim)); rope pre-applied to k_rope."""
+    m = cfg.mla
+    dkv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_kv, k_rope = dkv[..., : m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _queries(params, cfg, x, positions):
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def apply_mla(params, cfg, x, positions, *, chunk=512):
+    """Training/prefill: materialize per-head K,V from the latent (standard
+    form). Returns (y, (c_kv, k_rope)) — the latent pair is the cache."""
+    m = cfg.mla
+    h = cfg.num_heads
+    c_kv, k_rope = latent_project(params, cfg, x, positions)
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+
+    k_nope = jnp.einsum("bsr,rhn->bshn", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, params["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attend_chunked(q, k, v, q_positions=positions, kv_positions=positions,
+                         causal=True, chunk=chunk)
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+    return y, (c_kv, k_rope)
+
+
+def apply_mla_decode(params, cfg, x, positions, c_kv_all, k_rope_all, kv_valid):
+    """Absorbed decode: scores directly against the latent cache.
+
+    x: (B,1,D); c_kv_all: (B,S,r); k_rope_all: (B,S,rope); kv_valid: (S,)
+    rank-1 (batch-uniform). The current token's own latent is appended
+    internally so it attends to itself.
+    Returns (y (B,1,D), (c_kv_new (B,1,r), k_rope_new (B,1,rope))).
+    """
+    m = cfg.mla
+    scale = 1.0 / ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5)
+    c_new, kr_new = latent_project(params, cfg, x, positions)
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+
+    c_kv_all = jnp.concatenate([c_kv_all, c_new.astype(c_kv_all.dtype)], axis=1)
+    k_rope_all = jnp.concatenate(
+        [k_rope_all, kr_new.astype(k_rope_all.dtype)], axis=1)
+    kv_valid = jnp.concatenate([kv_valid, jnp.ones((1,), bool)])
+
+    # absorb W_uk into q:  (B,1,H,n) x (r,H,n) -> (B,1,H,r)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, params["w_uk"])
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                       c_kv_all.astype(jnp.float32))
+    s_rope = jnp.einsum("bshp,btp->bhst", q_rope.astype(jnp.float32),
+                        k_rope_all.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale                        # (B,H,1,S)
+    scores = jnp.where(kv_valid[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", w, c_kv_all.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhv->bshv", ctx_lat.astype(x.dtype), params["w_uv"])
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+    return y, (c_new, kr_new)

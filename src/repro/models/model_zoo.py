@@ -1,0 +1,295 @@
+"""Unified model API over all 10 assigned architectures.
+
+ModelBundle exposes: init / loss / prefill / decode / decode-cache builders,
+plus the tiered-cache kind so the serve engine and the dry-run driver can be
+arch-agnostic. Modality frontends (whisper audio, llava vision) are stubs:
+batches carry precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.tiercache.layout import (TierSpec, cross_static_zeros,
+                                         fill_quant_channel, fill_raw_channel,
+                                         gqa_layer_zeros, mla_layer_zeros,
+                                         split_for_prefill)
+from repro.core.tiercache.quant import quantize_int4
+from repro.models import encdec as encdec_lib
+from repro.models import hybrid as hybrid_lib
+from repro.models import transformer as tx
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    cache_kind: str                     # gqa | mla | encdec_self | ssm | hybrid
+    init: Callable                      # key -> params
+    loss: Callable                      # (params, batch) -> (loss, metrics)
+    prefill: Callable                   # (params, batch, spec) -> (cache, logits)
+    decode: Callable                    # (params, token, cache, spec) -> (logits, kv_new)
+    make_decode_cache: Callable         # (batch, seq_len, spec) -> cache zeros
+
+
+def default_tier_spec(seq_len: int, hot_window: int = 1024,
+                      page_tokens: int = 256, group: int = 64) -> TierSpec:
+    return TierSpec(s_max=seq_len, hot_window=hot_window,
+                    page_tokens=page_tokens, group=group)
+
+
+def _scalars(total_len, dense_len):
+    return {"total_len": jnp.asarray(total_len, jnp.int32),
+            "dense_len": jnp.asarray(dense_len, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# transformer family (dense / moe / vlm)
+# ---------------------------------------------------------------------------
+
+
+def _tx_bundle(cfg: ArchConfig, moe_dispatch: str, attn_chunk: int,
+               remat=None) -> ModelBundle:
+    is_mla = cfg.mla is not None
+    kind = "mla" if is_mla else "gqa"
+    prefix_key = "patch_embeds" if cfg.vlm is not None else None
+    remat = cfg.remat if remat is None else remat
+
+    def loss(params, batch):
+        return tx.lm_loss(params, cfg, batch["tokens"],
+                          prefix_embeds=batch.get(prefix_key)
+                          if prefix_key else None,
+                          moe_dispatch=moe_dispatch, attn_chunk=attn_chunk,
+                          remat=remat)
+
+    def make_decode_cache(b, seq_len, spec: TierSpec):
+        L = cfg.num_layers
+        if is_mla:
+            layers = mla_layer_zeros(L, b, spec, cfg.mla.kv_lora_rank,
+                                     cfg.mla.qk_rope_head_dim)
+        else:
+            layers = gqa_layer_zeros(L, b, spec, cfg.num_kv_heads,
+                                     cfg.head_dim)
+        w0, _ = split_for_prefill(seq_len, spec)
+        return {"layers": layers, **_scalars(seq_len, w0)}
+
+    def prefill(params, batch, spec: TierSpec):
+        hidden, _, kvs = tx.lm_hidden(
+            params, cfg, batch["tokens"],
+            prefix_embeds=batch.get(prefix_key) if prefix_key else None,
+            moe_dispatch=moe_dispatch, attn_chunk=attn_chunk,
+            remat=False, collect_kv=True)
+        b = hidden.shape[0]
+        s = hidden.shape[1]
+        cache = make_decode_cache(b, 0, spec)
+        layers = cache["layers"]
+        if is_mla:
+            c_kv, k_rope = kvs
+            layers, w0 = fill_quant_channel(layers, "c4", "c4_sc", "ch",
+                                            c_kv, spec)
+            layers, _ = fill_raw_channel(layers, "krope", k_rope, spec)
+        else:
+            k, v = kvs
+            layers, w0 = fill_quant_channel(layers, "k4", "k4_sc", "kh", k, spec)
+            layers, _ = fill_quant_channel(layers, "v4", "v4_sc", "vh", v, spec)
+        cache = {"layers": layers, **_scalars(s, w0)}
+        logits = (hidden[:, -1] @ tx.unembed_matrix(params)).astype(jnp.float32)
+        return cache, logits
+
+    def decode(params, token, cache, spec=None):
+        g = spec.group if spec is not None else 64
+        return tx.lm_decode_step(params, cfg, token, cache, quant_group=g)
+
+    return ModelBundle(cfg=cfg, cache_kind=kind,
+                       init=lambda key: tx.init_lm(key, cfg),
+                       loss=loss, prefill=prefill, decode=decode,
+                       make_decode_cache=make_decode_cache)
+
+
+# ---------------------------------------------------------------------------
+# SSM family (mamba2)
+# ---------------------------------------------------------------------------
+
+
+def _ssm_bundle(cfg: ArchConfig) -> ModelBundle:
+    def loss(params, batch):
+        return hybrid_lib.ssm_lm_loss(params, cfg, batch["tokens"],
+                                      remat=cfg.remat)
+
+    def make_decode_cache(b, seq_len, spec=None):
+        conv, ssm = hybrid_lib.ssm_state_shapes(cfg, b)
+        return {"conv": conv, "ssm": ssm,
+                **_scalars(seq_len, seq_len)}
+
+    def prefill(params, batch, spec=None):
+        hidden, states = hybrid_lib.ssm_lm_hidden(
+            params, cfg, batch["tokens"], remat=False, collect_state=True)
+        conv, ssm = states
+        logits = (hidden[:, -1] @ tx.unembed_matrix(params)).astype(jnp.float32)
+        cache = {"conv": conv, "ssm": ssm,
+                 **_scalars(batch["tokens"].shape[1], batch["tokens"].shape[1])}
+        return cache, logits
+
+    def decode(params, token, cache, spec=None):
+        logits, (conv, ssm) = hybrid_lib.ssm_lm_decode_step(
+            params, cfg, token, (cache["conv"], cache["ssm"]))
+        return logits, (conv, ssm)
+
+    return ModelBundle(cfg=cfg, cache_kind="ssm",
+                       init=lambda key: hybrid_lib.init_ssm_lm(key, cfg),
+                       loss=loss, prefill=prefill, decode=decode,
+                       make_decode_cache=make_decode_cache)
+
+
+# ---------------------------------------------------------------------------
+# hybrid family (zamba2)
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_bundle(cfg: ArchConfig, attn_chunk: int) -> ModelBundle:
+    def loss(params, batch):
+        return hybrid_lib.hybrid_lm_loss(params, cfg, batch["tokens"],
+                                         remat=cfg.remat,
+                                         attn_chunk=attn_chunk)
+
+    def make_decode_cache(b, seq_len, spec: TierSpec):
+        n_macro, tail = hybrid_lib.hybrid_structure(cfg)
+        ae = cfg.hybrid.attn_every
+        s = cfg.ssm
+        d_xc = s.d_inner(cfg.d_model) + 2 * s.d_state
+        nh = s.num_heads(cfg.d_model)
+        attn = gqa_layer_zeros(n_macro, b, spec, cfg.num_kv_heads,
+                               cfg.head_dim)
+        w0, _ = split_for_prefill(seq_len, spec)
+        cache = {
+            "attn": attn,
+            "macro_conv": jnp.zeros((n_macro, ae, b, s.d_conv - 1, d_xc),
+                                    jnp.bfloat16),
+            "macro_ssm": jnp.zeros((n_macro, ae, b, nh, s.head_dim,
+                                    s.d_state), jnp.float32),
+            **_scalars(seq_len, w0),
+        }
+        if tail:
+            cache["tail_conv"] = jnp.zeros((tail, b, s.d_conv - 1, d_xc),
+                                           jnp.bfloat16)
+            cache["tail_ssm"] = jnp.zeros((tail, b, nh, s.head_dim,
+                                           s.d_state), jnp.float32)
+        return cache
+
+    def prefill(params, batch, spec: TierSpec):
+        tokens = batch["tokens"]
+        hidden, (kvs, macro_states, tail_states) = hybrid_lib.hybrid_lm_hidden(
+            params, cfg, tokens, remat=False, collect_kv=True,
+            collect_state=True)
+        b, s = tokens.shape
+        cache = make_decode_cache(b, 0, spec)
+        k, v = kvs
+        attn, w0 = fill_quant_channel(cache["attn"], "k4", "k4_sc", "kh",
+                                      k, spec)
+        attn, _ = fill_quant_channel(attn, "v4", "v4_sc", "vh", v, spec)
+        cache["attn"] = attn
+        conv, ssm = macro_states
+        cache["macro_conv"], cache["macro_ssm"] = conv, ssm
+        if tail_states is not None:
+            cache["tail_conv"], cache["tail_ssm"] = tail_states
+        cache.update(_scalars(s, w0))
+        logits = (hidden[:, -1] @ tx.unembed_matrix(params)).astype(jnp.float32)
+        return cache, logits
+
+    def decode(params, token, cache, spec=None):
+        g = spec.group if spec is not None else 64
+        logits, pieces = hybrid_lib.hybrid_decode_step(params, cfg, token,
+                                                       cache, quant_group=g)
+        return logits, pieces
+
+    return ModelBundle(cfg=cfg, cache_kind="hybrid",
+                       init=lambda key: hybrid_lib.init_hybrid_lm(key, cfg),
+                       loss=loss, prefill=prefill, decode=decode,
+                       make_decode_cache=make_decode_cache)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder family (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _encdec_bundle(cfg: ArchConfig, attn_chunk: int) -> ModelBundle:
+    def loss(params, batch):
+        return encdec_lib.encdec_loss(params, cfg, batch["frames"],
+                                      batch["tokens"], remat=cfg.remat,
+                                      attn_chunk=attn_chunk)
+
+    def make_decode_cache(b, seq_len, spec: TierSpec):
+        L = cfg.num_layers
+        f = cfg.encdec.encoder_seq_len
+        layers = gqa_layer_zeros(L, b, spec, cfg.num_kv_heads, cfg.head_dim)
+        layers.update(cross_static_zeros(L, b, f, cfg.num_kv_heads,
+                                         cfg.head_dim, spec.group))
+        w0, _ = split_for_prefill(seq_len, spec)
+        return {"layers": layers, **_scalars(seq_len, w0)}
+
+    def prefill(params, batch, spec: TierSpec):
+        enc_out = encdec_lib.encode(params, cfg, batch["frames"], remat=False)
+        hidden, kvs = encdec_lib.decoder_hidden(
+            params, cfg, batch["tokens"], enc_out, remat=False,
+            collect_kv=True)
+        (k, v), (ck, cv) = kvs[0], kvs[1]
+        b, s = batch["tokens"].shape
+        cache = make_decode_cache(b, 0, spec)
+        layers = cache["layers"]
+        layers, w0 = fill_quant_channel(layers, "k4", "k4_sc", "kh", k, spec)
+        layers, _ = fill_quant_channel(layers, "v4", "v4_sc", "vh", v, spec)
+        ck4, ck4_sc = quantize_int4(ck, spec.group)
+        cv4, cv4_sc = quantize_int4(cv, spec.group)
+        layers.update({"ck4": ck4, "ck4_sc": ck4_sc.astype(jnp.bfloat16),
+                       "cv4": cv4, "cv4_sc": cv4_sc.astype(jnp.bfloat16)})
+        cache = {"layers": layers, **_scalars(s, w0)}
+        logits = (hidden[:, -1] @ tx.unembed_matrix(params)).astype(jnp.float32)
+        return cache, logits
+
+    def decode(params, token, cache, spec=None):
+        g = spec.group if spec is not None else 64
+        return encdec_lib.encdec_decode_step(params, cfg, token, cache,
+                                             quant_group=g)
+
+    return ModelBundle(cfg=cfg, cache_kind="encdec_self",
+                       init=lambda key: encdec_lib.init_encdec(key, cfg),
+                       loss=loss, prefill=prefill, decode=decode,
+                       make_decode_cache=make_decode_cache)
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_model(cfg: ArchConfig, *, moe_dispatch: str = "einsum",
+                attn_chunk: int = 512, remat=None) -> ModelBundle:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _tx_bundle(cfg, moe_dispatch, attn_chunk, remat)
+    if cfg.family == "ssm":
+        return _ssm_bundle(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_bundle(cfg, attn_chunk)
+    if cfg.family == "audio":
+        return _encdec_bundle(cfg, attn_chunk)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def make_train_batch(cfg: ArchConfig, batch: int, seq_len: int, key=None):
+    """Synthetic batch with the right modality inputs (stub frontends)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    out: Dict[str, Any] = {
+        "tokens": jax.random.randint(k1, (batch, seq_len), 0,
+                                     cfg.vocab_size, jnp.int32)}
+    if cfg.vlm is not None:
+        out["patch_embeds"] = jax.random.normal(
+            k2, (batch, cfg.vlm.num_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.encdec is not None:
+        out["frames"] = jax.random.normal(
+            k2, (batch, cfg.encdec.encoder_seq_len, cfg.d_model),
+            jnp.bfloat16)
+    return out

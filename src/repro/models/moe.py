@@ -1,0 +1,178 @@
+"""Mixture-of-experts FFN with top-k routing.
+
+Two dispatch implementations with identical capacity/drop semantics:
+
+* ``einsum`` — GLaM/Switch-style one-hot dispatch/combine einsums. Simple,
+  fully static, but the dispatch einsum costs O(tokens * E * C * D) FLOPs.
+  This is the baseline recorded in EXPERIMENTS.md §Perf.
+* ``gather`` — slot-indexed gather dispatch / gather combine: O(tokens)
+  index plumbing and zero dispatch FLOPs. The beyond-paper optimization.
+
+Experts are sharded on the "model" mesh axis (EP); tokens stay on "data".
+Supports deepseek-style shared experts and arctic-style parallel dense
+residual FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mlp, init_dense, init_mlp
+
+
+def init_moe_layer(key, cfg, dtype=jnp.bfloat16):
+    m = cfg.moe
+    d = cfg.d_model
+    keys = jax.random.split(key, 6)
+    n_in = 2 if cfg.act in ("silu", "geglu") else 1
+    params = {
+        "router": init_dense(keys[0], d, m.num_experts, dtype=jnp.float32),
+        # stacked expert weights: (E, D, F) / (E, F, D)
+        "w_gate": _expert_weights(keys[1], m.num_experts, d, m.d_ff_expert, dtype)
+        if n_in == 2 else None,
+        "w_up": _expert_weights(keys[2], m.num_experts, d, m.d_ff_expert, dtype),
+        "w_down": _expert_weights(keys[3], m.num_experts, m.d_ff_expert, d, dtype),
+    }
+    params = {k: v for k, v in params.items() if v is not None}
+    if m.num_shared_experts:
+        params["shared"] = init_mlp(
+            keys[4], d, m.num_shared_experts * m.d_ff_shared, cfg.act, dtype)
+    if m.dense_residual_d_ff:
+        params["dense_residual"] = init_mlp(
+            keys[5], d, m.dense_residual_d_ff, cfg.act, dtype)
+    return params
+
+
+def _expert_weights(key, e, d_in, d_out, dtype):
+    w = 0.02 * jax.random.normal(key, (e, d_in, d_out), jnp.float32)
+    return w.astype(dtype)
+
+
+def _routing(router_w, x, m):
+    """Common routing: returns (weights (B,S,k), experts (B,S,k), aux_loss)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, m.top_k)          # (B,S,k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    e = m.num_experts
+    sel = jax.nn.one_hot(experts, e, dtype=jnp.float32)       # (B,S,k,E)
+    frac = jnp.mean(jnp.sum(sel, axis=2), axis=(0, 1))        # tokens per expert
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac * mean_p)
+    return weights, experts, aux
+
+
+def _capacity(s, m):
+    return max(int(s * m.top_k * m.capacity_factor / m.num_experts), m.top_k)
+
+
+def _expert_ffn(params, x_disp, act):
+    """x_disp: (..., E, C, D) -> (..., E, C, D)."""
+    if "w_gate" in params:
+        h = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", x_disp, params["w_gate"])) \
+            if act == "silu" else \
+            jax.nn.gelu(jnp.einsum("...ecd,edf->...ecf", x_disp, params["w_gate"]))
+        h = h * jnp.einsum("...ecd,edf->...ecf", x_disp, params["w_up"])
+    else:
+        h = jnp.einsum("...ecd,edf->...ecf", x_disp, params["w_up"])
+        h = jnp.square(jax.nn.relu(h)) if act == "relu2" else jax.nn.gelu(h)
+    return jnp.einsum("...ecf,efd->...ecd", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# einsum dispatch (GLaM baseline)
+# ---------------------------------------------------------------------------
+
+
+def _moe_einsum(params, cfg, x):
+    m = cfg.moe
+    b, s, d = x.shape
+    c = _capacity(s, m)
+    weights, experts, aux = _routing(params["router"], x, m)
+
+    sel = jax.nn.one_hot(experts, m.num_experts, dtype=jnp.float32)  # (B,S,k,E)
+    # position of each (token, choice) within its expert queue, counted over S*k
+    flat_sel = sel.reshape(b, s * m.top_k, m.num_experts)
+    pos = jnp.cumsum(flat_sel, axis=1) - flat_sel             # (B,S*k,E)
+    keep = (pos < c) * flat_sel
+    disp = keep[..., None] * jax.nn.one_hot(pos, c, dtype=jnp.float32)  # (B,S*k,E,C)
+    disp = disp.reshape(b, s, m.top_k, m.num_experts, c)
+    combine = disp * weights[..., None, None]                 # fold gates
+    disp_tok = jnp.sum(disp, axis=2)                          # (B,S,E,C)
+    combine_tok = jnp.sum(combine, axis=2)
+
+    x_disp = jnp.einsum("bsec,bsd->becd", disp_tok.astype(x.dtype), x)
+    y_disp = _expert_ffn(params, x_disp, cfg.act)
+    y = jnp.einsum("becd,bsec->bsd", y_disp, combine_tok.astype(x.dtype))
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# gather dispatch (optimized)
+# ---------------------------------------------------------------------------
+
+
+def _moe_gather(params, cfg, x):
+    m = cfg.moe
+    b, s, d = x.shape
+    c = _capacity(s, m)
+    e = m.num_experts
+    weights, experts, aux = _routing(params["router"], x, m)
+
+    # flatten (token, choice) pairs per batch row
+    flat_e = experts.reshape(b, s * m.top_k)                  # expert of pair
+    flat_w = weights.reshape(b, s * m.top_k)
+    # position within expert queue via sorted-free cumsum per expert
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.sum(pos * onehot, axis=-1)                      # (B, S*k)
+    keep = pos < c
+    slot = jnp.where(keep, flat_e * c + pos, e * c)           # drop -> overflow slot
+
+    # scatter source token index into slots (one extra overflow slot)
+    tok_idx = jnp.broadcast_to(
+        (jnp.arange(s * m.top_k) // m.top_k)[None], (b, s * m.top_k))
+    src = jnp.full((b, e * c + 1), s, jnp.int32)              # s = sentinel token
+    src = jax.vmap(lambda a, sl, t: a.at[sl].set(t))(src, slot, tok_idx)
+    src = src[:, : e * c]                                     # (B, E*C)
+
+    # gather tokens into slots; sentinel row of zeros
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    x_disp = jnp.take_along_axis(
+        x_pad, src[..., None], axis=1).reshape(b, e, c, d)
+    y_disp = _expert_ffn(params, x_disp, cfg.act).reshape(b, e * c, d)
+    y_disp = jnp.concatenate([y_disp, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+
+    # combine: each (token, choice) reads back its slot
+    slot_safe = jnp.where(keep, slot, e * c)
+    y_pairs = jnp.take_along_axis(y_disp, slot_safe[..., None], axis=1)
+    y_pairs = y_pairs * (flat_w * keep)[..., None].astype(x.dtype)
+    y = jnp.sum(y_pairs.reshape(b, s, m.top_k, d), axis=2)
+    return y, aux
+
+
+def apply_moe(params, cfg, x, dispatch: str = "einsum"):
+    """MoE FFN. Returns (y, aux_loss). dispatch in {einsum, gather}.
+
+    Decode (S==1) flattens the batch into ONE dispatch group: per-row
+    capacity would allocate E*top_k slots per single token (a 100x+ compute
+    blow-up observed in the arctic decode dry-run)."""
+    b, s, d = x.shape
+    if s == 1 and b > 1:
+        y, aux = apply_moe(params, cfg, x.reshape(1, b, d),
+                           dispatch=dispatch)
+        return y[0][:, None, :], aux
+    if dispatch == "einsum":
+        y, aux = _moe_einsum(params, cfg, x)
+    elif dispatch == "gather":
+        y, aux = _moe_gather(params, cfg, x)
+    else:
+        raise ValueError(f"unknown dispatch {dispatch!r}")
+    m = cfg.moe
+    if m.num_shared_experts:
+        y = y + apply_mlp(params["shared"], x, cfg.act)
+    if m.dense_residual_d_ff:
+        y = y + apply_mlp(params["dense_residual"], x, cfg.act)
+    return y, aux

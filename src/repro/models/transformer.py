@@ -1,0 +1,319 @@
+"""Decoder-only LM assembly: dense and MoE families.
+
+Layers are scanned (`jax.lax.scan` over stacked per-layer params) with
+optional remat — this keeps the HLO compact (critical for the 512-device
+dry-run on one CPU core) and lets XLA overlap per-layer collectives with
+the next layer's compute.
+
+Decode consumes the tiered KV cache (dense int4 tier + hot bf16 tail) —
+see DESIGN.md §3 and `repro.core.tiercache`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiercache.quant import dequantize_int4
+from repro.distributed.constraints import constrain_bsd
+from repro.models import attention as attn_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models.layers import (chunked_softmax_xent, embed, init_embedding,
+                                 init_mlp, apply_mlp, rms_norm)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg, *, dense_ffn_override: Optional[int] = None,
+               dtype=jnp.bfloat16):
+    """One decoder layer. dense_ffn_override: build a dense FFN of that size
+    even for MoE configs (deepseek first_k_dense layers)."""
+    k_attn, k_ffn = jax.random.split(key)
+    d = cfg.d_model
+    if cfg.mla is not None:
+        attn = mla_lib.init_mla(k_attn, cfg, dtype=dtype)
+    else:
+        attn = attn_lib.init_attention(k_attn, cfg, dtype=dtype)
+    params = {"attn": attn, "ln1": jnp.zeros((d,), dtype),
+              "ln2": jnp.zeros((d,), dtype)}
+    if dense_ffn_override is not None:
+        params["mlp"] = init_mlp(k_ffn, d, dense_ffn_override, cfg.act, dtype)
+    elif cfg.moe is not None:
+        params["moe"] = moe_lib.init_moe_layer(k_ffn, cfg, dtype=dtype)
+    else:
+        params["mlp"] = init_mlp(k_ffn, d, cfg.d_ff, cfg.act, dtype)
+    return params
+
+
+def apply_layer(params, cfg, x, positions, *, moe_dispatch="einsum",
+                attn_chunk=512):
+    """Full-sequence layer (train / prefill). Returns (x, aux, (k, v)).
+
+    Block outputs are checkpoint-named so the "blocks" remat policy can
+    save exactly the two psum'd tensors per layer (§Perf iteration 7)."""
+    from jax.ad_checkpoint import checkpoint_name
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, kv = mla_lib.apply_mla(params["attn"], cfg, h, positions,
+                                  chunk=attn_chunk)
+    else:
+        a, kv = attn_lib.apply_attention(params["attn"], cfg, h, positions,
+                                         chunk=attn_chunk)
+    x = x + checkpoint_name(a, "attn_out")
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if "moe" in params:
+        f, aux = moe_lib.apply_moe(params["moe"], cfg, h, dispatch=moe_dispatch)
+    else:
+        f = apply_mlp(params["mlp"], h, cfg.act)
+    return x + checkpoint_name(f, "mlp_out"), aux, kv
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def _stacked_init(key, n, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_lm(key, cfg, dtype=jnp.bfloat16):
+    m = cfg.moe
+    k_emb, k_first, k_layers, k_un = jax.random.split(key, 4)
+    first_k = m.first_k_dense if m else 0
+    params = {"embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+              "final_norm": jnp.zeros((cfg.d_model,), dtype)}
+    if first_k:
+        params["first_dense"] = _stacked_init(
+            k_first, first_k,
+            lambda k: init_layer(k, cfg, dense_ffn_override=m.d_ff_first_dense,
+                                 dtype=dtype))
+    params["layers"] = _stacked_init(
+        k_layers, cfg.num_layers - first_k,
+        lambda k: init_layer(k, cfg, dtype=dtype))
+    if not cfg.tie_embeddings:
+        params["unembed"] = (0.02 * jax.random.normal(
+            k_un, (cfg.d_model, cfg.vocab_size), jnp.float32)).astype(dtype)
+    return params
+
+
+def unembed_matrix(params):
+    return params.get("unembed", params["embed"].T)
+
+
+def embed_tokens(params, cfg, tokens):
+    x = embed(params["embed"], tokens)
+    if getattr(cfg, "embed_scale_sqrt_d", False) or (
+            cfg.tie_embeddings and cfg.family in ("dense",)):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _remat_wrap(body, remat):
+    """remat: False | True (full) | "blocks" (save the per-layer psum'd
+    block outputs so the backward replay skips their dots+collectives)."""
+    if not remat:
+        return body
+    if remat == "blocks":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "mlp_out")
+        return jax.checkpoint(body, prevent_cse=False, policy=policy)
+    return jax.checkpoint(body, prevent_cse=False)
+
+
+def _scan_layers(params_stacked, cfg, x, positions, *, moe_dispatch,
+                 attn_chunk, remat, collect_kv=False):
+    def body(carry, layer_params):
+        h, aux = carry
+        h = constrain_bsd(h)
+        h, a, kv = apply_layer(layer_params, cfg, h, positions,
+                               moe_dispatch=moe_dispatch, attn_chunk=attn_chunk)
+        return (constrain_bsd(h), aux + a), (kv if collect_kv else None)
+
+    body = _remat_wrap(body, remat)
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.float32(0.0)), params_stacked)
+    return x, aux, kvs
+
+
+def lm_hidden(params, cfg, tokens, *, prefix_embeds=None, moe_dispatch="einsum",
+              attn_chunk=512, remat=True, collect_kv=False):
+    """tokens (B,S_txt) [+ prefix embeddings (B,P,D)] -> final hidden states.
+
+    Returns (hidden (B,S,D), aux_loss, kvs or None).
+    """
+    x = embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = constrain_bsd(x)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)        # batch-uniform (S,)
+
+    aux_total = jnp.float32(0.0)
+    kv_first = None
+    if "first_dense" in params:
+        def first_body(carry, lp):
+            h, aux = carry
+            h, a, kv = apply_layer(lp, cfg, h, positions,
+                                   moe_dispatch=moe_dispatch,
+                                   attn_chunk=attn_chunk)
+            return (h, aux + a), (kv if collect_kv else None)
+        fb = jax.checkpoint(first_body, prevent_cse=False) if remat else first_body
+        (x, aux_total), kv_first = jax.lax.scan(
+            fb, (x, aux_total), params["first_dense"])
+
+    x, aux, kvs = _scan_layers(params["layers"], cfg, x, positions,
+                               moe_dispatch=moe_dispatch, attn_chunk=attn_chunk,
+                               remat=remat, collect_kv=collect_kv)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if collect_kv and kv_first is not None:
+        kvs = jax.tree.map(lambda a, b_: jnp.concatenate([a, b_], 0),
+                           kv_first, kvs)
+    return x, aux_total + aux, kvs
+
+
+def lm_loss(params, cfg, tokens, *, prefix_embeds=None, moe_dispatch="einsum",
+            attn_chunk=512, remat=True, aux_coef=None):
+    """Next-token loss. Prefix positions (VLM patches) are excluded."""
+    hidden, aux, _ = lm_hidden(params, cfg, tokens, prefix_embeds=prefix_embeds,
+                               moe_dispatch=moe_dispatch, attn_chunk=attn_chunk,
+                               remat=remat)
+    p = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    # predict token t+1 from hidden at prefix+t
+    h = hidden[:, p: p + tokens.shape[1] - 1]
+    labels = tokens[:, 1:]
+    loss = chunked_softmax_xent(h, unembed_matrix(params), labels)
+    if aux_coef is None:
+        aux_coef = cfg.moe.router_aux_loss_coef if cfg.moe else 0.0
+    total = loss + aux_coef * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode with tiered KV cache
+# ---------------------------------------------------------------------------
+
+
+def _materialize_gqa(cache_l, cfg, group):
+    """Per-layer tier views -> (k_all, v_all) plus hot tail metadata."""
+    k_dense = dequantize_int4(cache_l["k4"], cache_l["k4_sc"], group)
+    v_dense = dequantize_int4(cache_l["v4"], cache_l["v4_sc"], group)
+    return k_dense, v_dense, cache_l["kh"], cache_l["vh"]
+
+
+def gqa_decode_tiered(attn_params, cfg, x, positions, lc, dense_len,
+                      total_len, group=64):
+    """Decode attention against one layer's tiered cache slot.
+
+    x: (B,1,D) (already layer-normed). lc: {k4,k4_sc,v4,v4_sc,kh,vh}.
+    Returns (attn_out (B,1,D), (k_new, v_new)). Shared by the dense/MoE LM,
+    zamba2's shared attention block, and the whisper decoder.
+    """
+    k_d, v_d, kh, vh = _materialize_gqa(lc, cfg, group)
+    sd, w = k_d.shape[1], kh.shape[1]
+    k_all = jnp.concatenate([k_d, kh], axis=1)
+    v_all = jnp.concatenate([v_d, vh], axis=1)
+    valid = jnp.concatenate([jnp.arange(sd) < dense_len,
+                             dense_len + jnp.arange(w) < total_len], 0)
+    # token positions: dense slot i holds token i; hot slot j holds token
+    # dense_len + j (NOT its buffer index)
+    kv_pos = jnp.concatenate([jnp.arange(sd, dtype=jnp.int32),
+                              dense_len + jnp.arange(w, dtype=jnp.int32)])
+    return _decode_attn_with_self(attn_params, cfg, x, positions,
+                                  k_all, v_all, valid, kv_pos)
+
+
+def lm_decode_step(params, cfg, token, cache, *, quant_group=64):
+    """One decode token against the tiered cache.
+
+    token: (B, 1) int32. cache: see repro.core.tiercache.layout — arrays with
+    leading layer dim, plus scalars `dense_len`, `total_len`.
+    Returns (logits (B, V), new_kv stacked over layers) — appending/repacking
+    is the tiercache manager's job.
+    """
+    b = token.shape[0]
+    total_len = cache["total_len"]
+    dense_len = cache["dense_len"]
+    x = embed_tokens(params, cfg, token)
+    positions = total_len[None].astype(jnp.int32)     # (1,) batch-uniform
+
+    layer_caches = cache["layers"]                            # leading dim L'
+    is_mla = cfg.mla is not None
+
+    def body(carry, xs):
+        h = carry
+        lp, lc = xs
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        if is_mla:
+            c_dense = dequantize_int4(lc["c4"], lc["c4_sc"], quant_group)
+            c_all = jnp.concatenate([c_dense, lc["ch"]], axis=1)
+            sd, w = c_dense.shape[1], lc["ch"].shape[1]
+            valid = jnp.concatenate([
+                jnp.arange(sd) < dense_len,
+                dense_len + jnp.arange(w) < total_len], 0)
+            a, kv_new = mla_lib.apply_mla_decode(
+                lp["attn"], cfg, hn, positions, c_all, lc["krope"], valid)
+        else:
+            a, kv_new = gqa_decode_tiered(lp["attn"], cfg, hn, positions, lc,
+                                          dense_len, total_len, quant_group)
+        h = h + a
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            f, _ = moe_lib.apply_moe(lp["moe"], cfg, hn, dispatch="gather")
+        else:
+            f = apply_mlp(lp["mlp"], hn, cfg.act)
+        return h + f, kv_new
+
+    # cache["layers"] has leading dim == cfg.num_layers; the first_k_dense
+    # layers (same attention, dense FFN) use the leading slots.
+    new_kv_first = None
+    if "first_dense" in params:
+        fk = params["first_dense"]["ln1"].shape[0]
+        first_caches = jax.tree.map(lambda a: a[:fk], layer_caches)
+        rest_caches = jax.tree.map(lambda a: a[fk:], layer_caches)
+        x, new_kv_first = jax.lax.scan(
+            body, x, (params["first_dense"], first_caches))
+    else:
+        rest_caches = layer_caches
+    x, new_kvs = jax.lax.scan(body, x, (params["layers"], rest_caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ unembed_matrix(params)).astype(jnp.float32)
+    if new_kv_first is not None:
+        new_kvs = jax.tree.map(lambda a_, b_: jnp.concatenate([a_, b_], 0),
+                               new_kv_first, new_kvs)
+    return logits, new_kvs
+
+
+def _decode_attn_with_self(attn_params, cfg, x, positions, k_all, v_all,
+                           valid, kv_pos):
+    """GQA decode including the current token's own K/V as an extra slot.
+
+    positions: (1,) batch-uniform current position; valid/kv_pos: (S_kv,)
+    rank-1 token validity and token POSITIONS of the cache view."""
+    q = jnp.einsum("bsd,dhk->bshk", x, attn_params["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, attn_params["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, attn_params["wv"])
+    from repro.models.layers import apply_rope
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    k_full = jnp.concatenate([k_all, k_new], axis=1)
+    v_full = jnp.concatenate([v_all, v_new], axis=1)
+    kv_pos = jnp.concatenate([kv_pos.astype(jnp.int32), positions])
+    kv_valid = jnp.concatenate([valid, jnp.ones((1,), bool)])
+    out = attn_lib.attend_chunked(q, k_full, v_full, q_positions=positions,
+                                  kv_positions=kv_pos, kv_valid=kv_valid,
+                                  causal=True, chunk=4096)
+    return attn_lib.out_project(attn_params, out), (k_new, v_new)

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (AdafactorConfig, AdamWConfig, adafactor_init,
+                               adafactor_update, adamw_init, adamw_update,
+                               make_optimizer)
+from repro.optim.schedules import cosine_with_warmup, linear_warmup_constant
+
+__all__ = ["AdafactorConfig", "AdamWConfig", "adafactor_init",
+           "adafactor_update", "adamw_init", "adamw_update",
+           "make_optimizer", "cosine_with_warmup", "linear_warmup_constant"]

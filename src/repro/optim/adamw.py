@@ -1,0 +1,142 @@
+"""Optimizers: AdamW and Adafactor (factored, for 480B-class models).
+
+Functional optax-style API without the optax dependency:
+  init(params) -> state;  update(grads, state, params, lr) -> (updates, state)
+Updates are applied as params + updates (updates include the -lr factor).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads, state: AdamWState, params, lr,
+                 cfg: AdamWConfig = AdamWConfig()):
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, n, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        n = b2 * n + (1 - b2) * jnp.square(g)
+        mhat = m / (1 - b1 ** step.astype(jnp.float32))
+        nhat = n / (1 - b2 ** step.astype(jnp.float32))
+        u = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (-lr * u).astype(p.dtype), m, n
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    updates = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor — factored second moments: O(r+c) state for matrices instead of
+# O(r*c); the only optimizer whose state fits a 480B MoE on one pod
+# (DESIGN.md §5).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AdafactorConfig:
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any      # row stats (or full stats for <2D leaves)
+    vc: Any      # col stats (zeros-sized () for <2D leaves)
+
+
+def _factored(p):
+    return p.ndim >= 2
+
+
+def adafactor_init(params, cfg: AdafactorConfig = AdafactorConfig()):
+    def vr_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((), jnp.float32)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr_init, params),
+                          vc=jax.tree.map(vc_init, params))
+
+
+def adafactor_update(grads, state: AdafactorState, params, lr,
+                     cfg: AdafactorConfig = AdafactorConfig()):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-cfg.decay)
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + cfg.eps
+        if _factored(p):
+            vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                 cfg.eps)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                     + cfg.eps)
+        else:
+            vr = beta * vr + (1 - beta) * g2
+            u = g / (jnp.sqrt(vr) + cfg.eps)
+        norm = jnp.sqrt(jnp.mean(jnp.square(u)))
+        u = u / jnp.maximum(1.0, norm / cfg.clip_threshold)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (-lr * u).astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    pick = lambda i: jax.tree.map(lambda tup: tup[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdafactorState(step=step, vr=pick(1), vc=pick(2))
+
+
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,266 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles,
+swept over shapes/dtypes (deliverable c)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tiercache.quant import dequantize_int4, quantize_int4
+from repro.kernels.ips_repack.kernel import repack_pallas
+from repro.kernels.ips_repack.ref import page_layout, repack_ref, unpack_ref
+from repro.kernels.ssd_scan.kernel import ssd_intra_pallas
+from repro.kernels.ssd_scan.ops import ssd_chunked_kernel
+from repro.kernels.ssd_scan.ref import intra_chunk_ref
+from repro.kernels.tiered_attention.kernel import dense_tier_partial_pallas
+from repro.kernels.tiered_attention.ref import (dense_tier_partial_ref,
+                                                merge_partials)
+from repro.models.mamba2 import ssd_chunked
+
+
+class TestIpsRepack:
+    @pytest.mark.parametrize("tokens,feat,group", [
+        (16, 64, 16), (32, 128, 32), (8, 256, 64), (64, 128, 64),
+    ])
+    def test_matches_ref_bytes(self, tokens, feat, group):
+        key = jax.random.PRNGKey(tokens * feat)
+        pages, page_bytes = 3, tokens * feat * 2
+        vals = jax.random.normal(key, (pages, tokens, feat), jnp.float32)
+        arena = jax.lax.bitcast_convert_type(
+            vals.astype(jnp.bfloat16), jnp.uint8).reshape(pages, page_bytes)
+        ref = jax.jit(functools.partial(repack_ref, tokens=tokens, feat=feat,
+                                        group=group))(arena)
+        pal = repack_pallas(arena, tokens=tokens, feat=feat, group=group,
+                            interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+    def test_roundtrip_error_bound(self):
+        tokens, feat, group = 32, 128, 32
+        key = jax.random.PRNGKey(7)
+        vals = jax.random.normal(key, (2, tokens, feat), jnp.float32)
+        vals_bf = vals.astype(jnp.bfloat16)
+        arena = jax.lax.bitcast_convert_type(vals_bf, jnp.uint8).reshape(2, -1)
+        out = repack_pallas(arena, tokens=tokens, feat=feat, group=group,
+                            interpret=True)
+        back = unpack_ref(out, tokens, feat, group).astype(jnp.float32)
+        # symmetric int4: half-LSB of the per-group max, plus bf16 eps
+        per_group = vals_bf.astype(jnp.float32).reshape(2, tokens, -1, group)
+        bound = np.asarray(jnp.abs(per_group).max(-1)) * (0.5 / 7 + 0.01)
+        err = np.abs(np.asarray(back - vals_bf.astype(jnp.float32)))
+        err = err.reshape(2, tokens, -1, group).max(-1)
+        assert (err <= bound + 1e-6).all()
+
+    def test_density_gain(self):
+        """The freed tail is >= (1 - 1/4 - overhead) of the page — the
+        in-place switch's capacity win."""
+        tokens, feat, group = 256, 1024, 64
+        data, packed, scales = page_layout(tokens, feat, group)
+        freed = data - packed - scales
+        assert freed / data > 0.70
+
+
+class TestQuantPrimitives:
+    @pytest.mark.parametrize("feat,group", [(64, 16), (128, 64), (512, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_roundtrip(self, feat, group, dtype):
+        key = jax.random.PRNGKey(feat)
+        x = jax.random.normal(key, (4, 16, feat), jnp.float32).astype(dtype)
+        p, s = quantize_int4(x, group)
+        back = dequantize_int4(p, s, group, jnp.float32)
+        xg = np.asarray(x, np.float32).reshape(4, 16, -1, group)
+        bound = np.abs(xg).max(-1, keepdims=True) * (0.5 / 7 + 0.02) + 1e-6
+        err = np.abs(np.asarray(back, np.float32).reshape(xg.shape) - xg)
+        assert (err <= bound).all()
+
+
+class TestSsdScan:
+    @pytest.mark.parametrize("q,nh,hd,n", [
+        (16, 2, 16, 16), (32, 4, 32, 16), (64, 2, 64, 32),
+    ])
+    def test_intra_matches_ref(self, q, nh, hd, n):
+        key = jax.random.PRNGKey(q * nh)
+        ks = jax.random.split(key, 5)
+        bt, nc = 2, 2
+        x = jax.random.normal(ks[0], (bt, nc, q, nh, hd), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, nc, q, nh)))
+        A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+        B = jax.random.normal(ks[3], (bt, nc, q, n), jnp.float32)
+        C = jax.random.normal(ks[4], (bt, nc, q, n), jnp.float32)
+        y_r, st_r, cum_r = intra_chunk_ref(x, dt, A, B, C)
+        y_p, st_p, cum_p = ssd_intra_pallas(x, dt, A, B, C, interpret=True)
+        np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(st_p), np.asarray(st_r),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(cum_p), np.asarray(cum_r),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_full_scan_matches_model_oracle(self):
+        """Kernel-assembled chunked scan == models.mamba2.ssd_chunked."""
+        key = jax.random.PRNGKey(3)
+        ks = jax.random.split(key, 5)
+        b, s, nh, hd, n, chunk = 2, 128, 2, 32, 16, 32
+        x = (jax.random.normal(ks[0], (b, s, nh, hd)) * 0.5).astype(jnp.bfloat16)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+        A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+        B = jax.random.normal(ks[3], (b, s, n), jnp.float32)
+        C = jax.random.normal(ks[4], (b, s, n), jnp.float32)
+        y_ref, h_ref = ssd_chunked(x, dt, A, B, C, chunk)
+        y_k, h_k = ssd_chunked_kernel(x, dt, A, B, C, chunk, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(y_k, np.float32), np.asarray(y_ref, np.float32),
+            rtol=5e-2, atol=5e-2)  # bf16 output
+        np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_decode_equivalence(self):
+        """Chunked scan h_final == token-by-token recurrence (SSD duality)."""
+        key = jax.random.PRNGKey(11)
+        ks = jax.random.split(key, 5)
+        b, s, nh, hd, n = 1, 16, 2, 8, 8
+        x = jax.random.normal(ks[0], (b, s, nh, hd), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+        A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+        B = jax.random.normal(ks[3], (b, s, n), jnp.float32)
+        C = jax.random.normal(ks[4], (b, s, n), jnp.float32)
+        _, h_chunked = ssd_chunked(x, dt, A, B, C, chunk=8)
+        h = jnp.zeros((b, nh, hd, n))
+        for t in range(s):
+            decay = jnp.exp(dt[:, t] * A[None])
+            h = decay[:, :, None, None] * h + (
+                dt[:, t][:, :, None, None] * x[:, t][:, :, :, None]
+                * B[:, t][:, None, None, :])
+        np.testing.assert_allclose(np.asarray(h_chunked), np.asarray(h),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestTieredAttention:
+    @pytest.mark.parametrize("s,hkv,g,hd,group,block_t", [
+        (64, 2, 4, 32, 16, 32), (128, 1, 7, 64, 64, 64), (32, 4, 1, 64, 32, 32),
+    ])
+    def test_dense_partial_matches_ref(self, s, hkv, g, hd, group, block_t):
+        key = jax.random.PRNGKey(s + hkv)
+        ks = jax.random.split(key, 3)
+        b = 2
+        q = jax.random.normal(ks[0], (b, hkv, g, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32)
+        k4, ksc = quantize_int4(k, group)
+        v4, vsc = quantize_int4(v, group)
+        dense_len = jnp.int32(s - s // 4)
+        ref = dense_tier_partial_ref(q, k4, ksc, v4, vsc, dense_len, group)
+        pal = dense_tier_partial_pallas(q, k4, ksc, v4, vsc, dense_len,
+                                        group=group, block_t=block_t,
+                                        interpret=True)
+        for r, p, name in zip(ref, pal, ("m", "l", "acc")):
+            np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                                       rtol=2e-4, atol=2e-4, err_msg=name)
+
+    def test_merge_partials_is_softmax(self):
+        """Merged partials == direct softmax over the concatenated keys."""
+        key = jax.random.PRNGKey(5)
+        ks = jax.random.split(key, 3)
+        b, hkv, g, hd, s1, s2 = 1, 2, 2, 16, 8, 8
+        q = jax.random.normal(ks[0], (b, hkv, g, hd))
+        k = jax.random.normal(ks[1], (b, s1 + s2, hkv, hd))
+        v = jax.random.normal(ks[2], (b, s1 + s2, hkv, hd))
+
+        def part(ka, va):
+            sc = jnp.einsum("bkgd,bskd->bkgs", q, ka) / (hd ** 0.5)
+            m = sc.max(-1)
+            p = jnp.exp(sc - m[..., None])
+            return m, p.sum(-1), jnp.einsum("bkgs,bskd->bkgd", p, va)
+
+        out, _, _ = merge_partials([part(k[:, :s1], v[:, :s1]),
+                                    part(k[:, s1:], v[:, s1:])])
+        sc = jnp.einsum("bkgd,bskd->bkgs", q, k) / (hd ** 0.5)
+        w = jax.nn.softmax(sc, axis=-1)
+        direct = jnp.einsum("bkgs,bskd->bkgd", w, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(direct),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("s,hkv,g,hd,bq,bk", [
+        (64, 2, 3, 32, 16, 16), (32, 1, 4, 64, 32, 8), (48, 4, 1, 16, 16, 24),
+    ])
+    def test_fwd_matches_ref(self, s, hkv, g, hd, bq, bk):
+        from repro.kernels.flash_attention.kernel import flash_fwd_pallas
+        from repro.kernels.flash_attention.ref import flash_ref
+        key = jax.random.PRNGKey(s + hd)
+        ks = jax.random.split(key, 3)
+        b = 2
+        q = jax.random.normal(ks[0], (b, s, hkv * g, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32)
+        o_p, lse_p = flash_fwd_pallas(q, k, v, bq=bq, bk=bk, interpret=True)
+        o_r, lse_r = flash_ref(q, k, v, chunk=bk)
+        np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(lse_p), np.asarray(lse_r),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bf16_inputs(self):
+        from repro.kernels.flash_attention.ops import flash_attention_fwd
+        key = jax.random.PRNGKey(1)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 32, 4, 32)).astype(jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, 32, 2, 32)).astype(jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 32, 2, 32)).astype(jnp.bfloat16)
+        out, _ = flash_attention_fwd(q, k, v, interpret=True, bq=16, bk=16)
+        assert out.dtype == jnp.bfloat16
+        assert out.shape == (1, 32, 4, 32)
+        assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+
+
+class TestFlashVjpProperties:
+    """Hypothesis sweep: the model's flash custom-vjp (fwd + grads) matches
+    naive softmax attention over random shapes/chunks."""
+
+    @staticmethod
+    def _naive(q, k, v):
+        b, sq, h, hd = q.shape
+        g = h // k.shape[2]
+        kf = jnp.repeat(k.astype(jnp.float32), g, 2)
+        vf = jnp.repeat(v.astype(jnp.float32), g, 2)
+        s = jnp.einsum("bqhd,bchd->bhqc", q.astype(jnp.float32),
+                       kf) / hd ** 0.5
+        mask = jnp.tril(jnp.ones((sq, sq), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+        w = jax.nn.softmax(s, -1)
+        return jnp.einsum("bhqc,bchd->bqhd", w, vf)
+
+    def test_property_sweep(self):
+        from hypothesis import given, settings, strategies as st
+        from repro.models.attention import attend_chunked
+
+        @settings(max_examples=12, deadline=None)
+        @given(sq=st.integers(5, 40), hkv=st.sampled_from([1, 2]),
+               g=st.sampled_from([1, 3]), chunk=st.sampled_from([4, 8, 16]),
+               seed=st.integers(0, 999))
+        def check(sq, hkv, g, chunk, seed):
+            key = jax.random.PRNGKey(seed)
+            ks = jax.random.split(key, 3)
+            hd = 16
+            q = jax.random.normal(ks[0], (1, sq, hkv * g, hd), jnp.float32)
+            k = jax.random.normal(ks[1], (1, sq, hkv, hd), jnp.float32)
+            v = jax.random.normal(ks[2], (1, sq, hkv, hd), jnp.float32)
+            pos = jnp.arange(sq, dtype=jnp.int32)
+
+            def f_flash(q, k, v):
+                o = attend_chunked(q, k, v, q_positions=pos,
+                                   kv_positions=pos, causal=True,
+                                   chunk=chunk)
+                return jnp.sum(jnp.cos(o.astype(jnp.float32)))
+
+            def f_naive(q, k, v):
+                return jnp.sum(jnp.cos(self._naive(q, k, v)))
+
+            v1, g1 = jax.value_and_grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+            v2, g2 = jax.value_and_grad(f_naive, argnums=(0, 1, 2))(q, k, v)
+            np.testing.assert_allclose(float(v1), float(v2), rtol=1e-4)
+            for a, b_ in zip(g1, g2):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                           rtol=1e-3, atol=1e-4)
+        check()

@@ -1,0 +1,160 @@
+"""Launch/distribution-layer tests that run on one device: spec fitting,
+partition-rule roles, HLO analyzer on a stored dump, roofline arithmetic,
+and trace-generator invariants."""
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, dryrun_cells
+from repro.distributed.sharding import fit_spec, param_specs
+from repro.launch.hlo_analysis import (analyze_hlo, computation_multipliers,
+                                       parse_computations)
+
+
+def _fake_mesh():
+    """An abstract 16x16 mesh usable for spec fitting (no devices needed)."""
+    devs = np.array(jax.devices() * 256)[:256].reshape(16, 16)
+    return Mesh(devs, ("data", "model"))
+
+
+class TestSpecFitting:
+    def test_divisible_kept(self):
+        mesh = _fake_mesh()
+        assert fit_spec(mesh, ("data", "model"), (32, 64)) == P("data",
+                                                                "model")
+
+    def test_indivisible_dropped(self):
+        mesh = _fake_mesh()
+        # 56 heads don't divide model=16 -> replicated on that dim
+        assert fit_spec(mesh, (None, "data", "model", None),
+                        (60, 7168, 56, 128)) == P(None, "data", None, None)
+
+    def test_batch_tuple_axes(self):
+        mesh = _fake_mesh()
+        assert fit_spec(mesh, (("data", "model"), None),
+                        (256, 128)) == P(("data", "model"), None)
+        assert fit_spec(mesh, (("data", "model"), None),
+                        (100, 128)) == P(None, None)
+
+    def test_param_specs_roles(self):
+        mesh = _fake_mesh()
+        from repro.models.model_zoo import build_model
+        cfg = ARCHS["yi-6b"]
+        bundle = build_model(cfg)
+        shapes = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+        specs = param_specs(mesh, shapes)
+        # FSDP(data) x TP(model): 32 q-heads divide, 4 kv-heads do not
+        assert specs["layers"]["attn"]["wq"] == P(None, "data", "model",
+                                                  None)
+        assert specs["layers"]["attn"]["wk"] == P(None, "data", None, None)
+        assert specs["layers"]["mlp"]["w_down"] == P(None, "model", "data")
+        assert specs["embed"] == P("model", "data")
+
+    def test_decode_mode_drops_fsdp(self):
+        mesh = _fake_mesh()
+        from repro.models.model_zoo import build_model
+        cfg = ARCHS["yi-34b"]
+        shapes = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+        specs = param_specs(mesh, shapes, mode="decode")
+        # 56 heads indivisible -> row-parallel on d_model, NOT replicated
+        assert specs["layers"]["attn"]["wq"] == P(None, "model", None, None)
+        assert "data" not in str(specs["layers"]["attn"])
+
+
+class TestCells:
+    def test_cell_count_and_skips(self):
+        cells = dryrun_cells()
+        assert len(cells) == 40
+        skipped = [c for c in cells if not c[2]]
+        assert len(skipped) == 8
+        assert all(s[1].name == "long_500k" for s in skipped)
+        runnable_long = [c for c in cells if c[1].name == "long_500k"
+                         and c[2]]
+        assert {c[0].name for c in runnable_long} == {"zamba2-1.2b",
+                                                      "mamba2-370m"}
+
+
+class TestHloAnalysis:
+    def test_trip_count_extraction_synthetic(self):
+        txt = """
+HloModule m
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant(32)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %x = f32[4]{0} get-tuple-element(%p), index=1
+  %w = f32[4,4]{1,0} constant({...})
+  %d = f32[4]{0} dot(%x, %w), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[4]) tuple(%p, %d)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  %init = (s32[], f32[4]) tuple(%a, %a)
+  %w0 = (s32[], f32[4]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[4]{0} get-tuple-element(%w0), index=1
+}
+"""
+        comps = parse_computations(txt)
+        mult = computation_multipliers(comps)
+        assert mult["%body"] == 32
+        r = analyze_hlo(txt)
+        assert r["flops"] == 2 * 4 * 4 * 32   # dot in a 32-trip loop
+
+    @pytest.mark.skipif(not glob.glob("results/hlo/*.hlo.zst"),
+                        reason="no dry-run HLO dumps present")
+    def test_real_dump_parses(self):
+        import zstandard as zstd
+        path = sorted(glob.glob("results/hlo/*.hlo.zst"))[0]
+        txt = zstd.ZstdDecompressor().decompress(
+            open(path, "rb").read()).decode()
+        r = analyze_hlo(txt)
+        assert r["flops"] > 0
+        assert r["hbm_bytes"] > 0
+        assert r["n_whiles"] >= 1
+
+
+class TestRoofline:
+    def test_model_flops_formulas(self):
+        from benchmarks.roofline import model_flops
+        cfg = ARCHS["yi-6b"]
+        train = model_flops("yi-6b", "train_4k")
+        assert train == pytest.approx(
+            6 * cfg.param_count() * 256 * 4096, rel=1e-6)
+        # MoE uses active params
+        moe_train = model_flops("arctic-480b", "train_4k")
+        arctic = ARCHS["arctic-480b"]
+        assert moe_train == pytest.approx(
+            6 * arctic.active_param_count() * 256 * 4096, rel=1e-6)
+        assert moe_train < 6 * arctic.param_count() * 256 * 4096 / 10
+
+
+class TestWorkloadGen:
+    def test_padding_and_modes(self):
+        from repro.core.ssd.workloads import PAD_OPS, make_trace
+        for mode in ("bursty", "daily"):
+            t = make_trace("hm_0", 65536, mode=mode, capacity_pages=786432)
+            assert len(t["lba"]) == PAD_OPS
+            assert (t["is_write"][t["n_ops"]:] == -1).all()
+            assert t["arrival_ms"].dtype == np.float32
+            assert (np.diff(t["arrival_ms"][: t["n_ops"]]) >= 0).all()
+        bursty = make_trace("hm_0", 65536, mode="bursty",
+                            capacity_pages=786432)
+        assert (bursty["is_write"][: bursty["n_ops"]] == 1).all()
+
+    def test_deterministic(self):
+        from repro.core.ssd.workloads import make_trace
+        a = make_trace("usr_0", 65536, seed=1, capacity_pages=786432)
+        b = make_trace("usr_0", 65536, seed=1, capacity_pages=786432)
+        np.testing.assert_array_equal(a["lba"], b["lba"])

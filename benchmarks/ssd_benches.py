@@ -9,19 +9,37 @@ that run.py prints as CSV. Mapping to the paper:
   ips_normalized           -> Fig. 10       (IPS vs baseline, bursty+daily)
   ips_agc_normalized       -> Fig. 11       (IPS vs IPS/agc, daily)
   coop_normalized          -> Fig. 12       (cooperative vs write volume)
+  fleet_speedup            -> (engineering) fleet vs looped eval_cell
+
+All figure benches read from ONE fleet-computed matrix (`_matrix()`):
+the full 11-trace x 2-mode x 4-policy grid runs as eight batched
+`vmap(lax.scan)` fleets (repro.sweep.runner) instead of ~150 sequential
+`eval_cell` scans.
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 
 from repro.configs.ssd_paper import PAPER_SSD
-from repro.core.ssd.driver import (DEFAULT_SCALE, LOGICAL_SPACE_CAP,
-                                   eval_cell, geomean)
+from repro.core.ssd.driver import DEFAULT_SCALE, LOGICAL_SPACE_CAP
 from repro.core.ssd.sim import run_trace
-from repro.core.ssd.workloads import TRACE_NAMES, make_trace
+from repro.core.ssd.workloads import TRACE_NAMES
 
 CFG = PAPER_SSD.scaled(DEFAULT_SCALE)
 HEADLINE = ("hm_0", "hm_1", "proj_0", "prxy_0", "stg_0", "wdev_0")
+
+
+@functools.lru_cache(maxsize=1)
+def _matrix():
+    """Full fleet matrix, computed once and shared by every figure bench."""
+    from repro.sweep.runner import run_matrix
+    return run_matrix(CFG, policies=("baseline", "ips", "ips_agc", "coop"))
+
+
+def _cell(name, mode, policy):
+    return _matrix()[f"{name}/{mode}/{policy}"]
 
 
 def bursty_bandwidth_cliff():
@@ -49,7 +67,7 @@ def daily_steady_bandwidth():
     """Fig 4: daily-use stays near SLC latency for the baseline."""
     rows = []
     for name in ("hm_0", "usr_0"):
-        r = eval_cell(CFG, name, "baseline", "daily")
+        r = _cell(name, "daily", "baseline")
         rows.append((f"fig4_{name}_baseline_daily_ms",
                      r["mean_write_latency_ms"],
                      f"wa={r['wa_paper']:.3f}"))
@@ -61,7 +79,7 @@ def writes_breakdown():
     rows = []
     for mode in ("bursty", "daily"):
         for name in HEADLINE:
-            r = eval_cell(CFG, name, "baseline", mode)
+            r = _cell(name, mode, "baseline")
             total = max(r["slc_writes"] + r["tlc_writes"], 1.0)
             rows.append((f"fig5_{mode}_{name}_wa", r["wa_paper"],
                          f"slc={r['slc_writes']/total:.2f},"
@@ -73,8 +91,8 @@ def writes_breakdown():
 def _normalized(policy, mode, names=TRACE_NAMES):
     out = {}
     for name in names:
-        base = eval_cell(CFG, name, "baseline", mode)
-        r = eval_cell(CFG, name, policy, mode)
+        base = _cell(name, mode, "baseline")
+        r = _cell(name, mode, policy)
         out[name] = (
             r["mean_write_latency_ms"] / base["mean_write_latency_ms"],
             r["wa_paper"] / base["wa_paper"])
@@ -121,34 +139,31 @@ def coop_volume_sweep():
     """Fig 12a: bursty cooperative vs total write volume. The paper's Fig 12
     baseline is a dynamic SLC cache of the same 64GB class (at 64GB written
     "all data can be written into SLC cache ... same write latency"), so the
-    comparison here uses an equal-capacity baseline: ratio == 1 while the
-    burst fits, then falls below 1 as coop's IPS region keeps minting fresh
-    SLC (paper: 1.0 at 64GB -> 0.79 at 136GB)."""
-    import dataclasses
-    import jax.numpy as jnp
-    from repro.core.ssd.driver import _agc_waste_p
-    from repro.core.ssd.sim import run_trace, summarize
-    n_logical = min(CFG.total_pages, LOGICAL_SPACE_CAP)
-    big_base = dataclasses.replace(
-        CFG, slc_cache_gb=CFG.coop_ips_gb + CFG.coop_traditional_gb)
+    comparison uses an equal-capacity baseline. With CellParams the bigger
+    cache is a traced knob (cache_frac), so ALL six cells — both policies,
+    three volumes — share compiled scans instead of recompiling per config.
+    """
+    from repro.sweep.grid import SweepPoint
+    from repro.sweep.runner import run_sweep
+    # 64 GB-class baseline == 16x the 4 GB cache (exact: powers of two)
+    frac = (CFG.coop_ips_gb + CFG.coop_traditional_gb) / CFG.slc_cache_gb
+    points = []
+    for repeat in (2, 4, 7):
+        points.append(SweepPoint("hm_0", "bursty", "baseline",
+                                 repeat=repeat, cache_frac=frac))
+        points.append(SweepPoint("hm_0", "bursty", "coop", repeat=repeat))
+    res = run_sweep(CFG, points)
+    coop_pages = ((CFG.coop_ips_pages + CFG.coop_trad_pages)
+                  * CFG.num_planes)
     rows = []
     for repeat in (2, 4, 7):
-        trace = make_trace("hm_0", n_logical, mode="bursty",
-                           capacity_pages=CFG.total_pages, repeat=repeat)
-        vols = {}
-        for policy, cfg_ in (("baseline", big_base), ("coop", CFG)):
-            lat, st = run_trace(cfg_, policy, trace, closed_loop=True,
-                                n_logical=n_logical,
-                                waste_p=_agc_waste_p("hm_0"))
-            summ = summarize(lat, {"is_write": jnp.asarray(
-                trace["is_write"])}, st)
-            vols[policy] = float(summ["mean_write_latency_ms"])
-        pages = trace["n_ops"]
-        coop_pages = ((CFG.coop_ips_pages + CFG.coop_trad_pages)
-                      * CFG.num_planes)
+        base = res[SweepPoint("hm_0", "bursty", "baseline", repeat=repeat,
+                              cache_frac=frac)]
+        coop = res[SweepPoint("hm_0", "bursty", "coop", repeat=repeat)]
         rows.append((f"fig12a_volume_{repeat}x",
-                     vols["coop"] / vols["baseline"],
-                     f"volume={pages/coop_pages:.2f}x coop cache"))
+                     coop["mean_write_latency_ms"]
+                     / base["mean_write_latency_ms"],
+                     f"volume={coop['n_ops']/coop_pages:.2f}x coop cache"))
     return rows
 
 
@@ -177,9 +192,9 @@ def wear_and_lifetime():
     flush included): fewer erases and fewer programs = longer lifetime."""
     rows = []
     for name in ("hm_0", "proj_0", "usr_0"):
-        base = eval_cell(CFG, name, "baseline", "daily")
+        base = _cell(name, "daily", "baseline")
         for policy in ("ips", "ips_agc", "coop"):
-            r = eval_cell(CFG, name, policy, "daily")
+            r = _cell(name, "daily", policy)
             er = r["erases"] / max(base["erases"], 1.0)
             rows.append((f"wear_{name}_{policy}_erase_ratio", er,
                          f"wa_raw={r['wa_raw']:.2f} vs base "
@@ -187,6 +202,25 @@ def wear_and_lifetime():
     return rows
 
 
+def fleet_speedup():
+    """Engineering bench: batched fleet matrix vs looped eval_cell on the
+    full 11-trace x 2-mode x {baseline, ips, ips_agc} grid. Writes the
+    BENCH_fleet_matrix.json trajectory artifact (sweep.store)."""
+    from repro.sweep.runner import bench_fleet_vs_loop
+    from repro.sweep.store import save_bench
+    bench = bench_fleet_vs_loop(CFG)
+    path = save_bench("fleet_matrix",
+                      {k: v for k, v in bench.items() if k != "results"},
+                      cfg=CFG)
+    return [("fleet_matrix_loop_wall_s", bench["loop_wall_s"],
+             f"{bench['n_cells']} cells sequential"),
+            ("fleet_matrix_fleet_wall_s", bench["fleet_wall_s"],
+             "same cells, batched fleets"),
+            ("fleet_matrix_speedup", bench["speedup"],
+             f"max_rel_diff={bench['max_rel_diff']:.2e}; wrote {path}")]
+
+
 ALL_SSD_BENCHES = (bursty_bandwidth_cliff, daily_steady_bandwidth,
                    writes_breakdown, ips_normalized, ips_agc_normalized,
-                   coop_normalized, coop_volume_sweep, wear_and_lifetime)
+                   coop_normalized, coop_volume_sweep, wear_and_lifetime,
+                   fleet_speedup)

@@ -2,6 +2,8 @@
 
 Prints the full normalized table: write latency and write amplification of
 IPS / IPS-agc / cooperative vs the Turbo-Write baseline, bursty and daily.
+All cells run on the batched fleet path (driver.eval_matrix -> one compiled
+vmapped scan per policy/mode group).
 
 Run: PYTHONPATH=src python examples/ssd_repro.py [--workloads hm_0,stg_0]
 """
@@ -10,7 +12,7 @@ import argparse
 import numpy as np
 
 from repro.configs.ssd_paper import PAPER_SSD
-from repro.core.ssd.driver import DEFAULT_SCALE, eval_cell
+from repro.core.ssd.driver import DEFAULT_SCALE, eval_matrix
 from repro.core.ssd.workloads import TRACE_NAMES
 
 
@@ -25,16 +27,19 @@ def main():
           f"paper's 384 GB), SLC cache {cfg.slc_cap_pages*cfg.num_planes} "
           f"pages")
 
+    results = eval_matrix(
+        cfg, policies=("baseline", "ips", "ips_agc", "coop"), names=names)
+
     agg = {}
     for mode in ("bursty", "daily"):
         print(f"\n=== {mode} (normalized to baseline) ===")
         print(f"{'workload':<9}" + "".join(
             f"{p+' lat':>12}{p+' wa':>10}" for p in ("ips", "agc", "coop")))
         for name in names:
-            base = eval_cell(cfg, name, "baseline", mode)
+            base = results[f"{name}/{mode}/baseline"]
             row = f"{name:<9}"
             for policy in ("ips", "ips_agc", "coop"):
-                r = eval_cell(cfg, name, policy, mode)
+                r = results[f"{name}/{mode}/{policy}"]
                 nl = (r["mean_write_latency_ms"]
                       / base["mean_write_latency_ms"])
                 nw = r["wa_paper"] / base["wa_paper"]

@@ -1,0 +1,63 @@
+"""Fleet sweep example: batched multi-trace / multi-seed simulation.
+
+Runs a small parameter sweep — 3 traces x 2 seeds x {baseline, ips_agc} x
+both modes, plus a cache-size sensitivity row — as a handful of compiled
+batched scans, then prints baseline-normalized results and writes a
+BENCH_example_sweep.json artifact.
+
+Run: PYTHONPATH=src python examples/sweep_fleet.py [--devices N]
+
+For the full paper figure set use the CLI:
+    PYTHONPATH=src python -m repro.sweep.cli --grid paper
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=os.cpu_count() or 1,
+                    help="host devices to shard fleet cells across")
+    ap.add_argument("--max-ops", type=int, default=None)
+    args = ap.parse_args()
+    if args.devices > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   f" --xla_force_host_platform_device_count"
+                                   f"={args.devices}").strip()
+
+    from repro.configs.ssd_paper import PAPER_SSD
+    from repro.sweep import SweepPoint, expand_grid, save_bench
+    from repro.sweep.report import normalize_points, policy_geomeans
+    from repro.sweep.runner import run_sweep
+
+    cfg = PAPER_SSD.scaled(128)
+    points = expand_grid(traces=("hm_0", "stg_0", "prxy_0"),
+                         policies=("baseline", "ips_agc"),
+                         seeds=(0, 1))
+    # cache-size sensitivity: same cells at half / double SLC cache —
+    # traced CellParams, so no extra compilation
+    points += expand_grid(traces=("hm_0",), modes=("daily",),
+                          policies=("baseline", "ips_agc"),
+                          cache_fracs=(0.5, 2.0))
+
+    print(f"{len(points)} cells ...")
+    results = run_sweep(cfg, points, max_ops=args.max_ops,
+                        progress=lambda s: print(f"  {s}"))
+
+    lat = normalize_points(results, "mean_write_latency_ms")
+    wa = normalize_points(results, "wa_paper")
+    print(f"\n{'cell':<42}{'lat/base':>9}{'wa/base':>9}")
+    for pt in sorted(lat, key=lambda p: p.key):
+        print(f"{pt.key:<42}{lat[pt]:>9.3f}{wa[pt]:>9.3f}")
+    print("\ngeomeans (unqualified cells):")
+    for (mode, policy), v in sorted(policy_geomeans(results).items()):
+        print(f"  {mode:>7} {policy:<8} lat={v['mean_write_latency_ms']:.3f}"
+              f" wa={v['wa_paper']:.3f}")
+
+    path = save_bench("example_sweep", {"results": results}, cfg=cfg)
+    print(f"\nwrote {path}")
+
+
+if __name__ == "__main__":
+    main()

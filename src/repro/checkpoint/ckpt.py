@@ -23,7 +23,36 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+    HAVE_ZSTD = True
+except ImportError:          # zstandard is optional in this container:
+    import zlib              # fall back to zlib (self-consistent format;
+    zstd = None              # codec is sniffed from magic bytes on load)
+    HAVE_ZSTD = False
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(blob: bytes, level: int) -> bytes:
+    if HAVE_ZSTD:
+        return zstd.ZstdCompressor(level=level).compress(blob)
+    return zlib.compress(blob, min(level, 9))   # zstd levels exceed zlib's
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if not HAVE_ZSTD:
+            raise ImportError(
+                "checkpoint was written with zstd but zstandard is not "
+                "installed")
+        return zstd.ZstdDecompressor().decompress(blob)
+    if HAVE_ZSTD and blob[:1] != b"\x78":
+        return zstd.ZstdDecompressor().decompress(blob)
+    import zlib as _zlib
+    return _zlib.decompress(blob)
+
 
 _EXEC = ThreadPoolExecutor(max_workers=1)
 
@@ -54,8 +83,7 @@ def save(path: str, tree: Any, *, step: int, extra: Optional[dict] = None,
     os.makedirs(path, exist_ok=True)
     flat, _ = _flatten(tree)
     payload = {k: _pack_array(v) for k, v in flat.items()}
-    blob = zstd.ZstdCompressor(level=level).compress(
-        msgpack.packb(payload, use_bin_type=True))
+    blob = _compress(msgpack.packb(payload, use_bin_type=True), level)
     shard = jax.process_index()
     with open(os.path.join(path, f"shard_{shard:05d}.msgpack.zst"),
               "wb") as f:
@@ -87,14 +115,13 @@ def restore(path: str, target: Any, *, mesh=None, shardings=None):
     for fname in sorted(os.listdir(path)):
         if fname.endswith(".msgpack.zst"):
             with open(os.path.join(path, fname), "rb") as f:
-                data = zstd.ZstdDecompressor().decompress(f.read())
+                data = _decompress(f.read())
             blobs.update(msgpack.unpackb(data, raw=False))
     arrays = {}
     for key in flat_target:
         if key not in blobs:
             raise KeyError(f"checkpoint missing key {key!r}")
         arrays[key] = _unpack_array(blobs[key])
-    leaves = [arrays[k] for k in sorted(arrays) if True]
     # preserve target leaf order
     ordered = [arrays[key] for key in flat_target]
     tree = jax.tree_util.tree_unflatten(treedef, ordered)

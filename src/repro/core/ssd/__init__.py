@@ -1,8 +1,15 @@
 from repro.core.ssd.config import SSDConfig, TimingConfig
-from repro.core.ssd.sim import (CTR, POLICIES, SimState, flush_cache,
-                                init_state, make_step, run_trace, summarize)
-from repro.core.ssd.workloads import TRACE_NAMES, TRACES, make_trace
+from repro.core.ssd.fleet import (flush_fleet, run_fleet, shard_cells,
+                                  stack_ops, stack_params, summarize_fleet)
+from repro.core.ssd.sim import (CTR, POLICIES, CellParams, SimState,
+                                default_params, flush_cache, init_state,
+                                make_step, run_trace, summarize)
+from repro.core.ssd.workloads import (TRACE_NAMES, TRACES, make_trace,
+                                      stack_traces, truncate_trace)
 
-__all__ = ["SSDConfig", "TimingConfig", "CTR", "POLICIES", "SimState",
-           "flush_cache", "init_state", "make_step", "run_trace",
-           "summarize", "TRACE_NAMES", "TRACES", "make_trace"]
+__all__ = ["SSDConfig", "TimingConfig", "CTR", "POLICIES", "CellParams",
+           "SimState", "default_params", "flush_cache", "init_state",
+           "make_step", "run_trace", "summarize", "TRACE_NAMES", "TRACES",
+           "make_trace", "stack_traces", "truncate_trace", "flush_fleet",
+           "run_fleet", "shard_cells", "stack_ops", "stack_params",
+           "summarize_fleet"]

@@ -3,17 +3,25 @@
 Reproduces the paper's evaluation matrix: 11 MSR-like workloads x
 {bursty, daily} x {baseline, ips, ips_agc, coop}, reporting mean write
 latency and write amplification, normalized to baseline.
+
+`eval_cell` is the single-cell REFERENCE implementation (one
+`sim.run_trace` scan per cell). `eval_matrix` runs the same cells through
+the batched fleet path (`repro.sweep.runner`): one `vmap(lax.scan)` per
+(policy, mode) group, sharded across devices — bit-for-bit equivalent
+(tests/test_fleet.py) and several times faster (BENCH_fleet_matrix.json).
 """
 from __future__ import annotations
 
 from typing import Dict, Iterable, Optional
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.ssd.config import SSDConfig
 from repro.core.ssd.sim import flush_cache, run_trace, summarize
 from repro.core.ssd.workloads import TRACES, TRACE_NAMES, make_trace
+# reporting moved to the sweep package (PR: fleet sweep engine); re-exported
+# here for backward compatibility
+from repro.sweep.report import geomean, normalize_to_baseline  # noqa: F401
 
 # default evaluation scale: 1/128 of the paper's 384 GB drive => 3 GB SSD,
 # 32 MB SLC cache; cache-to-writeset ratios preserved (DESIGN.md §2)
@@ -54,29 +62,11 @@ def _agc_waste_p(name: str) -> float:
 def eval_matrix(cfg: SSDConfig, *, policies=("baseline", "ips", "ips_agc"),
                 modes=("bursty", "daily"),
                 names: Optional[Iterable[str]] = None, seed: int = 0):
-    names = tuple(names or TRACE_NAMES)
-    results: Dict[str, Dict] = {}
-    for mode in modes:
-        for name in names:
-            for policy in policies:
-                results[f"{name}/{mode}/{policy}"] = eval_cell(
-                    cfg, name, policy, mode, seed)
-    return results
+    """Full evaluation matrix on the batched fleet path.
 
-
-def normalize_to_baseline(results: Dict[str, Dict], metric: str):
-    """Per (workload, mode): metric[policy] / metric[baseline]."""
-    out = {}
-    for key, val in results.items():
-        name, mode, policy = key.split("/")
-        if policy == "baseline":
-            continue
-        base = results[f"{name}/{mode}/baseline"][metric]
-        out[key] = val[metric] / max(base, 1e-12)
-    return out
-
-
-def geomean(values) -> float:
-    vals = np.asarray(list(values), dtype=np.float64)
-    vals = np.maximum(vals, 1e-12)
-    return float(np.exp(np.mean(np.log(vals))))
+    Same keys/values as looping `eval_cell` over the cells (the fleet and
+    single-cell paths are bit-for-bit equivalent), but each (policy, mode)
+    group runs as one compiled batched scan."""
+    from repro.sweep.runner import run_matrix  # lazy: sweep imports driver
+    return run_matrix(cfg, policies=tuple(policies), modes=tuple(modes),
+                      names=names, seed=seed)

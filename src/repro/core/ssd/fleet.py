@@ -1,0 +1,117 @@
+"""Fleet simulation: batched multi-trace / multi-seed SSD simulation.
+
+Generalizes `sim.run_trace` from one `(PAD_OPS,)` trace to a stacked
+`(n_cells, PAD_OPS)` trace tensor: all cells of one (policy, mode) group —
+traces x seeds x cache sizes x repeat factors — execute inside a single
+compiled `vmap(lax.scan)`. Per-cell knobs (`CellParams`) are traced, so a
+whole cache-size sweep is one compile; only policy and mode (which select
+different code paths) split compilations (DESIGN.md §4).
+
+Device sharding: when the process has more than one JAX device (e.g. the
+sweep CLI forces `--xla_force_host_platform_device_count=<n>` host devices,
+or real accelerators are present), `shard_cells` lays the cell axis across
+the device mesh and the jitted fleet scan runs cells in parallel — the scan
+carries no cross-cell dependency, so SPMD partitioning is embarrassingly
+clean. On one device it degrades to a plain vmap.
+
+Equivalence contract: `run_fleet(...)[i]` is bit-for-bit identical to
+`run_trace` on cell i with the same `CellParams` (verified by
+tests/test_fleet.py). `driver.eval_cell` remains the single-cell reference
+implementation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ssd.config import SSDConfig
+from repro.core.ssd.sim import (CellParams, SimState, flush_cache,
+                                init_state, make_step, summarize)
+
+__all__ = ["stack_params", "stack_ops", "shard_cells", "run_fleet",
+           "flush_fleet", "summarize_fleet"]
+
+
+def stack_params(params: Sequence[CellParams]) -> CellParams:
+    """Stack per-cell CellParams into one CellParams of (C,) arrays."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+
+
+def stack_ops(traces: Sequence[dict]) -> dict:
+    """Stack padded traces into (C, T) op tensors.
+
+    All traces must share one padded length (workloads pads to a multiple
+    of PAD_OPS; `repro.sweep.runner` groups cells by padded length)."""
+    lens = {len(t["arrival_ms"]) for t in traces}
+    if len(lens) != 1:
+        raise ValueError(f"traces must share a padded length, got {lens}")
+    return {
+        "arrival_ms": jnp.asarray(
+            np.stack([np.asarray(t["arrival_ms"], np.float32)
+                      for t in traces])),
+        "lba": jnp.asarray(
+            np.stack([np.asarray(t["lba"], np.int32) for t in traces])),
+        "is_write": jnp.asarray(
+            np.stack([np.asarray(t["is_write"], np.int32)
+                      for t in traces])),
+    }
+
+
+def shard_cells(tree, devices=None):
+    """Lay the leading (cell) axis of every leaf across the device mesh.
+
+    No-op on a single device or when the cell count does not divide the
+    device count (XLA would have to pad; callers pad cells instead when
+    they care — see sweep.runner)."""
+    devices = jax.devices() if devices is None else list(devices)
+    n_dev = len(devices)
+    leaves = jax.tree.leaves(tree)
+    if n_dev <= 1 or not leaves:
+        return tree
+    n_cells = leaves[0].shape[0]
+    if n_cells % n_dev != 0:
+        return tree
+    mesh = jax.sharding.Mesh(np.array(devices), ("cells",))
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("cells"))
+    return jax.tree.map(lambda x: jax.device_put(x, sharding), tree)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "closed_loop",
+                                             "n_logical"))
+def run_fleet(cfg: SSDConfig, policy: str, ops: dict, params: CellParams,
+              *, closed_loop: bool, n_logical: int):
+    """Simulate a whole (policy, mode) fleet in one compiled scan.
+
+    ops: (C, T) stacked op tensors from `stack_ops`; params: (C,)-stacked
+    CellParams. Returns (latency (C, T), final SimState with leading C)."""
+    def one(cell_ops, cell_params):
+        step = make_step(cfg, policy, closed_loop=closed_loop,
+                         params=cell_params)
+        final, latency = jax.lax.scan(step, init_state(cfg, n_logical),
+                                      cell_ops)
+        return latency, final
+
+    latency, final = jax.vmap(one)(ops, params)
+    return latency, final
+
+
+def flush_fleet(cfg: SSDConfig, states: SimState, policy: str) -> SimState:
+    """Vectorized end-of-workload flush (sim.flush_cache) over the C axis."""
+    if policy in ("ips", "ips_agc"):
+        return states
+    return jax.vmap(lambda s: flush_cache(cfg, s, policy))(states)
+
+
+def summarize_fleet(latency, is_write, states: SimState) -> dict:
+    """Per-cell summaries: dict of (C,) arrays (same keys as sim.summarize).
+
+    is_write: (C, T) int array (padding < 0 is excluded by the == 1 test
+    inside summarize)."""
+    return jax.vmap(
+        lambda lat, w, s: summarize(lat, {"is_write": w}, s)
+    )(latency, jnp.asarray(is_write), states)

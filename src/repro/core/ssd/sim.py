@@ -45,6 +45,35 @@ OVERRUN_PAGES = 4               # one reclamation batch an arriving write may
 #                                 stall behind (paper Fig. 7)
 
 
+class CellParams(NamedTuple):
+    """Per-cell simulation knobs, *traced* through the compiled scan.
+
+    Everything that varies across sweep cells without changing control flow
+    lives here, so one compiled (policy, mode) scan serves every cell of a
+    parameter sweep — cache-size and idle-threshold sensitivity runs
+    (paper Fig. 12) are compile-free (DESIGN.md §4). Policy and mode stay
+    static: they select different code paths.
+    """
+    cap_basic: jnp.ndarray   # i32 — SLC pages/plane in the basic/IPS region
+    cap_trad: jnp.ndarray    # i32 — coop traditional-region pages/plane
+    idle_thr: jnp.ndarray    # f32 — device-idle gap threshold (ms)
+    waste_p: jnp.ndarray     # f32 — AGC early-migration waste probability
+
+
+def default_params(cfg: SSDConfig, policy: str,
+                   waste_p: float = 0.0) -> CellParams:
+    """CellParams matching the static config for one policy (the reference
+    single-cell path and the fleet path share these exact values)."""
+    has_trad = policy == "coop"
+    return CellParams(
+        cap_basic=jnp.int32(cfg.coop_ips_pages if has_trad
+                            else cfg.slc_cap_pages),
+        cap_trad=jnp.int32(cfg.coop_trad_pages if has_trad else 0),
+        idle_thr=jnp.float32(cfg.idle_threshold_ms),
+        waste_p=jnp.float32(waste_p),
+    )
+
+
 class SimState(NamedTuple):
     busy: jnp.ndarray          # (P,) f32 — plane free time
     slc_used: jnp.ndarray      # (P,) i32 — pages in current basic/IPS region
@@ -89,23 +118,32 @@ def _ceil_div(a, b):
 
 
 def make_step(cfg: SSDConfig, policy: str, *, closed_loop: bool,
-              waste_p: float):
-    """Returns scan step fn specialized to (policy, mode)."""
+              waste_p: float | jnp.ndarray | None = None,
+              params: CellParams | None = None):
+    """Returns scan step fn specialized to (policy, mode).
+
+    Per-cell knobs (cache capacities, idle threshold, waste_p) come from
+    `params` as traced scalars; `waste_p` alone is accepted for backward
+    compatibility and fills a default CellParams from the static config."""
     assert policy in POLICIES
+    if params is None:
+        params = default_params(cfg, policy,
+                                0.0 if waste_p is None else waste_p)
     t_ = cfg.timing
     p_total = cfg.num_planes
     is_baseline = policy == "baseline"
     has_trad = policy == "coop"
     use_runtime_rp = policy in ("ips", "ips_agc", "coop")
     use_idle_agc = policy in ("ips_agc", "coop")
-    cap_basic = cfg.coop_ips_pages if has_trad else cfg.slc_cap_pages
-    cap_trad = cfg.coop_trad_pages if has_trad else 0
+    cap_basic = params.cap_basic
+    cap_trad = params.cap_trad
+    waste_p = params.waste_p
     ppb_slc = cfg.pages_per_slc_block
 
     c_mig = t_.slc_read_ms + t_.tlc_write_ms        # SLC -> TLC migration
     c_agc = t_.tlc_read_ms + t_.reprogram_ms        # AGC fill of used SLC
     c_trad_rp = t_.slc_read_ms + t_.reprogram_ms    # trad SLC -> IPS region
-    idle_thr = cfg.idle_threshold_ms
+    idle_thr = params.idle_thr
 
     def step(state: SimState, op):
         t, lba, kind = op["arrival_ms"], op["lba"], op["is_write"]
@@ -315,22 +353,27 @@ def make_step(cfg: SSDConfig, policy: str, *, closed_loop: bool,
     return step
 
 
+def as_ops(trace):
+    """Canonical traced op arrays for one padded trace."""
+    return {"arrival_ms": jnp.asarray(trace["arrival_ms"], jnp.float32),
+            "lba": jnp.asarray(trace["lba"], jnp.int32),
+            "is_write": jnp.asarray(trace["is_write"], jnp.int32)}
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "closed_loop",
                                              "n_logical"))
 def run_trace(cfg: SSDConfig, policy: str, trace, *, closed_loop: bool,
-              n_logical: int, waste_p=0.0):
+              n_logical: int, waste_p=0.0, params: CellParams | None = None):
     """Simulate one padded trace. Returns (per-op latency, final SimState).
 
-    waste_p is a traced scalar (per-workload AGC early-migration waste
-    probability) so all workloads share one compiled scan per
-    (policy, mode)."""
-    step = make_step(cfg, policy, closed_loop=closed_loop,
-                     waste_p=jnp.float32(waste_p))
+    `params` (or the shorthand `waste_p`) are traced per-cell scalars
+    (CellParams) so all workloads — and all sweep settings of cache size /
+    idle threshold — share one compiled scan per (policy, mode)."""
+    if params is None:
+        params = default_params(cfg, policy, waste_p)
+    step = make_step(cfg, policy, closed_loop=closed_loop, params=params)
     state0 = init_state(cfg, n_logical)
-    ops = {"arrival_ms": jnp.asarray(trace["arrival_ms"], jnp.float32),
-           "lba": jnp.asarray(trace["lba"], jnp.int32),
-           "is_write": jnp.asarray(trace["is_write"], jnp.int32)}
-    final, latency = jax.lax.scan(step, state0, ops)
+    final, latency = jax.lax.scan(step, state0, as_ops(trace))
     return latency, final
 
 

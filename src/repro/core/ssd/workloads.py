@@ -21,6 +21,7 @@ Two access modes (paper §III):
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Dict
 
@@ -86,7 +87,10 @@ def synthesize(name: str, total_logical_pages: int, seed: int = 0,
     independent of the compressed logical address window used to bound the
     simulator's page-table state."""
     st = TRACES[name]
-    rng = np.random.default_rng(abs(hash((name, seed))) % (2 ** 31))
+    # stable across processes (unlike hash(), which PYTHONHASHSEED
+    # randomizes): BENCH_*.json numbers must be reproducible run-to-run
+    rng = np.random.default_rng(
+        zlib.crc32(f"{name}/{seed}".encode()) % (2 ** 31))
     n = st.n_requests
     cap = capacity_pages or total_logical_pages
     ws = max(int(cap * st.working_set_frac), 1024)
@@ -132,11 +136,14 @@ def _to_ops(req, mode: str, total_logical_pages: int):
     else:
         raise ValueError(mode)
 
-    counts = reqs["pages"].astype(np.int64)
+    counts = np.asarray(reqs["pages"], np.int64)
     o = int(counts.sum())
     arrival = np.repeat(reqs["arrival_ms"], counts).astype(np.float32)
-    offs = np.concatenate([np.arange(c) for c in counts]) if o else np.zeros(0)
-    lba = (np.repeat(reqs["lba"], counts) + offs).astype(np.int64)
+    # NB: keep offs integer even when the trace is empty — a float64 empty
+    # array would silently promote the lba arithmetic below to float.
+    offs = (np.concatenate([np.arange(c) for c in counts]) if o
+            else np.zeros(0, np.int64))
+    lba = (np.repeat(np.asarray(reqs["lba"], np.int64), counts) + offs)
     lba = (lba % total_logical_pages).astype(np.int32)
     is_write = np.repeat(reqs["is_write"], counts).astype(np.int8)
     req_id = np.repeat(np.arange(len(counts)), counts).astype(np.int32)
@@ -162,7 +169,7 @@ def make_trace(name: str, total_logical_pages: int, mode: str = "daily",
     write size is varied ... by running workload repeatedly")."""
     req = synthesize(name, total_logical_pages, seed, capacity_pages)
     if repeat > 1:
-        span = req["arrival_ms"][-1] + 1.0
+        span = (req["arrival_ms"][-1] + 1.0) if len(req["arrival_ms"]) else 1.0
         req = {
             "arrival_ms": np.concatenate(
                 [req["arrival_ms"] + i * span for i in range(repeat)]),
@@ -171,3 +178,57 @@ def make_trace(name: str, total_logical_pages: int, mode: str = "daily",
             "is_write": np.tile(req["is_write"], repeat),
         }
     return _to_ops(req, mode, total_logical_pages)
+
+
+def truncate_trace(trace: dict, max_ops: int) -> dict:
+    """Cut a padded trace to its first `max_ops` ops (smoke runs / tests).
+
+    Keeps the op-array contract (no re-padding: max_ops becomes the padded
+    length) and clips `n_ops` accordingly."""
+    out = {k: (v[:max_ops] if isinstance(v, np.ndarray) else v)
+           for k, v in trace.items()}
+    out["n_ops"] = min(trace["n_ops"], max_ops)
+    return out
+
+
+def stack_traces(names, total_logical_pages: int, mode: str = "daily",
+                 seeds=(0,), capacity_pages: int | None = None,
+                 repeat: int = 1, max_ops: int | None = None):
+    """Build the (C, T) trace stack for a fleet run: one cell per
+    (name, seed), all re-padded to the group's common length.
+
+    Returns (cells, traces) where cells is a list of (name, seed) labels
+    and traces a list of padded per-cell trace dicts (feed to
+    fleet.stack_ops)."""
+    cells, traces = [], []
+    for name in names:
+        for seed in seeds:
+            tr = make_trace(name, total_logical_pages, mode=mode, seed=seed,
+                            capacity_pages=capacity_pages, repeat=repeat)
+            if max_ops is not None:
+                tr = truncate_trace(tr, max_ops)
+            cells.append((name, seed))
+            traces.append(tr)
+    target = max(len(t["arrival_ms"]) for t in traces)
+    traces = [_repad(t, target) for t in traces]
+    return cells, traces
+
+
+def _repad(trace: dict, target: int) -> dict:
+    """Extend a padded trace's arrays to `target` ops with padding no-ops."""
+    cur = len(trace["arrival_ms"])
+    if cur == target:
+        return trace
+    pad = target - cur
+    last_t = trace["arrival_ms"][-1] if cur else np.float32(0.0)
+    return {
+        "arrival_ms": np.concatenate(
+            [trace["arrival_ms"], np.full(pad, last_t, np.float32)]),
+        "lba": np.concatenate([trace["lba"], np.zeros(pad, np.int32)]),
+        "is_write": np.concatenate(
+            [trace["is_write"], np.full(pad, -1, np.int8)]),
+        "req_id": np.concatenate(
+            [trace["req_id"], np.full(pad, -1, np.int32)]),
+        "n_ops": trace["n_ops"],
+        "n_reqs": trace["n_reqs"],
+    }

@@ -43,13 +43,30 @@ def make_batch(cfg: DataConfig, step, *, shard_index: int = 0,
     logits = _zipf_logits(cfg.vocab_size, cfg.zipf_exponent)
     raw = jax.random.categorical(
         key, logits[None, None, :], shape=(local, cfg.seq_len))
-    # overlay short-range repetition: token[t] = token[t - R] half the time
+    # overlay short-range repetition: token[t] = token[t - R] half the time.
+    # Copy from the FINAL stream, not the raw draw — repeats then chain
+    # across blocks, so measured R-periodicity is the full coin rate (a raw
+    # copy halves it: the source position is itself overwritten half the
+    # time). Blockwise scan: block b sees block b-1's final tokens.
     r = cfg.ngram_repeat
     rep_key = jax.random.fold_in(key, 1)
     coin = jax.random.bernoulli(rep_key, 0.5, (local, cfg.seq_len))
-    rolled = jnp.roll(raw, r, axis=1)
-    tokens = jnp.where(coin & (jnp.arange(cfg.seq_len)[None, :] >= r),
-                       rolled, raw)
+    pad = (-cfg.seq_len) % r
+    n_blocks = (cfg.seq_len + pad) // r
+    raw_b = jnp.pad(raw, ((0, 0), (0, pad))).reshape(local, n_blocks, r)
+    coin_b = jnp.pad(coin, ((0, 0), (0, pad))).reshape(local, n_blocks, r)
+
+    def block(prev, xs):
+        raw_blk, coin_blk = xs
+        out = jnp.where(coin_blk, prev, raw_blk)
+        return out, out
+
+    _, blocks = jax.lax.scan(
+        block, raw_b[:, 0], (jnp.moveaxis(raw_b, 1, 0)[1:],
+                             jnp.moveaxis(coin_b, 1, 0)[1:]))
+    tokens = jnp.concatenate(
+        [raw_b[:, 0], jnp.moveaxis(blocks, 0, 1).reshape(local, -1)],
+        axis=1)[:, :cfg.seq_len]
     return {"tokens": tokens.astype(jnp.int32)}
 
 

@@ -1,0 +1,33 @@
+"""Parameter-sweep subsystem for the SSD fleet simulator.
+
+grid    — sweep-point definition + named grids (paper / quick / matrix)
+runner  — groups points into (policy, mode) fleets and runs them batched
+report  — baseline normalization + geomean aggregation
+store   — BENCH_*.json result store (cross-PR perf trajectory)
+cli     — `python -m repro.sweep.cli --grid paper` reproduces Figs. 9-12
+
+The runner re-exports are lazy (PEP 562): importing `repro.sweep` must not
+import jax, so the CLI can set XLA_FLAGS (host device count for cell
+sharding) before jax initializes.
+"""
+from repro.sweep.grid import (GRIDS, SweepPoint, expand_grid, matrix_grid,
+                              named_grid, paper_grid, quick_grid)
+from repro.sweep.report import (geomean, normalize_points,
+                                normalize_to_baseline, policy_geomeans)
+from repro.sweep.store import list_benches, load_bench, save_bench
+
+_LAZY = {"run_sweep": "repro.sweep.runner", "run_matrix": "repro.sweep.runner",
+         "bench_fleet_vs_loop": "repro.sweep.runner"}
+
+__all__ = ["GRIDS", "SweepPoint", "expand_grid", "matrix_grid", "named_grid",
+           "paper_grid", "quick_grid", "geomean", "normalize_points",
+           "normalize_to_baseline", "policy_geomeans", "list_benches",
+           "load_bench", "save_bench", "run_sweep", "run_matrix",
+           "bench_fleet_vs_loop"]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

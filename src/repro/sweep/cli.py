@@ -1,0 +1,146 @@
+"""Sweep CLI: `python -m repro.sweep.cli --grid paper` reproduces the
+paper's evaluation (Figs. 9-12) in one batched invocation.
+
+Examples (run with PYTHONPATH=src):
+
+  python -m repro.sweep.cli --grid paper            # full figure set
+  python -m repro.sweep.cli --grid quick --max-ops 8192   # CI smoke gate
+  python -m repro.sweep.cli --grid matrix --bench   # + fleet-vs-loop bench
+  python -m repro.sweep.cli --traces hm_0,stg_0 --policies ips,ips_agc
+
+Device sharding: before importing jax the CLI forces
+`--xla_force_host_platform_device_count=<n>` (default: all CPUs) so the
+fleet's cell axis shards across host devices; pass --devices 1 to disable.
+Results land in `BENCH_<name>.json` (sweep.store) for the cross-PR perf
+trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _parse(argv):
+    ap = argparse.ArgumentParser(
+        prog="repro.sweep.cli",
+        description="Batched parameter sweeps over the hybrid-SSD fleet "
+                    "simulator (paper Figs. 9-12).")
+    ap.add_argument("--grid", choices=("paper", "quick", "matrix"),
+                    default=None, help="named grid; omit to build one from "
+                    "--traces/--policies/--modes")
+    ap.add_argument("--traces", default=None,
+                    help="comma list (default: all 11)")
+    ap.add_argument("--policies", default="baseline,ips,ips_agc")
+    ap.add_argument("--modes", default="bursty,daily")
+    ap.add_argument("--seeds", default="0", help="comma list of RNG seeds")
+    ap.add_argument("--cache-fracs", default="1.0",
+                    help="comma list of SLC cache scale factors")
+    ap.add_argument("--scale", type=int, default=128,
+                    help="drive scale-down factor (DESIGN.md §2)")
+    ap.add_argument("--max-ops", type=int, default=None,
+                    help="truncate traces (smoke runs)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="host device count for cell sharding "
+                    "(default: cpu count; 1 disables)")
+    ap.add_argument("--bench", action="store_true",
+                    help="also wall-clock fleet vs looped eval_cell")
+    ap.add_argument("--name", default=None, help="benchmark artifact name "
+                    "(default: sweep_<grid>)")
+    ap.add_argument("--out-dir", default=".",
+                    help="where BENCH_<name>.json is written")
+    ap.add_argument("--no-save", action="store_true")
+    return ap.parse_args(argv)
+
+
+def _force_host_devices(n: int) -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def main(argv=None) -> int:
+    args = _parse(argv if argv is not None else sys.argv[1:])
+    n_dev = args.devices if args.devices else (os.cpu_count() or 1)
+    if n_dev > 1:
+        _force_host_devices(n_dev)
+
+    # heavy imports only after XLA_FLAGS is pinned
+    from repro.configs.ssd_paper import PAPER_SSD
+    from repro.sweep.grid import SweepPoint, expand_grid, named_grid
+    from repro.sweep.report import policy_geomeans
+    from repro.sweep.runner import bench_fleet_vs_loop, run_sweep
+    from repro.sweep.store import save_bench
+
+    cfg = PAPER_SSD.scaled(args.scale)
+    if args.grid:
+        points = named_grid(args.grid)
+    else:
+        from repro.core.ssd.sim import POLICIES
+        from repro.core.ssd.workloads import TRACE_NAMES
+        traces = tuple((args.traces or ",".join(TRACE_NAMES)).split(","))
+        policies = tuple(args.policies.split(","))
+        modes = tuple(args.modes.split(","))
+        for val, valid, flag in ((traces, TRACE_NAMES, "--traces"),
+                                 (policies, POLICIES, "--policies"),
+                                 (modes, ("bursty", "daily"), "--modes")):
+            bad = sorted(set(val) - set(valid))
+            if bad:
+                print(f"error: unknown {flag} value(s) {','.join(bad)}; "
+                      f"valid: {','.join(valid)}", file=sys.stderr)
+                return 2
+        points = expand_grid(
+            traces=traces, modes=modes, policies=policies,
+            seeds=tuple(int(s) for s in args.seeds.split(",")),
+            cache_fracs=tuple(float(c) for c in args.cache_fracs.split(",")))
+
+    print(f"sweep: {len(points)} cells on a 1/{args.scale} drive "
+          f"({cfg.capacity_gb:.1f} GB, SLC cache "
+          f"{cfg.slc_cap_pages * cfg.num_planes} pages)")
+    results = run_sweep(cfg, points, max_ops=args.max_ops,
+                        progress=lambda s: print(f"  {s}"))
+
+    _print_table(results)
+
+    payload = {"grid": args.grid or "custom", "n_cells": len(points),
+               "max_ops": args.max_ops, "scale": args.scale,
+               "results": results,
+               "geomeans": {f"{m}/{p}": v for (m, p), v in
+                            policy_geomeans(results).items()}}
+    if args.bench:
+        print("\nbenchmark: fleet vs looped eval_cell (full matrix) ...")
+        bench = bench_fleet_vs_loop(cfg)
+        print(f"  loop {bench['loop_wall_s']:.1f}s -> fleet "
+              f"{bench['fleet_wall_s']:.1f}s  "
+              f"(speedup {bench['speedup']:.2f}x, max rel diff "
+              f"{bench['max_rel_diff']:.2e})")
+        payload["fleet_vs_loop"] = {k: v for k, v in bench.items()
+                                    if k != "results"}
+    if not args.no_save:
+        name = args.name or f"sweep_{args.grid or 'custom'}"
+        path = save_bench(name, payload, directory=args.out_dir, cfg=cfg)
+        print(f"\nwrote {path}")
+    return 0
+
+
+def _print_table(results) -> None:
+    from repro.sweep.report import normalize_points, policy_geomeans
+    lat = normalize_points(results, "mean_write_latency_ms")
+    wa = normalize_points(results, "wa_paper")
+    if lat:
+        print(f"\n{'cell':<40}{'lat/base':>10}{'wa/base':>10}")
+        for point in sorted(lat, key=lambda p: p.key):
+            print(f"{point.key:<40}{lat[point]:>10.3f}"
+                  f"{wa.get(point, float('nan')):>10.3f}")
+    print("\n=== geomeans vs baseline (paper targets: ips bursty 0.77, "
+          "ips daily 1.3/0.53, agc daily 0.75/0.59, coop daily 0.78/0.67)"
+          " ===")
+    for (mode, policy), v in sorted(policy_geomeans(results).items()):
+        print(f"{mode:>7} {policy:<8} "
+              f"lat={v.get('mean_write_latency_ms', float('nan')):.3f} "
+              f"wa={v.get('wa_paper', float('nan')):.3f}  (n={v['n']})")
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

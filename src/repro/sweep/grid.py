@@ -1,0 +1,111 @@
+"""Sweep-grid definition: the cell is a `SweepPoint`, grids are lists.
+
+A point pins everything that identifies one simulated cell: workload trace,
+access mode, policy, RNG seed, write-volume repeat factor (paper Fig. 12a),
+cache-size fraction (Fig. 12b sensitivity) and an optional idle-threshold
+override. Points whose knobs only differ in *traced* quantities (seed,
+cache_frac, idle threshold, waste_p) share one compiled scan; policy, mode
+and padded trace length split compilation groups (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, replace
+from typing import Iterable, Optional, Sequence
+
+__all__ = ["SweepPoint", "expand_grid", "matrix_grid", "paper_grid",
+           "quick_grid", "named_grid", "GRIDS"]
+
+# NB: no repro.core.ssd import at module level — `import repro.sweep` must
+# stay jax-free so the CLI can pin XLA_FLAGS before jax initializes.
+
+
+@dataclass(frozen=True)
+class SweepPoint:
+    trace: str
+    mode: str                      # "bursty" | "daily"
+    policy: str                    # sim.POLICIES
+    seed: int = 0
+    repeat: int = 1                # write-volume multiplier (Fig. 12a)
+    cache_frac: float = 1.0        # scales SLC regions (Fig. 12b)
+    idle_threshold_ms: Optional[float] = None
+    waste_p: Optional[float] = None  # None -> per-trace calibration
+
+    @property
+    def key(self) -> str:
+        """Result-store key: `trace/mode/policy[&qualifiers]`. The base
+        triple stays unqualified so baseline normalization pairs cells."""
+        quals = []
+        if self.seed:
+            quals.append(f"seed={self.seed}")
+        if self.repeat != 1:
+            quals.append(f"rep={self.repeat}")
+        if self.cache_frac != 1.0:
+            quals.append(f"cache={self.cache_frac:g}")
+        if self.idle_threshold_ms is not None:
+            quals.append(f"idle={self.idle_threshold_ms:g}")
+        base = f"{self.trace}/{self.mode}/{self.policy}"
+        return base + (f"&{','.join(quals)}" if quals else "")
+
+    def baseline_point(self) -> "SweepPoint":
+        """The cell this point normalizes against: same everything,
+        baseline policy."""
+        return replace(self, policy="baseline", waste_p=None)
+
+
+def expand_grid(traces: Optional[Iterable[str]] = None,
+                modes: Sequence[str] = ("bursty", "daily"),
+                policies: Sequence[str] = ("baseline", "ips", "ips_agc"),
+                seeds: Sequence[int] = (0,),
+                repeats: Sequence[int] = (1,),
+                cache_fracs: Sequence[float] = (1.0,)) -> list[SweepPoint]:
+    """Full cartesian product — traces x modes x policies x seeds x
+    repeats x cache fractions. traces=None means all 11 MSR-like traces."""
+    if traces is None:
+        from repro.core.ssd.workloads import TRACE_NAMES
+        traces = TRACE_NAMES
+    return [SweepPoint(trace=t, mode=m, policy=p, seed=s, repeat=r,
+                       cache_frac=c)
+            for t, m, p, s, r, c in itertools.product(
+                traces, modes, policies, seeds, repeats, cache_fracs)]
+
+
+def matrix_grid(policies=("baseline", "ips", "ips_agc"),
+                seeds=(0,)) -> list[SweepPoint]:
+    """The paper's headline matrix: 11 traces x {bursty, daily} x
+    policies (Figs. 9-11)."""
+    return expand_grid(policies=policies, seeds=seeds)
+
+
+def paper_grid() -> list[SweepPoint]:
+    """Everything behind Figs. 9-12 in one grid:
+
+    * headline matrix, all four policies (Figs. 9-11 + coop rows of 12)
+    * write-volume sweep: hm_0 bursty, coop vs equal-capacity baseline is
+      handled by the runner's normalization; repeats 2/4/7 (Fig. 12a)
+    * cache-size sensitivity: hm_0/proj_0 daily at 0.5x/2x cache
+      (Fig. 12b analogue)
+    """
+    pts = expand_grid(policies=("baseline", "ips", "ips_agc", "coop"))
+    pts += expand_grid(traces=("hm_0",), modes=("bursty",),
+                       policies=("baseline", "coop"), repeats=(2, 4, 7))
+    pts += expand_grid(traces=("hm_0", "proj_0"), modes=("daily",),
+                       policies=("baseline", "ips_agc"),
+                       cache_fracs=(0.5, 2.0))
+    return pts
+
+
+def quick_grid() -> list[SweepPoint]:
+    """2-trace smoke grid (CI gate): both modes, baseline + ips."""
+    return expand_grid(traces=("hm_0", "hm_1"),
+                       policies=("baseline", "ips"))
+
+
+GRIDS = {"paper": paper_grid, "quick": quick_grid, "matrix": matrix_grid}
+
+
+def named_grid(name: str) -> list[SweepPoint]:
+    try:
+        return GRIDS[name]()
+    except KeyError:
+        raise ValueError(f"unknown grid {name!r}; choose from {sorted(GRIDS)}")

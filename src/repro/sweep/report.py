@@ -1,0 +1,84 @@
+"""Reporting: baseline normalization + geomean aggregation.
+
+Lifted out of `repro.core.ssd.driver` so every consumer (driver matrix,
+benchmarks, sweep CLI) shares one implementation. The paper reports every
+policy metric normalized per (workload, mode) to the Turbo-Write baseline,
+then aggregated across workloads with means; we use geometric means, which
+are the right aggregate for ratios.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping
+
+import numpy as np
+
+__all__ = ["geomean", "normalize_to_baseline", "normalize_points",
+           "policy_geomeans"]
+
+
+def geomean(values) -> float:
+    vals = np.asarray(list(values), dtype=np.float64)
+    vals = np.maximum(vals, 1e-12)
+    return float(np.exp(np.mean(np.log(vals))))
+
+
+def _split_key(key: str):
+    """`trace/mode/policy[&quals]` -> (trace, mode, policy, quals)."""
+    base, _, quals = key.partition("&")
+    trace, mode, policy = base.split("/")
+    return trace, mode, policy, quals
+
+
+def normalize_to_baseline(results: Mapping[str, Dict], metric: str
+                          ) -> Dict[str, float]:
+    """Per (workload, mode, qualifiers): metric[policy] / metric[baseline].
+
+    Keys are `trace/mode/policy[&quals]`; a cell normalizes against the
+    baseline cell with identical trace/mode/qualifiers, so e.g. a 0.5x
+    cache-size ips_agc cell divides by the 0.5x cache-size baseline."""
+    out = {}
+    for key, val in results.items():
+        trace, mode, policy, quals = _split_key(key)
+        if policy == "baseline":
+            continue
+        base_key = f"{trace}/{mode}/baseline" + (f"&{quals}" if quals else "")
+        base = results.get(base_key)
+        if base is None:
+            continue
+        out[key] = val[metric] / max(base[metric], 1e-12)
+    return out
+
+
+def normalize_points(results: Mapping, metric: str) -> Dict:
+    """SweepPoint-keyed variant: normalize each non-baseline point against
+    its `baseline_point()` (same trace/mode/seed/repeat/cache/idle)."""
+    out = {}
+    for point, val in results.items():
+        if point.policy == "baseline":
+            continue
+        base = results.get(point.baseline_point())
+        if base is None:
+            continue
+        out[point] = val[metric] / max(base[metric], 1e-12)
+    return out
+
+
+def policy_geomeans(results: Mapping, metrics=("mean_write_latency_ms",
+                                               "wa_paper")) -> Dict:
+    """Geomean of baseline-normalized metrics per (mode, policy) over the
+    unqualified headline cells (the paper's summary numbers).
+
+    Accepts SweepPoint-keyed results. Returns
+    {(mode, policy): {metric: geomean_ratio, "n": count}}."""
+    agg: Dict = {}
+    for metric in metrics:
+        norm = normalize_points(results, metric)
+        for point, ratio in norm.items():
+            if (point.seed, point.repeat, point.cache_frac,
+                    point.idle_threshold_ms) != (0, 1, 1.0, None):
+                continue
+            agg.setdefault((point.mode, point.policy), {}).setdefault(
+                metric, []).append(ratio)
+    return {k: {m: geomean(v) for m, v in d.items()}
+            | {"n": max(len(v) for v in d.values())}
+            for k, d in agg.items()}

@@ -1,0 +1,176 @@
+"""Fleet sweep runner: batch sweep points into compiled fleets.
+
+Points are grouped by everything that forces a fresh XLA compilation —
+(policy, mode, padded trace length). Each group becomes ONE
+`fleet.run_fleet` call: a `vmap(lax.scan)` over the stacked (C, T) trace
+tensor with per-cell traced `CellParams`, sharded across the process's JAX
+devices. Traces are built once per (trace, seed, mode, repeat) and shared
+across the policies that consume them.
+
+`driver.eval_cell` remains the single-cell reference path; equivalence is
+bit-for-bit (tests/test_fleet.py) because both paths run the same
+`make_step` with the same traced params.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from typing import Dict, Iterable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.ssd import fleet
+from repro.core.ssd.config import SSDConfig
+# driver is the single-cell reference path: share its constants/calibration
+# so the fleet and reference paths cannot diverge (no cycle: driver only
+# imports repro.sweep.report, and this module is imported lazily by it)
+from repro.core.ssd.driver import LOGICAL_SPACE_CAP, _agc_waste_p
+from repro.core.ssd.sim import default_params
+from repro.core.ssd.workloads import make_trace, truncate_trace
+from repro.sweep.grid import SweepPoint
+
+__all__ = ["run_sweep", "run_matrix", "bench_fleet_vs_loop"]
+
+
+def _n_logical(cfg: SSDConfig) -> int:
+    return min(cfg.total_pages, LOGICAL_SPACE_CAP)
+
+
+def _cell_params(cfg: SSDConfig, point: SweepPoint):
+    """Per-point CellParams: driver calibration for waste_p unless pinned,
+    cache_frac scaling, idle override — all traced, never a recompile."""
+    import jax.numpy as jnp
+    wp = point.waste_p if point.waste_p is not None \
+        else _agc_waste_p(point.trace)
+    p = default_params(cfg, point.policy, wp)
+    if point.cache_frac != 1.0:
+        p = p._replace(
+            cap_basic=jnp.int32(max(int(int(p.cap_basic)
+                                        * point.cache_frac), 4)),
+            cap_trad=jnp.int32(int(int(p.cap_trad) * point.cache_frac)))
+    if point.idle_threshold_ms is not None:
+        p = p._replace(idle_thr=jnp.float32(point.idle_threshold_ms))
+    return p
+
+
+def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
+              max_ops: Optional[int] = None,
+              progress=None) -> Dict[SweepPoint, Dict[str, float]]:
+    """Run every sweep point batched; returns {point: metrics}.
+
+    max_ops truncates traces (smoke/CI runs). `progress` is an optional
+    callable(str) for per-group status lines."""
+    import jax
+
+    n_logical = _n_logical(cfg)
+    n_dev = len(jax.devices())
+
+    # one trace per (trace, seed, mode, repeat), shared across policies
+    trace_cache: Dict[tuple, dict] = {}
+
+    def cell_trace(pt: SweepPoint) -> dict:
+        key = (pt.trace, pt.seed, pt.mode, pt.repeat)
+        if key not in trace_cache:
+            tr = make_trace(pt.trace, n_logical, mode=pt.mode, seed=pt.seed,
+                            capacity_pages=cfg.total_pages, repeat=pt.repeat)
+            if max_ops is not None:
+                tr = truncate_trace(tr, max_ops)
+            trace_cache[key] = tr
+        return trace_cache[key]
+
+    groups: Dict[tuple, list] = defaultdict(list)
+    for pt in points:
+        groups[(pt.policy, pt.mode, len(cell_trace(pt)["arrival_ms"]))] \
+            .append(pt)
+
+    results: Dict[SweepPoint, Dict[str, float]] = {}
+    for (policy, mode, _t_len), pts in sorted(groups.items()):
+        traces = [cell_trace(p) for p in pts]
+        params = [_cell_params(cfg, p) for p in pts]
+        # pad the cell axis to a device-count multiple so shard_cells can
+        # lay it across the mesh; padded cells replay the last cell and are
+        # dropped below.
+        n_cells = len(pts)
+        pad = (-n_cells) % n_dev
+        traces += [traces[-1]] * pad
+        params += [params[-1]] * pad
+
+        ops = fleet.shard_cells(fleet.stack_ops(traces))
+        stacked = fleet.shard_cells(fleet.stack_params(params))
+        if progress:
+            progress(f"fleet {policy}/{mode}: {n_cells} cells"
+                     f"{f' (+{pad} pad)' if pad else ''} x {_t_len} ops"
+                     f" on {n_dev} device(s)")
+        latency, states = fleet.run_fleet(
+            cfg, policy, ops, stacked,
+            closed_loop=(mode == "bursty"), n_logical=n_logical)
+        if mode == "daily":
+            states = fleet.flush_fleet(cfg, states, policy)
+        summ = fleet.summarize_fleet(latency, ops["is_write"], states)
+        summ = {k: np.asarray(v) for k, v in summ.items()}
+        for i, pt in enumerate(pts):
+            out = {k: float(v[i]) for k, v in summ.items()}
+            out["n_ops"] = traces[i]["n_ops"]
+            results[pt] = out
+    return results
+
+
+def run_matrix(cfg: SSDConfig, *,
+               policies: Sequence[str] = ("baseline", "ips", "ips_agc"),
+               modes: Sequence[str] = ("bursty", "daily"),
+               names: Optional[Iterable[str]] = None, seed: int = 0,
+               max_ops: Optional[int] = None) -> Dict[str, Dict]:
+    """Fleet-backed evaluation matrix in `driver.eval_matrix` key format
+    (`trace/mode/policy`)."""
+    from repro.core.ssd.workloads import TRACE_NAMES
+    names = tuple(names or TRACE_NAMES)
+    points = [SweepPoint(trace=n, mode=m, policy=p, seed=seed)
+              for m in modes for n in names for p in policies]
+    res = run_sweep(cfg, points, max_ops=max_ops)
+    return {f"{pt.trace}/{pt.mode}/{pt.policy}": v for pt, v in res.items()}
+
+
+def bench_fleet_vs_loop(cfg: SSDConfig, *,
+                        policies=("baseline", "ips", "ips_agc"),
+                        modes=("bursty", "daily"),
+                        names: Optional[Iterable[str]] = None,
+                        progress=None) -> Dict:
+    """Wall-clock the fleet matrix against the looped `eval_cell` reference
+    on identical cells; verifies per-cell metric equivalence.
+
+    Returns a JSON-ready dict (feed to sweep.store.save_bench)."""
+    from repro.core.ssd.driver import eval_cell
+    from repro.core.ssd.workloads import TRACE_NAMES
+    names = tuple(names or TRACE_NAMES)
+
+    t0 = time.perf_counter()
+    fleet_res = run_matrix(cfg, policies=policies, modes=modes, names=names)
+    fleet_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    loop_res = {}
+    for mode in modes:
+        for name in names:
+            for policy in policies:
+                if progress:
+                    progress(f"loop {name}/{mode}/{policy}")
+                loop_res[f"{name}/{mode}/{policy}"] = eval_cell(
+                    cfg, name, policy, mode)
+    loop_s = time.perf_counter() - t0
+
+    max_rel = 0.0
+    for key, ref in loop_res.items():
+        got = fleet_res[key]
+        for metric, rv in ref.items():
+            rel = abs(got[metric] - rv) / max(abs(rv), 1e-9)
+            max_rel = max(max_rel, rel)
+    return {
+        "n_cells": len(loop_res),
+        "policies": list(policies), "modes": list(modes),
+        "names": list(names),
+        "loop_wall_s": round(loop_s, 3),
+        "fleet_wall_s": round(fleet_s, 3),
+        "speedup": round(loop_s / max(fleet_s, 1e-9), 3),
+        "max_rel_diff": max_rel,
+        "results": fleet_res,
+    }

@@ -1,0 +1,78 @@
+"""BENCH_*.json result store: sweep results + run metadata on disk.
+
+One JSON artifact per named benchmark run. Artifacts are committed at the
+repo root (`BENCH_<name>.json`) so the perf trajectory is reviewable
+across PRs: each file carries enough metadata (devices, jax version,
+config, grid, wall-clocks) to compare runs between commits.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import time
+from typing import Dict, Optional
+
+__all__ = ["save_bench", "load_bench", "list_benches"]
+
+SCHEMA_VERSION = 1
+
+
+def _run_meta() -> Dict:
+    import jax
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+    }
+
+
+def _point_key(k) -> str:
+    return k if isinstance(k, str) else k.key
+
+
+def save_bench(name: str, payload: Dict, *, directory: str = ".",
+               cfg=None, extra_meta: Optional[Dict] = None) -> str:
+    """Write `BENCH_<name>.json` and return its path.
+
+    payload["results"] may be keyed by SweepPoint (serialized via .key) or
+    by string; everything else must already be JSON-compatible."""
+    doc = {"name": name, "meta": _run_meta()}
+    if cfg is not None:
+        import dataclasses
+        doc["config"] = dataclasses.asdict(cfg)
+    if extra_meta:
+        doc["meta"].update(extra_meta)
+    payload = dict(payload)
+    if "results" in payload:
+        payload["results"] = {_point_key(k): v
+                              for k, v in payload["results"].items()}
+    doc.update(payload)
+    path = os.path.join(directory, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_bench(path: str) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def list_benches(directory: str = ".") -> Dict[str, Dict]:
+    """All BENCH_*.json in a directory, keyed by bench name — the raw
+    material for a cross-PR perf trajectory report."""
+    out = {}
+    for fn in sorted(os.listdir(directory)):
+        if fn.startswith("BENCH_") and fn.endswith(".json"):
+            try:
+                doc = load_bench(os.path.join(directory, fn))
+            except (json.JSONDecodeError, OSError):
+                continue
+            out[doc.get("name", fn[6:-5])] = doc
+    return out

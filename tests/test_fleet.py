@@ -1,0 +1,213 @@
+"""Fleet + sweep subsystem tests.
+
+The load-bearing contract: `fleet.run_fleet` (batched vmap(scan)) is
+bit-for-bit identical to the single-cell reference `sim.run_trace` /
+`driver.eval_cell` — same latencies, same counters, same final state — on
+3 traces x 2 policies x both modes. Everything else (grid expansion,
+normalization, store round-trip, empty-trace type safety) rides along.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs.ssd_paper import PAPER_SSD
+from repro.core.ssd import fleet
+from repro.core.ssd.driver import _agc_waste_p
+from repro.core.ssd.sim import CTR, default_params, run_trace
+from repro.core.ssd.workloads import (PAD_OPS, _to_ops, make_trace,
+                                      stack_traces, truncate_trace)
+from repro.sweep.grid import SweepPoint, expand_grid, named_grid, paper_grid
+from repro.sweep.report import (geomean, normalize_points,
+                                normalize_to_baseline, policy_geomeans)
+from repro.sweep.runner import run_sweep
+from repro.sweep.store import list_benches, load_bench, save_bench
+
+CFG = PAPER_SSD.scaled(128)
+N_LOGICAL = min(CFG.total_pages, 1 << 16)
+NAMES = ("hm_0", "stg_0", "hm_1")
+MAX_OPS = 8192          # truncated traces: full-scan equivalence is implied
+#                         because the scan step has no length dependence
+
+
+@pytest.fixture(scope="module", params=["bursty", "daily"])
+def mode(request):
+    return request.param
+
+
+def _cells(mode):
+    _, traces = stack_traces(NAMES, N_LOGICAL, mode=mode,
+                             capacity_pages=CFG.total_pages, max_ops=MAX_OPS)
+    waste = [_agc_waste_p(n) for n in NAMES]
+    return traces, waste
+
+
+class TestFleetEquivalence:
+    @pytest.mark.parametrize("policy", ["baseline", "ips_agc"])
+    def test_bit_for_bit_vs_run_trace(self, mode, policy):
+        traces, waste = _cells(mode)
+        params = fleet.stack_params(
+            [default_params(CFG, policy, w) for w in waste])
+        lat_f, st_f = fleet.run_fleet(
+            CFG, policy, fleet.stack_ops(traces), params,
+            closed_loop=(mode == "bursty"), n_logical=N_LOGICAL)
+        for i, (tr, w) in enumerate(zip(traces, waste)):
+            lat_r, st_r = run_trace(CFG, policy, tr,
+                                    closed_loop=(mode == "bursty"),
+                                    n_logical=N_LOGICAL, waste_p=w)
+            assert np.array_equal(np.asarray(lat_r), np.asarray(lat_f[i])), \
+                f"latency mismatch cell {NAMES[i]}"
+            for field in st_r._fields:
+                assert np.array_equal(
+                    np.asarray(getattr(st_r, field)),
+                    np.asarray(getattr(st_f, field)[i])), \
+                    f"state.{field} mismatch cell {NAMES[i]}"
+
+    def test_traced_cache_size_matches_static_config(self):
+        """cache_frac through traced CellParams == shrinking the config."""
+        import dataclasses
+        tr = truncate_trace(
+            make_trace("hm_0", N_LOGICAL, mode="bursty",
+                       capacity_pages=CFG.total_pages), MAX_OPS)
+        half = default_params(CFG, "baseline", 0.0)._replace(
+            cap_basic=np.int32(CFG.slc_cap_pages // 2))
+        lat_traced, _ = run_trace(CFG, "baseline", tr, closed_loop=True,
+                                  n_logical=N_LOGICAL, params=half)
+        small = dataclasses.replace(CFG, slc_cache_gb=CFG.slc_cache_gb / 2)
+        assert small.slc_cap_pages == CFG.slc_cap_pages // 2
+        lat_static, _ = run_trace(small, "baseline", tr, closed_loop=True,
+                                  n_logical=N_LOGICAL)
+        assert np.array_equal(np.asarray(lat_traced), np.asarray(lat_static))
+
+    def test_summarize_fleet_matches_per_cell(self, mode):
+        traces, waste = _cells(mode)
+        policy = "ips"
+        params = fleet.stack_params(
+            [default_params(CFG, policy, w) for w in waste])
+        ops = fleet.stack_ops(traces)
+        lat, st = fleet.run_fleet(CFG, policy, ops, params,
+                                  closed_loop=(mode == "bursty"),
+                                  n_logical=N_LOGICAL)
+        if mode == "daily":
+            st = fleet.flush_fleet(CFG, st, policy)
+        summ = fleet.summarize_fleet(lat, ops["is_write"], st)
+        assert np.asarray(summ["host_pages"]).shape == (len(traces),)
+        # counters flow through: host pages = slc + tlc + reprogrammed
+        c = np.asarray(st.counters)
+        assert np.allclose(c[:, CTR["slc_w"]] + c[:, CTR["tlc_w"]]
+                           + c[:, CTR["rp_host"]], c[:, CTR["host_w"]])
+
+
+class TestRunSweep:
+    def test_matches_reference_and_pads_cells(self):
+        from repro.core.ssd.driver import eval_cell
+        points = [SweepPoint("hm_0", "daily", p) for p in
+                  ("baseline", "ips")]
+        res = run_sweep(CFG, points, max_ops=MAX_OPS)
+        assert set(res) == set(points)
+        for pt in points:
+            got = res[pt]
+            assert got["n_ops"] == MAX_OPS
+            assert got["wa_paper"] >= 1.0
+        # normalization pairs the cells
+        norm = normalize_points(res, "wa_paper")
+        assert list(norm) == [points[1]]
+
+    def test_full_trace_cell_equals_eval_cell(self):
+        """One untruncated daily cell through the sweep runner must equal
+        the reference eval_cell bit-for-bit (incl. flush + summarize)."""
+        from repro.core.ssd.driver import eval_cell
+        pt = SweepPoint("hm_1", "daily", "ips_agc")
+        got = run_sweep(CFG, [pt])[pt]
+        ref = eval_cell(CFG, "hm_1", "ips_agc", "daily")
+        assert got == ref
+
+
+class TestGridAndReport:
+    def test_expand_grid_cartesian(self):
+        pts = expand_grid(traces=("a", "b"), modes=("daily",),
+                          policies=("baseline", "ips"), seeds=(0, 1),
+                          cache_fracs=(1.0, 0.5))
+        assert len(pts) == 2 * 1 * 2 * 2 * 2
+        assert len(set(pts)) == len(pts)
+
+    def test_point_keys_and_baseline_pairing(self):
+        pt = SweepPoint("hm_0", "daily", "ips", seed=2, cache_frac=0.5)
+        assert pt.key == "hm_0/daily/ips&seed=2,cache=0.5"
+        assert pt.baseline_point().key == "hm_0/daily/baseline&seed=2,cache=0.5"
+        assert SweepPoint("hm_0", "daily", "ips").key == "hm_0/daily/ips"
+
+    def test_named_grids(self):
+        assert len(named_grid("quick")) == 8
+        paper = paper_grid()
+        assert SweepPoint("hm_0", "bursty", "coop", repeat=4) in paper
+        assert len({(p.trace, p.mode, p.policy) for p in paper}) <= len(paper)
+        with pytest.raises(ValueError):
+            named_grid("nope")
+
+    def test_normalize_to_baseline_with_qualifiers(self):
+        res = {"a/daily/baseline": {"m": 2.0}, "a/daily/ips": {"m": 1.0},
+               "a/daily/baseline&cache=0.5": {"m": 4.0},
+               "a/daily/ips&cache=0.5": {"m": 1.0},
+               "b/daily/ips": {"m": 9.0}}   # no baseline -> dropped
+        norm = normalize_to_baseline(res, "m")
+        assert norm == {"a/daily/ips": 0.5, "a/daily/ips&cache=0.5": 0.25}
+
+    def test_policy_geomeans_headline_only(self):
+        res = {SweepPoint("a", "daily", "baseline"): {"mean_write_latency_ms": 2.0,
+                                                      "wa_paper": 2.0},
+               SweepPoint("a", "daily", "ips"): {"mean_write_latency_ms": 1.0,
+                                                 "wa_paper": 1.0},
+               SweepPoint("a", "daily", "baseline", cache_frac=0.5):
+                   {"mean_write_latency_ms": 1.0, "wa_paper": 1.0},
+               SweepPoint("a", "daily", "ips", cache_frac=0.5):
+                   {"mean_write_latency_ms": 9.0, "wa_paper": 9.0}}
+        gm = policy_geomeans(res)
+        assert gm[("daily", "ips")]["mean_write_latency_ms"] == \
+            pytest.approx(0.5)          # cache_frac cells excluded
+        assert gm[("daily", "ips")]["n"] == 1
+        assert geomean([2.0, 8.0]) == pytest.approx(4.0)
+
+
+class TestStore:
+    def test_round_trip_and_listing(self, tmp_path):
+        res = {SweepPoint("hm_0", "daily", "ips"): {"wa_paper": 1.25}}
+        path = save_bench("unit", {"results": res, "speedup": 3.5},
+                          directory=str(tmp_path), cfg=CFG)
+        doc = load_bench(path)
+        assert doc["name"] == "unit"
+        assert doc["results"]["hm_0/daily/ips"]["wa_paper"] == 1.25
+        assert doc["speedup"] == 3.5
+        assert doc["config"]["blocks_per_plane"] == CFG.blocks_per_plane
+        assert doc["meta"]["device_count"] >= 1
+        assert list_benches(str(tmp_path))["unit"]["speedup"] == 3.5
+        # artifact is valid, stable JSON
+        json.dumps(doc)
+
+
+class TestWorkloadsEdgeCases:
+    def test_empty_trace_is_type_safe(self):
+        req = {"arrival_ms": np.zeros(0), "lba": np.zeros(0, np.int64),
+               "pages": np.zeros(0, np.int64),
+               "is_write": np.zeros(0, bool)}
+        out = _to_ops(req, "daily", N_LOGICAL)
+        assert out["n_ops"] == 0 and out["n_reqs"] == 0
+        assert out["lba"].dtype == np.int32
+        assert out["is_write"].dtype == np.int8
+        assert out["arrival_ms"].dtype == np.float32
+        assert len(out["lba"]) == PAD_OPS
+        assert (out["is_write"] == -1).all()
+
+    def test_stack_traces_repads_to_group_max(self):
+        _, traces = stack_traces(("hm_0",), N_LOGICAL, mode="bursty",
+                                 capacity_pages=CFG.total_pages, repeat=2)
+        short = truncate_trace(traces[0], 1000)
+        from repro.core.ssd.workloads import _repad
+        long = _repad(short, len(traces[0]["arrival_ms"]))
+        assert len(long["lba"]) == len(traces[0]["arrival_ms"])
+        assert long["n_ops"] == short["n_ops"]
+        assert (long["is_write"][1000:] == -1).all()
+        ops = fleet.stack_ops([long, traces[0]])
+        assert ops["lba"].shape[0] == 2
+        with pytest.raises(ValueError):
+            fleet.stack_ops([short, traces[0]])

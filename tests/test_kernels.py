@@ -232,7 +232,8 @@ class TestFlashVjpProperties:
         return jnp.einsum("bhqc,bchd->bqhd", w, vf)
 
     def test_property_sweep(self):
-        from hypothesis import given, settings, strategies as st
+        hyp = pytest.importorskip("hypothesis")
+        given, settings, st = hyp.given, hyp.settings, hyp.strategies
         from repro.models.attention import attend_chunked
 
         @settings(max_examples=12, deadline=None)

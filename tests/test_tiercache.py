@@ -5,7 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # hypothesis is optional (requirements.txt):
+    HAVE_HYPOTHESIS = False  # fall back to a small deterministic grid
 
 from repro.core.tiercache.layout import TierSpec, gqa_layer_zeros
 from repro.core.tiercache.manager import serve_tick, zero_metrics
@@ -89,11 +94,29 @@ def test_density_switch_frees_capacity():
     assert dense_bytes_per_tok < 0.32 * hot_bytes_per_tok
 
 
+def _property_watermark(test):
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=20, deadline=None)(given(
+            n=st.integers(1, 60), policy=st.sampled_from(list(Policy)),
+            seed=st.integers(0, 100))(test))
+    return pytest.mark.parametrize(
+        "n,policy,seed",
+        [(n, policy, 11) for n in (1, 17, 60) for policy in Policy])(test)
+
+
+def _property_quant(test):
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=20, deadline=None)(given(
+            feat=st.sampled_from([32, 64, 128]),
+            group=st.sampled_from([16, 32]),
+            seed=st.integers(0, 1000))(test))
+    return pytest.mark.parametrize(
+        "feat,group,seed",
+        [(feat, group, 3) for feat in (32, 128) for group in (16, 32)])(test)
+
+
 class TestProperties:
-    @settings(max_examples=20, deadline=None)
-    @given(n=st.integers(1, 60),
-           policy=st.sampled_from(list(Policy)),
-           seed=st.integers(0, 100))
+    @_property_watermark
     def test_watermark_invariants(self, n, policy, seed):
         cache = _fresh_cache()
         metrics = zero_metrics()
@@ -113,10 +136,7 @@ class TestProperties:
         assert (float(metrics["repack_tokens"])
                 == dense)                              # exact accounting
 
-    @settings(max_examples=20, deadline=None)
-    @given(feat=st.sampled_from([32, 64, 128]),
-           group=st.sampled_from([16, 32]),
-           seed=st.integers(0, 1000))
+    @_property_quant
     def test_quant_idempotent_and_bounded(self, feat, group, seed):
         x = jax.random.normal(jax.random.PRNGKey(seed), (4, feat))
         p1, s1 = quantize_int4(x, group)

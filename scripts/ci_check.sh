@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI smoke gate: tier-1 tests + a fast 2-trace fleet sweep.
+# CI smoke gate: tier-1 tests + fast fleet sweeps (synthetic + real-trace).
 #
 # Usage: bash scripts/ci_check.sh
 # Runs from the repo root regardless of invocation directory.
@@ -9,14 +9,20 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1: pytest =="
-# One ssd_scan kernel shape fails since the seed commit (pallas vs ref
-# mismatch) — tracked in ROADMAP.md open items; gate on everything else.
-python -m pytest -x -q \
-  --deselect "tests/test_kernels.py::TestSsdScan::test_intra_matches_ref[64-2-64-32]"
+python -m pytest -x -q
+
+echo
+echo "== workload engine: IR / parsers / generators / cache =="
+python -m pytest -q tests/test_workloads.py
 
 echo
 echo "== smoke: 2-trace fleet sweep (quick grid, truncated traces) =="
 python -m repro.sweep.cli --grid quick --max-ops 8192 --no-save
+
+echo
+echo "== smoke: real-trace fixture through the fleet path =="
+python -m repro.sweep.cli --trace-file tests/data/sample_msr.csv \
+  --policies baseline,ips --modes daily --max-ops 4096 --no-save
 
 echo
 echo "ci_check: OK"

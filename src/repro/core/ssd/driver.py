@@ -49,14 +49,21 @@ def eval_cell(cfg: SSDConfig, name: str, policy: str, mode: str,
     return out
 
 
-def _agc_waste_p(name: str) -> float:
+def agc_waste_from_stats(st) -> float:
     """AGC early-migration waste: pages migrated in advance that get
     invalidated before they would have been GC'd. Proportional to the
     workload's overwrite pressure (calibration constant documented in
-    DESIGN.md §2): hotter working sets waste more AGC work."""
-    st = TRACES[name]
+    DESIGN.md §2): hotter working sets waste more AGC work.
+
+    Takes any `TraceStats` — published MSR stats or a
+    `workloads.stats.fit_stats` fit, so scenario/file workloads calibrate
+    the same way."""
     overwrite_pressure = st.write_ratio * (1.0 - st.seq_prob)
     return float(min(0.15 * overwrite_pressure + 0.02, 0.2))
+
+
+def _agc_waste_p(name: str) -> float:
+    return agc_waste_from_stats(TRACES[name])
 
 
 def eval_matrix(cfg: SSDConfig, *, policies=("baseline", "ips", "ips_agc"),

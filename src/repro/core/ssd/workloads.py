@@ -1,234 +1,24 @@
-"""Synthetic MSR-Cambridge-like traces.
+"""Compat shim over the workload engine (`repro.workloads`).
 
-The MSR Cambridge server traces (Narayanan et al., EuroSys'09) are not
-redistributable in this offline container, so each of the 11 traces the
-paper evaluates (Fig. 5/9-12) is *synthesized* from published per-trace
-statistics: write ratio, request size, sequentiality, working-set size,
-overwrite skew, and idle structure. Absolute values therefore differ from
-the paper; the normalized (vs-baseline) latency/WA behaviour — which is
-what we validate — is driven by cache-to-writeset ratios and idle structure,
-which are preserved. Declared in DESIGN.md §2.
+The synthesizer, trace IR, parsers, generators and compiled-trace cache
+moved to the `repro.workloads` package (DESIGN.md §7); this module keeps
+the historical `core.ssd.workloads` surface — `TRACES`, `make_trace`,
+`stack_traces`, `truncate_trace`, `PAD_OPS` — as thin re-exports so
+existing callers and tests keep working. The 11 MSR traces compile to
+bit-identical tensors through the new path (tests/test_workloads.py), so
+all `BENCH_*` trajectories stay comparable.
 
-Traces are emitted as page-level operation arrays (one op per 4 KB page),
-padded to a fixed length so a single compiled simulator serves all traces:
-  arrival_ms f32, lba i32 (page units), is_write i8 (1 write / 0 read /
-  -1 padding no-op), req_id i32.
-
-Two access modes (paper §III):
-  * bursty — the trace volume rewritten as back-to-back sequential 32 KB
-    writes, arrival times collapsed (no idle at all).
-  * daily  — original arrival process with explicit idle gaps.
+New code should import from `repro.workloads` directly: `stack_traces`
+there additionally resolves scenario names and trace-file paths, and
+accepts a `TraceCache`.
 """
 from __future__ import annotations
 
-import zlib
-from dataclasses import dataclass
-from typing import Dict
+from repro.workloads import stack_traces, truncate_trace
+from repro.workloads.ir import (PAD_OPS, repad_ops as _repad,
+                                requests_to_ops as _to_ops)
+from repro.workloads.synth import (TRACES, TRACE_NAMES, TraceStats,
+                                   _zipf_like, make_trace, synthesize)
 
-import numpy as np
-
-
-@dataclass(frozen=True)
-class TraceStats:
-    n_requests: int
-    write_ratio: float
-    mean_req_pages: float       # 4 KB pages per request
-    seq_prob: float
-    working_set_frac: float     # of total logical pages
-    skew: float                 # overwrite skew (higher = hotter hot set)
-    interarrival_ms: float
-    idle_every: int             # insert an idle gap every N requests
-    idle_ms: float
-
-
-# Qualitative parameters per MSR trace (synthetic; see module docstring).
-# Idle structure is calibrated against the DEFAULT_SCALE=128 drive (64 SLC
-# pages/plane => full reclamation ~224 ms/plane, full AGC generation
-# ~393 ms/plane): the writes accumulated between idle gaps are ~1x the SLC
-# cache for most traces (the paper's steady daily regime), while stg_0 and
-# wdev_0 deliberately starve idle (3.1x / 1.8x cache per interval) — they
-# are the paper's two IPS/agc latency exceptions (Fig. 11).
-# Volumes are 4.7x-13x the SLC cache (bursty cliff + reprogram cycling are
-# exercised); daily idle supply is ~70% of reclamation demand for most
-# traces (baseline reclaims the rest under pressure, conflicting with host
-# writes — the paper's Fig. 9b regime), except hm_1/proj_4 (tiny writes,
-# cache never pressured) and stg_0/wdev_0 (idle-starved + high arrival
-# rate: the paper's IPS/agc latency exceptions, Fig. 11).
-TRACES: Dict[str, TraceStats] = {
-    "hm_0":   TraceStats(30000, 0.64, 2.0, 0.45, 0.020, 1.2, 0.5, 10000, 250.0),
-    "hm_1":   TraceStats(12000, 0.05, 2.0, 0.50, 0.010, 1.1, 0.8, 3000, 300.0),
-    "mds_0":  TraceStats(24000, 0.88, 3.0, 0.40, 0.030, 1.3, 0.5, 8000, 400.0),
-    "prn_0":  TraceStats(26000, 0.89, 4.0, 0.55, 0.050, 1.2, 0.5, 9000, 590.0),
-    "proj_0": TraceStats(30000, 0.88, 4.0, 0.60, 0.060, 1.1, 0.4, 10000, 670.0),
-    "proj_4": TraceStats(12000, 0.07, 3.0, 0.60, 0.015, 1.1, 0.8, 3000, 300.0),
-    "prxy_0": TraceStats(36000, 0.97, 1.2, 0.20, 0.004, 1.8, 0.4, 9000, 200.0),
-    "src1_2": TraceStats(28000, 0.75, 4.0, 0.55, 0.050, 1.2, 0.5, 9000, 535.0),
-    "stg_0":  TraceStats(26000, 0.85, 3.0, 0.50, 0.040, 1.2, 0.125, 50000, 0.0),
-    "usr_0":  TraceStats(26000, 0.60, 3.0, 0.45, 0.035, 1.3, 0.6, 8500, 300.0),
-    "wdev_0": TraceStats(24000, 0.80, 2.0, 0.35, 0.015, 1.5, 0.11, 50000, 0.0),
-}
-
-TRACE_NAMES = tuple(TRACES)
-PAD_OPS = 1 << 17               # fixed op count => one simulator compile
-
-
-def _zipf_like(rng, n, size, skew):
-    """Power-law page choice over [0, n): low indexes are hot."""
-    u = rng.random(size)
-    idx = np.floor(n * u ** skew).astype(np.int64)
-    return np.clip(idx, 0, n - 1)
-
-
-def synthesize(name: str, total_logical_pages: int, seed: int = 0,
-               capacity_pages: int | None = None):
-    """Request-level synthetic trace for one MSR-like workload.
-
-    Working sets are a fraction of the *drive capacity* (capacity_pages),
-    independent of the compressed logical address window used to bound the
-    simulator's page-table state."""
-    st = TRACES[name]
-    # stable across processes (unlike hash(), which PYTHONHASHSEED
-    # randomizes): BENCH_*.json numbers must be reproducible run-to-run
-    rng = np.random.default_rng(
-        zlib.crc32(f"{name}/{seed}".encode()) % (2 ** 31))
-    n = st.n_requests
-    cap = capacity_pages or total_logical_pages
-    ws = max(int(cap * st.working_set_frac), 1024)
-    ws = min(ws, int(total_logical_pages * 0.9))
-    base = rng.integers(0, max(total_logical_pages - ws, 1))
-
-    is_write = rng.random(n) < st.write_ratio
-    sizes = np.clip(rng.poisson(st.mean_req_pages, n), 1, 16)
-    seq = rng.random(n) < st.seq_prob
-    rand_targets = base + _zipf_like(rng, ws, n, st.skew)
-
-    lba = np.empty(n, np.int64)
-    cursor = base
-    for i in range(n):
-        if seq[i]:
-            lba[i] = cursor
-        else:
-            lba[i] = rand_targets[i]
-        cursor = (lba[i] + sizes[i]) % (total_logical_pages - 16)
-
-    gaps = rng.exponential(st.interarrival_ms, n)
-    idle_mask = (np.arange(n) % st.idle_every) == st.idle_every - 1
-    gaps = gaps + idle_mask * st.idle_ms
-    arrival = np.cumsum(gaps) - gaps[0]
-    return {"arrival_ms": arrival, "lba": lba, "pages": sizes,
-            "is_write": is_write}
-
-
-def _to_ops(req, mode: str, total_logical_pages: int):
-    """Expand request-level trace to padded page-level ops."""
-    n = len(req["lba"])
-    if mode == "bursty":
-        # rewrite: sequential 32KB (8-page) writes of the same total volume,
-        # arrival accelerated to zero gaps (paper §III)
-        total_pages = int(req["pages"][req["is_write"]].sum())
-        total_pages = max(total_pages, 8)
-        n_req = total_pages // 8
-        lba = (np.arange(n_req) * 8) % (total_logical_pages - 8)
-        reqs = {"arrival_ms": np.zeros(n_req), "lba": lba,
-                "pages": np.full(n_req, 8), "is_write": np.ones(n_req, bool)}
-    elif mode == "daily":
-        reqs = req
-    else:
-        raise ValueError(mode)
-
-    counts = np.asarray(reqs["pages"], np.int64)
-    o = int(counts.sum())
-    arrival = np.repeat(reqs["arrival_ms"], counts).astype(np.float32)
-    # NB: keep offs integer even when the trace is empty — a float64 empty
-    # array would silently promote the lba arithmetic below to float.
-    offs = (np.concatenate([np.arange(c) for c in counts]) if o
-            else np.zeros(0, np.int64))
-    lba = (np.repeat(np.asarray(reqs["lba"], np.int64), counts) + offs)
-    lba = (lba % total_logical_pages).astype(np.int32)
-    is_write = np.repeat(reqs["is_write"], counts).astype(np.int8)
-    req_id = np.repeat(np.arange(len(counts)), counts).astype(np.int32)
-
-    target = max(PAD_OPS, ((o + PAD_OPS - 1) // PAD_OPS) * PAD_OPS)
-    pad = target - o
-    last_t = arrival[-1] if o else 0.0
-    return {
-        "arrival_ms": np.concatenate([arrival, np.full(pad, last_t,
-                                                       np.float32)]),
-        "lba": np.concatenate([lba, np.zeros(pad, np.int32)]),
-        "is_write": np.concatenate([is_write, np.full(pad, -1, np.int8)]),
-        "req_id": np.concatenate([req_id, np.full(pad, -1, np.int32)]),
-        "n_ops": o,
-        "n_reqs": len(counts),
-    }
-
-
-def make_trace(name: str, total_logical_pages: int, mode: str = "daily",
-               seed: int = 0, capacity_pages: int | None = None,
-               repeat: int = 1):
-    """repeat > 1 re-runs the workload back-to-back (paper Fig. 12a: "total
-    write size is varied ... by running workload repeatedly")."""
-    req = synthesize(name, total_logical_pages, seed, capacity_pages)
-    if repeat > 1:
-        span = (req["arrival_ms"][-1] + 1.0) if len(req["arrival_ms"]) else 1.0
-        req = {
-            "arrival_ms": np.concatenate(
-                [req["arrival_ms"] + i * span for i in range(repeat)]),
-            "lba": np.tile(req["lba"], repeat),
-            "pages": np.tile(req["pages"], repeat),
-            "is_write": np.tile(req["is_write"], repeat),
-        }
-    return _to_ops(req, mode, total_logical_pages)
-
-
-def truncate_trace(trace: dict, max_ops: int) -> dict:
-    """Cut a padded trace to its first `max_ops` ops (smoke runs / tests).
-
-    Keeps the op-array contract (no re-padding: max_ops becomes the padded
-    length) and clips `n_ops` accordingly."""
-    out = {k: (v[:max_ops] if isinstance(v, np.ndarray) else v)
-           for k, v in trace.items()}
-    out["n_ops"] = min(trace["n_ops"], max_ops)
-    return out
-
-
-def stack_traces(names, total_logical_pages: int, mode: str = "daily",
-                 seeds=(0,), capacity_pages: int | None = None,
-                 repeat: int = 1, max_ops: int | None = None):
-    """Build the (C, T) trace stack for a fleet run: one cell per
-    (name, seed), all re-padded to the group's common length.
-
-    Returns (cells, traces) where cells is a list of (name, seed) labels
-    and traces a list of padded per-cell trace dicts (feed to
-    fleet.stack_ops)."""
-    cells, traces = [], []
-    for name in names:
-        for seed in seeds:
-            tr = make_trace(name, total_logical_pages, mode=mode, seed=seed,
-                            capacity_pages=capacity_pages, repeat=repeat)
-            if max_ops is not None:
-                tr = truncate_trace(tr, max_ops)
-            cells.append((name, seed))
-            traces.append(tr)
-    target = max(len(t["arrival_ms"]) for t in traces)
-    traces = [_repad(t, target) for t in traces]
-    return cells, traces
-
-
-def _repad(trace: dict, target: int) -> dict:
-    """Extend a padded trace's arrays to `target` ops with padding no-ops."""
-    cur = len(trace["arrival_ms"])
-    if cur == target:
-        return trace
-    pad = target - cur
-    last_t = trace["arrival_ms"][-1] if cur else np.float32(0.0)
-    return {
-        "arrival_ms": np.concatenate(
-            [trace["arrival_ms"], np.full(pad, last_t, np.float32)]),
-        "lba": np.concatenate([trace["lba"], np.zeros(pad, np.int32)]),
-        "is_write": np.concatenate(
-            [trace["is_write"], np.full(pad, -1, np.int8)]),
-        "req_id": np.concatenate(
-            [trace["req_id"], np.full(pad, -1, np.int32)]),
-        "n_ops": trace["n_ops"],
-        "n_reqs": trace["n_reqs"],
-    }
+__all__ = ["TRACES", "TRACE_NAMES", "TraceStats", "PAD_OPS", "synthesize",
+           "make_trace", "stack_traces", "truncate_trace"]

@@ -32,7 +32,7 @@ def _ssd_intra_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
     C = c_ref[0, 0].astype(jnp.float32)                   # (Q, N)
 
     cb = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # (Q, Q), shared
-    causal = jnp.tril(jnp.ones((q, q), jnp.float32))
+    causal = jnp.tril(jnp.ones((q, q), jnp.bool_))
 
     a = dt * A[None, :]                                   # (Q, nh)
     cum = jnp.cumsum(a, axis=0)                           # (Q, nh)
@@ -41,7 +41,9 @@ def _ssd_intra_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
     for h in range(nh):                                   # static unroll
         cum_h = cum[:, h]
         seg = cum_h[:, None] - cum_h[None, :]
-        L = jnp.exp(seg) * causal
+        # mask BEFORE exp: upper-triangle seg is positive and grows with Q,
+        # so exp overflows to inf at long chunks and inf * 0 = NaN
+        L = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
         scores = cb * L * dt[None, :, h]                  # (Q, Q)
         y_h = jnp.dot(scores, x[:, h, :],
                       preferred_element_type=jnp.float32)  # (Q, hd)

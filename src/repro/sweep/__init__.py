@@ -1,8 +1,12 @@
 """Parameter-sweep subsystem for the SSD fleet simulator.
 
-grid    — sweep-point definition + named grids (paper / quick / matrix)
-runner  — groups points into (policy, mode) fleets and runs them batched
-report  — baseline normalization + geomean aggregation
+grid    — sweep-point definition + named grids (paper / quick / matrix /
+          stress / mixed)
+runner  — groups points into (policy, mode) fleets and runs them batched;
+          traces resolve through repro.workloads (MSR names, scenario
+          names, trace-file paths) via the compiled-trace cache
+report  — baseline normalization + geomean aggregation (+ bootstrap CIs
+          for multi-seed sweeps)
 store   — BENCH_*.json result store (cross-PR perf trajectory)
 cli     — `python -m repro.sweep.cli --grid paper` reproduces Figs. 9-12
 
@@ -11,9 +15,11 @@ import jax, so the CLI can set XLA_FLAGS (host device count for cell
 sharding) before jax initializes.
 """
 from repro.sweep.grid import (GRIDS, SweepPoint, expand_grid, matrix_grid,
-                              named_grid, paper_grid, quick_grid)
-from repro.sweep.report import (geomean, normalize_points,
-                                normalize_to_baseline, policy_geomeans)
+                              mixed_grid, named_grid, paper_grid,
+                              quick_grid, stress_grid)
+from repro.sweep.report import (bootstrap_ci, geomean, normalize_points,
+                                normalize_to_baseline, policy_geomeans,
+                                policy_geomeans_ci)
 from repro.sweep.store import list_benches, load_bench, save_bench
 
 _LAZY = {"run_sweep": "repro.sweep.runner", "run_matrix": "repro.sweep.runner",
@@ -21,9 +27,9 @@ _LAZY = {"run_sweep": "repro.sweep.runner", "run_matrix": "repro.sweep.runner",
 
 __all__ = ["GRIDS", "SweepPoint", "expand_grid", "matrix_grid", "named_grid",
            "paper_grid", "quick_grid", "geomean", "normalize_points",
-           "normalize_to_baseline", "policy_geomeans", "list_benches",
-           "load_bench", "save_bench", "run_sweep", "run_matrix",
-           "bench_fleet_vs_loop"]
+           "normalize_to_baseline", "policy_geomeans", "bootstrap_ci",
+           "policy_geomeans_ci", "list_benches", "load_bench", "save_bench",
+           "run_sweep", "run_matrix", "bench_fleet_vs_loop"]
 
 
 def __getattr__(name):

@@ -5,8 +5,19 @@ Examples (run with PYTHONPATH=src):
 
   python -m repro.sweep.cli --grid paper            # full figure set
   python -m repro.sweep.cli --grid quick --max-ops 8192   # CI smoke gate
+  python -m repro.sweep.cli --grid stress           # generator scenarios
+  python -m repro.sweep.cli --grid mixed            # multi-tenant + CIs
   python -m repro.sweep.cli --grid matrix --bench   # + fleet-vs-loop bench
-  python -m repro.sweep.cli --traces hm_0,stg_0 --policies ips,ips_agc
+  python -m repro.sweep.cli --traces hm_0,gc_pressure --seeds 0,1,2
+  python -m repro.sweep.cli --trace-file traces/a.csv --policies ips,ips_agc
+
+Workload specs resolve through `repro.workloads`: MSR trace names,
+scenario-generator names (zipf_hot, diurnal, read_burst, gc_pressure,
+tenant_mix) and trace-file paths (--trace-file, or any --traces entry with
+a path separator) all run through the same fleet path. Trace tensors are
+memoized by the content-addressed compiled-trace cache; hit/miss counts
+land in the BENCH_*.json run metadata. With more than one --seeds value,
+geomean summaries gain bootstrap confidence intervals.
 
 Device sharding: before importing jax the CLI forces
 `--xla_force_host_platform_device_count=<n>` (default: all CPUs) so the
@@ -20,20 +31,31 @@ import argparse
 import os
 import sys
 
+# jax-free at module level (XLA_FLAGS must be pinned before jax imports);
+# grid and workloads are numpy-only
+from repro.sweep.grid import GRIDS
+
 
 def _parse(argv):
     ap = argparse.ArgumentParser(
         prog="repro.sweep.cli",
         description="Batched parameter sweeps over the hybrid-SSD fleet "
                     "simulator (paper Figs. 9-12).")
-    ap.add_argument("--grid", choices=("paper", "quick", "matrix"),
+    ap.add_argument("--grid", choices=tuple(GRIDS),
                     default=None, help="named grid; omit to build one from "
                     "--traces/--policies/--modes")
     ap.add_argument("--traces", default=None,
-                    help="comma list (default: all 11)")
+                    help="comma list of workload specs: MSR names, "
+                    "scenario names, or trace-file paths "
+                    "(default: all 11 MSR traces)")
+    ap.add_argument("--trace-file", action="append", default=[],
+                    metavar="PATH", help="add a real trace file (MSR CSV, "
+                    "generic CSV, fio iolog; .gz/.zst ok) as a workload; "
+                    "repeatable")
     ap.add_argument("--policies", default="baseline,ips,ips_agc")
     ap.add_argument("--modes", default="bursty,daily")
-    ap.add_argument("--seeds", default="0", help="comma list of RNG seeds")
+    ap.add_argument("--seeds", default="0", help="comma list of RNG seeds; "
+                    ">1 seed adds bootstrap CIs to the geomean summary")
     ap.add_argument("--cache-fracs", default="1.0",
                     help="comma list of SLC cache scale factors")
     ap.add_argument("--scale", type=int, default=128,
@@ -43,6 +65,8 @@ def _parse(argv):
     ap.add_argument("--devices", type=int, default=None,
                     help="host device count for cell sharding "
                     "(default: cpu count; 1 disables)")
+    ap.add_argument("--no-trace-cache-disk", action="store_true",
+                    help="keep the compiled-trace cache in memory only")
     ap.add_argument("--bench", action="store_true",
                     help="also wall-clock fleet vs looped eval_cell")
     ap.add_argument("--name", default=None, help="benchmark artifact name "
@@ -67,47 +91,95 @@ def main(argv=None) -> int:
         _force_host_devices(n_dev)
 
     # heavy imports only after XLA_FLAGS is pinned
+    from repro import workloads
     from repro.configs.ssd_paper import PAPER_SSD
-    from repro.sweep.grid import SweepPoint, expand_grid, named_grid
-    from repro.sweep.report import policy_geomeans
+    from repro.sweep.grid import expand_grid, named_grid
+    from repro.sweep.report import policy_geomeans, policy_geomeans_ci
     from repro.sweep.runner import bench_fleet_vs_loop, run_sweep
     from repro.sweep.store import save_bench
 
     cfg = PAPER_SSD.scaled(args.scale)
+    seeds = tuple(int(s) for s in args.seeds.split(","))
     if args.grid:
+        if args.trace_file:
+            print("error: --trace-file cannot be combined with --grid "
+                  "(named grids fix their workloads); drop --grid or pass "
+                  "the file via --traces/--trace-file alone",
+                  file=sys.stderr)
+            return 2
         points = named_grid(args.grid)
     else:
         from repro.core.ssd.sim import POLICIES
-        from repro.core.ssd.workloads import TRACE_NAMES
-        traces = tuple((args.traces or ",".join(TRACE_NAMES)).split(","))
+        traces = tuple((args.traces.split(",") if args.traces else
+                        (workloads.TRACE_NAMES if not args.trace_file
+                         else ())))
+        traces += tuple(args.trace_file)
         policies = tuple(args.policies.split(","))
         modes = tuple(args.modes.split(","))
-        for val, valid, flag in ((traces, TRACE_NAMES, "--traces"),
-                                 (policies, POLICIES, "--policies"),
-                                 (modes, ("bursty", "daily"), "--modes")):
-            bad = sorted(set(val) - set(valid))
+        bad, missing, file_specs = [], [], []
+        for t in sorted(set(traces)):
+            try:
+                kind = workloads.spec_kind(t)
+            except ValueError:
+                bad.append(t)
+                continue
+            if kind == "file":
+                file_specs.append(t)
+                if not os.path.isfile(t):
+                    missing.append(t)
+        if bad or missing:
             if bad:
-                print(f"error: unknown {flag} value(s) {','.join(bad)}; "
-                      f"valid: {','.join(valid)}", file=sys.stderr)
+                print(f"error: unknown --traces value(s) {','.join(bad)}; "
+                      f"valid: {','.join(workloads.known_specs())} "
+                      "(or a trace-file path)", file=sys.stderr)
+            for path in missing:
+                print(f"error: trace file not found: {path}",
+                      file=sys.stderr)
+            return 2
+        if file_specs and len(seeds) > 1:
+            print("note: file-backed traces are deterministic — the seed "
+                  "axis only varies synthetic/scenario cells",
+                  file=sys.stderr)
+        for val, valid, flag in ((policies, POLICIES, "--policies"),
+                                 (modes, ("bursty", "daily"), "--modes")):
+            unknown = sorted(set(val) - set(valid))
+            if unknown:
+                print(f"error: unknown {flag} value(s) "
+                      f"{','.join(unknown)}; valid: {','.join(valid)}",
+                      file=sys.stderr)
                 return 2
+        if not traces:
+            print("error: no workloads selected", file=sys.stderr)
+            return 2
         points = expand_grid(
-            traces=traces, modes=modes, policies=policies,
-            seeds=tuple(int(s) for s in args.seeds.split(",")),
+            traces=traces, modes=modes, policies=policies, seeds=seeds,
             cache_fracs=tuple(float(c) for c in args.cache_fracs.split(",")))
 
+    cache = workloads.TraceCache(use_disk=not args.no_trace_cache_disk)
     print(f"sweep: {len(points)} cells on a 1/{args.scale} drive "
           f"({cfg.capacity_gb:.1f} GB, SLC cache "
           f"{cfg.slc_cap_pages * cfg.num_planes} pages)")
     results = run_sweep(cfg, points, max_ops=args.max_ops,
-                        progress=lambda s: print(f"  {s}"))
+                        progress=lambda s: print(f"  {s}"),
+                        trace_cache=cache)
+    cstats = cache.stats()
+    print(f"  trace cache: {cstats['hits']} hit(s), "
+          f"{cstats['misses']} miss(es)")
 
     _print_table(results)
 
+    n_seeds = len({pt.seed for pt in points})
     payload = {"grid": args.grid or "custom", "n_cells": len(points),
                "max_ops": args.max_ops, "scale": args.scale,
+               "trace_cache": cstats,
                "results": results,
                "geomeans": {f"{m}/{p}": v for (m, p), v in
                             policy_geomeans(results).items()}}
+    if n_seeds > 1:
+        cis = policy_geomeans_ci(results)
+        _print_ci_table(cis)
+        payload["geomeans_ci"] = {f"{m}/{p}": v
+                                  for (m, p), v in cis.items()}
     if args.bench:
         print("\nbenchmark: fleet vs looped eval_cell (full matrix) ...")
         bench = bench_fleet_vs_loop(cfg)
@@ -140,6 +212,18 @@ def _print_table(results) -> None:
         print(f"{mode:>7} {policy:<8} "
               f"lat={v.get('mean_write_latency_ms', float('nan')):.3f} "
               f"wa={v.get('wa_paper', float('nan')):.3f}  (n={v['n']})")
+
+
+def _print_ci_table(cis) -> None:
+    print("\n=== seed-pooled geomeans, 95% bootstrap CI ===")
+    for (mode, policy), v in sorted(cis.items()):
+        lat = v.get("mean_write_latency_ms")
+        wa = v.get("wa_paper")
+        def fmt(d):
+            return (f"{d['geomean']:.3f} [{d['lo']:.3f},{d['hi']:.3f}]"
+                    if d else "n/a")
+        print(f"{mode:>7} {policy:<8} lat={fmt(lat)} wa={fmt(wa)}  "
+              f"(n={v['n']}, seeds={v['n_seeds']})")
 
 
 if __name__ == "__main__":

@@ -14,10 +14,11 @@ from dataclasses import dataclass, replace
 from typing import Iterable, Optional, Sequence
 
 __all__ = ["SweepPoint", "expand_grid", "matrix_grid", "paper_grid",
-           "quick_grid", "named_grid", "GRIDS"]
+           "quick_grid", "stress_grid", "mixed_grid", "named_grid", "GRIDS"]
 
 # NB: no repro.core.ssd import at module level — `import repro.sweep` must
 # stay jax-free so the CLI can pin XLA_FLAGS before jax initializes.
+# (repro.workloads is numpy-only and safe.)
 
 
 @dataclass(frozen=True)
@@ -62,7 +63,7 @@ def expand_grid(traces: Optional[Iterable[str]] = None,
     """Full cartesian product — traces x modes x policies x seeds x
     repeats x cache fractions. traces=None means all 11 MSR-like traces."""
     if traces is None:
-        from repro.core.ssd.workloads import TRACE_NAMES
+        from repro.workloads import TRACE_NAMES
         traces = TRACE_NAMES
     return [SweepPoint(trace=t, mode=m, policy=p, seed=s, repeat=r,
                        cache_frac=c)
@@ -101,7 +102,27 @@ def quick_grid() -> list[SweepPoint]:
                        policies=("baseline", "ips"))
 
 
-GRIDS = {"paper": paper_grid, "quick": quick_grid, "matrix": matrix_grid}
+def stress_grid() -> list[SweepPoint]:
+    """Beyond-MSR stress matrix: the parametric scenario generators
+    (workloads.generators) across both modes — skewed overwrites, duty
+    cycles, write bursts and sustained cache overrun."""
+    return expand_grid(
+        traces=("gc_pressure", "zipf_hot", "read_burst", "diurnal"),
+        policies=("baseline", "ips", "ips_agc"))
+
+
+def mixed_grid() -> list[SweepPoint]:
+    """Multi-tenant colocation: the tenant_mix scenario (hot overwriter +
+    read-burst service + sequential streamer sharing one drive) across
+    seeds, all four policies — the seed axis feeds the bootstrap-CI
+    reporting (sweep.report.policy_geomeans_ci)."""
+    return expand_grid(traces=("tenant_mix",), modes=("daily",),
+                       policies=("baseline", "ips", "ips_agc", "coop"),
+                       seeds=(0, 1, 2))
+
+
+GRIDS = {"paper": paper_grid, "quick": quick_grid, "matrix": matrix_grid,
+         "stress": stress_grid, "mixed": mixed_grid}
 
 
 def named_grid(name: str) -> list[SweepPoint]:

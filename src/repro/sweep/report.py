@@ -13,7 +13,7 @@ from typing import Dict, Mapping
 import numpy as np
 
 __all__ = ["geomean", "normalize_to_baseline", "normalize_points",
-           "policy_geomeans"]
+           "policy_geomeans", "bootstrap_ci", "policy_geomeans_ci"]
 
 
 def geomean(values) -> float:
@@ -82,3 +82,54 @@ def policy_geomeans(results: Mapping, metrics=("mean_write_latency_ms",
     return {k: {m: geomean(v) for m, v in d.items()}
             | {"n": max(len(v) for v in d.values())}
             for k, d in agg.items()}
+
+
+def bootstrap_ci(values, *, n_boot: int = 1000, alpha: float = 0.05,
+                 seed: int = 0):
+    """Percentile-bootstrap CI for the geomean of `values`.
+
+    Resamples the per-cell ratios with replacement; returns (lo, hi) at
+    the (alpha/2, 1-alpha/2) quantiles. Deterministic (fixed RNG seed) so
+    BENCH_*.json artifacts are reproducible run-to-run."""
+    vals = np.maximum(np.asarray(list(values), np.float64), 1e-12)
+    if vals.size == 0:
+        return float("nan"), float("nan")
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, vals.size, (n_boot, vals.size))
+    gms = np.exp(np.log(vals)[idx].mean(axis=1))
+    lo, hi = np.quantile(gms, [alpha / 2, 1 - alpha / 2])
+    return float(lo), float(hi)
+
+
+def policy_geomeans_ci(results: Mapping,
+                       metrics=("mean_write_latency_ms", "wa_paper"), *,
+                       n_boot: int = 1000, alpha: float = 0.05) -> Dict:
+    """Seed-pooled geomeans with bootstrap CIs (ROADMAP seed/variance
+    item). Unlike `policy_geomeans` (headline seed-0 cells only), this
+    pools every seed at default repeat/cache/idle and resamples the
+    per-(trace, seed) baseline-normalized ratios, so `--seeds 0,1,2,...`
+    sweeps report how tight the normalized summary actually is.
+
+    Returns {(mode, policy): {metric: {"geomean", "lo", "hi"},
+                              "n": cells, "n_seeds": distinct seeds}}."""
+    agg: Dict = {}
+    seeds: Dict = {}
+    for metric in metrics:
+        norm = normalize_points(results, metric)
+        for point, ratio in norm.items():
+            if (point.repeat, point.cache_frac,
+                    point.idle_threshold_ms) != (1, 1.0, None):
+                continue
+            key = (point.mode, point.policy)
+            agg.setdefault(key, {}).setdefault(metric, []).append(ratio)
+            seeds.setdefault(key, set()).add(point.seed)
+    out: Dict = {}
+    for key, d in agg.items():
+        out[key] = {}
+        for metric, vals in d.items():
+            lo, hi = bootstrap_ci(vals, n_boot=n_boot, alpha=alpha)
+            out[key][metric] = {"geomean": geomean(vals),
+                                "lo": lo, "hi": hi}
+        out[key]["n"] = max(len(v) for v in d.values())
+        out[key]["n_seeds"] = len(seeds[key])
+    return out

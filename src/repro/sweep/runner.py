@@ -4,8 +4,14 @@ Points are grouped by everything that forces a fresh XLA compilation —
 (policy, mode, padded trace length). Each group becomes ONE
 `fleet.run_fleet` call: a `vmap(lax.scan)` over the stacked (C, T) trace
 tensor with per-cell traced `CellParams`, sharded across the process's JAX
-devices. Traces are built once per (trace, seed, mode, repeat) and shared
-across the policies that consume them.
+devices.
+
+Traces come from the workload engine (`repro.workloads`): a point's
+`trace` spec may be an MSR name, a scenario-generator name or a trace-file
+path, all built through the content-addressed compiled-trace cache
+(`workloads.TraceCache`) — one build per (spec, seed, mode, repeat) recipe
+per process, memoized on disk across runs. Pass `trace_cache=` to inspect
+hit/miss counts (the CLI logs them into `BENCH_*` run metadata).
 
 `driver.eval_cell` remains the single-cell reference path; equivalence is
 bit-for-bit (tests/test_fleet.py) because both paths run the same
@@ -19,14 +25,15 @@ from typing import Dict, Iterable, Optional, Sequence
 
 import numpy as np
 
+from repro import workloads
 from repro.core.ssd import fleet
 from repro.core.ssd.config import SSDConfig
 # driver is the single-cell reference path: share its constants/calibration
 # so the fleet and reference paths cannot diverge (no cycle: driver only
 # imports repro.sweep.report, and this module is imported lazily by it)
-from repro.core.ssd.driver import LOGICAL_SPACE_CAP, _agc_waste_p
+from repro.core.ssd.driver import (LOGICAL_SPACE_CAP, _agc_waste_p,
+                                   agc_waste_from_stats)
 from repro.core.ssd.sim import default_params
-from repro.core.ssd.workloads import make_trace, truncate_trace
 from repro.sweep.grid import SweepPoint
 
 __all__ = ["run_sweep", "run_matrix", "bench_fleet_vs_loop"]
@@ -36,13 +43,11 @@ def _n_logical(cfg: SSDConfig) -> int:
     return min(cfg.total_pages, LOGICAL_SPACE_CAP)
 
 
-def _cell_params(cfg: SSDConfig, point: SweepPoint):
-    """Per-point CellParams: driver calibration for waste_p unless pinned,
-    cache_frac scaling, idle override — all traced, never a recompile."""
+def _cell_params(cfg: SSDConfig, point: SweepPoint, waste_p: float):
+    """Per-point CellParams: calibrated waste_p unless pinned, cache_frac
+    scaling, idle override — all traced, never a recompile."""
     import jax.numpy as jnp
-    wp = point.waste_p if point.waste_p is not None \
-        else _agc_waste_p(point.trace)
-    p = default_params(cfg, point.policy, wp)
+    p = default_params(cfg, point.policy, waste_p)
     if point.cache_frac != 1.0:
         p = p._replace(
             cap_basic=jnp.int32(max(int(int(p.cap_basic)
@@ -55,28 +60,53 @@ def _cell_params(cfg: SSDConfig, point: SweepPoint):
 
 def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
               max_ops: Optional[int] = None,
-              progress=None) -> Dict[SweepPoint, Dict[str, float]]:
+              progress=None,
+              trace_cache: Optional[workloads.TraceCache] = None
+              ) -> Dict[SweepPoint, Dict[str, float]]:
     """Run every sweep point batched; returns {point: metrics}.
 
     max_ops truncates traces (smoke/CI runs). `progress` is an optional
-    callable(str) for per-group status lines."""
+    callable(str) for per-group status lines. `trace_cache` supplies the
+    compiled-trace cache (a fresh one per call otherwise)."""
     import jax
 
     n_logical = _n_logical(cfg)
     n_dev = len(jax.devices())
-
-    # one trace per (trace, seed, mode, repeat), shared across policies
-    trace_cache: Dict[tuple, dict] = {}
+    cache = (trace_cache if trace_cache is not None
+             else workloads.TraceCache())
 
     def cell_trace(pt: SweepPoint) -> dict:
-        key = (pt.trace, pt.seed, pt.mode, pt.repeat)
-        if key not in trace_cache:
-            tr = make_trace(pt.trace, n_logical, mode=pt.mode, seed=pt.seed,
-                            capacity_pages=cfg.total_pages, repeat=pt.repeat)
-            if max_ops is not None:
-                tr = truncate_trace(tr, max_ops)
-            trace_cache[key] = tr
-        return trace_cache[key]
+        tr = workloads.build_ops(
+            pt.trace, n_logical, mode=pt.mode, seed=pt.seed,
+            capacity_pages=cfg.total_pages, repeat=pt.repeat, cache=cache)
+        if max_ops is not None:
+            tr = workloads.truncate_trace(tr, max_ops)
+        return tr
+
+    # AGC waste calibration: published stats for MSR names, fitted stats
+    # (on the daily variant) for scenario/file specs — one fit per recipe.
+    # The daily tensors come through the same TraceCache, so the fit reuses
+    # cells the sweep builds anyway (or warm disk entries).
+    fitted_waste: Dict[tuple, float] = {}
+
+    def cell_waste(pt: SweepPoint) -> float:
+        if pt.waste_p is not None:
+            return pt.waste_p
+        if pt.policy in ("baseline", "ips"):
+            return 0.0                  # waste_p only drives AGC policies
+        if pt.trace in workloads.TRACES:
+            return _agc_waste_p(pt.trace)
+        key = (pt.trace, pt.seed, pt.repeat)
+        if key not in fitted_waste:
+            ops = workloads.build_ops(
+                pt.trace, n_logical, mode="daily", seed=pt.seed,
+                capacity_pages=cfg.total_pages, repeat=pt.repeat,
+                cache=cache)
+            st = workloads.fit_stats(
+                workloads.ir.trace_from_ops(ops, source=pt.trace),
+                n_logical, cfg.total_pages)
+            fitted_waste[key] = agc_waste_from_stats(st)
+        return fitted_waste[key]
 
     groups: Dict[tuple, list] = defaultdict(list)
     for pt in points:
@@ -86,7 +116,7 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
     results: Dict[SweepPoint, Dict[str, float]] = {}
     for (policy, mode, _t_len), pts in sorted(groups.items()):
         traces = [cell_trace(p) for p in pts]
-        params = [_cell_params(cfg, p) for p in pts]
+        params = [_cell_params(cfg, p, cell_waste(p)) for p in pts]
         # pad the cell axis to a device-count multiple so shard_cells can
         # lay it across the mesh; padded cells replay the last cell and are
         # dropped below.
@@ -119,14 +149,15 @@ def run_matrix(cfg: SSDConfig, *,
                policies: Sequence[str] = ("baseline", "ips", "ips_agc"),
                modes: Sequence[str] = ("bursty", "daily"),
                names: Optional[Iterable[str]] = None, seed: int = 0,
-               max_ops: Optional[int] = None) -> Dict[str, Dict]:
+               max_ops: Optional[int] = None,
+               trace_cache: Optional[workloads.TraceCache] = None
+               ) -> Dict[str, Dict]:
     """Fleet-backed evaluation matrix in `driver.eval_matrix` key format
     (`trace/mode/policy`)."""
-    from repro.core.ssd.workloads import TRACE_NAMES
-    names = tuple(names or TRACE_NAMES)
+    names = tuple(names or workloads.TRACE_NAMES)
     points = [SweepPoint(trace=n, mode=m, policy=p, seed=seed)
               for m in modes for n in names for p in policies]
-    res = run_sweep(cfg, points, max_ops=max_ops)
+    res = run_sweep(cfg, points, max_ops=max_ops, trace_cache=trace_cache)
     return {f"{pt.trace}/{pt.mode}/{pt.policy}": v for pt, v in res.items()}
 
 
@@ -140,11 +171,14 @@ def bench_fleet_vs_loop(cfg: SSDConfig, *,
 
     Returns a JSON-ready dict (feed to sweep.store.save_bench)."""
     from repro.core.ssd.driver import eval_cell
-    from repro.core.ssd.workloads import TRACE_NAMES
-    names = tuple(names or TRACE_NAMES)
+    names = tuple(names or workloads.TRACE_NAMES)
 
+    # memory-only cache: the published speedup must be hermetic, not a
+    # function of whatever the disk cache happens to hold from prior runs
+    cache = workloads.TraceCache(use_disk=False)
     t0 = time.perf_counter()
-    fleet_res = run_matrix(cfg, policies=policies, modes=modes, names=names)
+    fleet_res = run_matrix(cfg, policies=policies, modes=modes, names=names,
+                           trace_cache=cache)
     fleet_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -172,5 +206,6 @@ def bench_fleet_vs_loop(cfg: SSDConfig, *,
         "fleet_wall_s": round(fleet_s, 3),
         "speedup": round(loop_s / max(fleet_s, 1e-9), 3),
         "max_rel_diff": max_rel,
+        "trace_cache": cache.stats(),
         "results": fleet_res,
     }

@@ -1,0 +1,165 @@
+"""Workload engine: the single source of traces for simulator, fleet and
+sweep layers (DESIGN.md §7).
+
+Layout:
+  ir          — Trace IR (page-level ops + provenance + transforms) and
+                the compile/pad/truncate contract with the simulator.
+  synth       — MSR-Cambridge-like statistical synthesizer (TraceStats,
+                the 11 published-stats traces, bit-identical to the seed).
+  parsers     — real trace files: MSR CSV, generic CSV, fio iolog
+                (`load_trace(path, mode=..., max_ops=...)`).
+  generators  — parametric scenarios (zipf_hot, diurnal, read_burst,
+                gc_pressure, tenant_mix) + the multi-tenant mixer.
+  stats       — fit `TraceStats` from any Trace; round-trip through the
+                synthesizer.
+  cache       — content-addressed compiled-trace cache (memory + disk).
+
+A workload *spec* is one string, resolved by `spec_kind`:
+  * an MSR trace name   ("hm_0", ...)        -> synthesizer
+  * a scenario name     ("gc_pressure", ...) -> generator registry
+  * a path to a trace file (contains a path separator, or names an
+    existing file)                           -> parsers
+so `stack_traces(("hm_0", "gc_pressure", "traces/a.csv"), ...)` builds a
+fleet mixing all three kinds through one interface.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Sequence
+
+from repro.workloads import ir
+from repro.workloads.cache import TraceCache, file_digest
+from repro.workloads.generators import (SCENARIO_NAMES, SCENARIOS,
+                                        mix_traces)
+from repro.workloads.ir import PAD_OPS, Trace
+from repro.workloads.parsers import load_trace
+from repro.workloads.stats import fit_stats, synthesize_like
+from repro.workloads.synth import (TRACE_NAMES, TRACES, TraceStats,
+                                   make_trace, synth_trace, synthesize)
+
+__all__ = [
+    "PAD_OPS", "Trace", "TraceStats", "TRACES", "TRACE_NAMES",
+    "SCENARIOS", "SCENARIO_NAMES", "TraceCache",
+    "spec_kind", "known_specs", "build_trace", "build_ops", "trace_recipe",
+    "stack_traces", "truncate_trace",
+    "make_trace", "synth_trace", "synthesize", "load_trace", "mix_traces",
+    "fit_stats", "synthesize_like",
+]
+
+truncate_trace = ir.truncate_ops
+
+
+def spec_kind(spec: str) -> str:
+    """Classify a workload spec: 'synth' | 'scenario' | 'file'."""
+    if spec in TRACES:
+        return "synth"
+    if spec in SCENARIOS:
+        return "scenario"
+    if os.sep in spec or "/" in spec or os.path.isfile(spec):
+        return "file"
+    raise ValueError(
+        f"unknown workload spec {spec!r}: not an MSR trace "
+        f"({', '.join(TRACE_NAMES)}), not a scenario "
+        f"({', '.join(SCENARIO_NAMES)}), and not a file path")
+
+
+def known_specs() -> tuple:
+    """All resolvable non-file spec names (CLI validation)."""
+    return TRACE_NAMES + SCENARIO_NAMES
+
+
+def build_trace(spec: str, total_logical_pages: int, *,
+                mode: str = "daily", seed: int = 0,
+                capacity_pages: Optional[int] = None,
+                repeat: int = 1) -> Trace:
+    """Build the Trace IR record for any workload spec.
+
+    The synth path keeps repeat/mode at request level (the seed pipeline,
+    bit-identical tensors); scenarios and files apply the IR-level
+    `repeat` and `to_bursty` transforms in the same order. `seed` varies
+    synthetic and scenario sampling; file-backed traces are deterministic,
+    so it is a no-op for them."""
+    kind = spec_kind(spec)
+    if kind == "synth":
+        return synth_trace(spec, total_logical_pages, mode, seed,
+                           capacity_pages, repeat)
+    if kind == "scenario":
+        tr = SCENARIOS[spec](total_logical_pages, capacity_pages, seed)
+    else:
+        tr = load_trace(spec, "daily",
+                        total_logical_pages=total_logical_pages)
+    if repeat > 1:
+        tr = tr.repeat(repeat)
+    if mode == "bursty":
+        tr = tr.to_bursty(total_logical_pages)
+    elif mode != "daily":
+        raise ValueError(mode)
+    return tr
+
+
+def trace_recipe(spec: str, total_logical_pages: int, *,
+                 mode: str = "daily", seed: int = 0,
+                 capacity_pages: Optional[int] = None,
+                 repeat: int = 1) -> Dict:
+    """Content-addressed build recipe for `build_ops` (cache key).
+
+    Synth recipes embed the trace's published stats (recalibration
+    invalidates), scenario recipes the generator version, file recipes a
+    digest of the file contents (edits invalidate)."""
+    from dataclasses import astuple
+    kind = spec_kind(spec)
+    recipe = {"kind": kind, "spec": spec, "mode": mode, "seed": seed,
+              "repeat": repeat, "n_logical": total_logical_pages,
+              "capacity": capacity_pages}
+    if kind == "synth":
+        recipe["stats"] = astuple(TRACES[spec])
+    elif kind == "scenario":
+        from repro.workloads.generators import VERSION
+        recipe["gen_version"] = VERSION
+    else:
+        recipe["digest"] = file_digest(spec)
+    return recipe
+
+
+def build_ops(spec: str, total_logical_pages: int, *,
+              mode: str = "daily", seed: int = 0,
+              capacity_pages: Optional[int] = None, repeat: int = 1,
+              cache: Optional[TraceCache] = None) -> Dict:
+    """Compiled (padded) op tensors for any workload spec, optionally
+    memoized through a `TraceCache`."""
+    def builder():
+        return build_trace(spec, total_logical_pages, mode=mode, seed=seed,
+                           capacity_pages=capacity_pages,
+                           repeat=repeat).compile()
+    if cache is None:
+        return builder()
+    recipe = trace_recipe(spec, total_logical_pages, mode=mode, seed=seed,
+                          capacity_pages=capacity_pages, repeat=repeat)
+    return cache.get_or_build(recipe, builder)
+
+
+def stack_traces(specs: Sequence[str], total_logical_pages: int,
+                 mode: str = "daily", seeds=(0,),
+                 capacity_pages: Optional[int] = None, repeat: int = 1,
+                 max_ops: Optional[int] = None,
+                 cache: Optional[TraceCache] = None):
+    """Build the (C, T) trace stack for a fleet run: one cell per
+    (spec, seed), all re-padded to the group's common length.
+
+    Specs may mix MSR names, scenario names and file paths. Returns
+    (cells, traces) where cells is a list of (spec, seed) labels and
+    traces a list of padded per-cell trace dicts (feed to
+    fleet.stack_ops)."""
+    cells, traces = [], []
+    for spec in specs:
+        for seed in seeds:
+            tr = build_ops(spec, total_logical_pages, mode=mode, seed=seed,
+                           capacity_pages=capacity_pages, repeat=repeat,
+                           cache=cache)
+            if max_ops is not None:
+                tr = ir.truncate_ops(tr, max_ops)
+            cells.append((spec, seed))
+            traces.append(tr)
+    target = max(len(t["arrival_ms"]) for t in traces)
+    traces = [ir.repad_ops(t, target) for t in traces]
+    return cells, traces

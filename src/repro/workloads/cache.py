@@ -1,0 +1,132 @@
+"""Content-addressed compiled-trace cache.
+
+Building a trace (python-loop synthesis + page expansion + padding) costs
+orders of magnitude more than loading its op tensors, and the sweep layers
+rebuild the same (trace, seed, mode, repeat) recipe every run. This cache
+memoizes *compiled* op dicts twice over:
+
+  * in-process — one build per recipe per process (replaces the ad-hoc
+    dict that lived in `sweep.runner`);
+  * on disk — one `.npz` per recipe under `$REPRO_TRACE_CACHE_DIR`
+    (default `~/.cache/repro/traces`), shared across processes and runs.
+
+Entries are content-addressed: the key is a SHA-256 over the canonical
+JSON of the build recipe (spec, seed, mode, repeat, logical window,
+capacity) plus a format version — and, for file-backed traces, a digest of
+the file *contents*, so editing a trace file invalidates its entries
+without any mtime heuristics. Cache misses rebuild; disk failures degrade
+to building (a cache must never be load-bearing for correctness).
+
+Hit/miss counts are exported via `stats()` and logged into `BENCH_*` run
+metadata by the sweep CLI, so trace-build amortization is visible in the
+perf trajectory.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from typing import Callable, Dict, Mapping, Optional
+
+import numpy as np
+
+__all__ = ["TraceCache", "default_cache_dir", "file_digest",
+           "FORMAT_VERSION"]
+
+FORMAT_VERSION = 1
+
+_ARRAY_KEYS = ("arrival_ms", "lba", "is_write", "req_id")
+_SCALAR_KEYS = ("n_ops", "n_reqs")
+
+
+def default_cache_dir() -> str:
+    return (os.environ.get("REPRO_TRACE_CACHE_DIR")
+            or os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                            "traces"))
+
+
+_DIGEST_MEMO: Dict[tuple, str] = {}
+
+
+def file_digest(path: str) -> str:
+    """Streaming SHA-256 of a file's contents (content addressing for
+    file-backed trace recipes).
+
+    Memoized per (path, mtime, size) so a sweep with many cells over one
+    large trace file hashes it once, while an edited file (new mtime/size)
+    still re-hashes."""
+    st = os.stat(path)
+    memo_key = (os.path.abspath(path), st.st_mtime_ns, st.st_size)
+    if memo_key not in _DIGEST_MEMO:
+        h = hashlib.sha256()
+        with open(path, "rb") as f:
+            for chunk in iter(lambda: f.read(1 << 20), b""):
+                h.update(chunk)
+        _DIGEST_MEMO[memo_key] = h.hexdigest()
+    return _DIGEST_MEMO[memo_key]
+
+
+class TraceCache:
+    """Two-level (memory + disk) memo for compiled trace op dicts."""
+
+    def __init__(self, root: Optional[str] = None, *,
+                 use_disk: bool = True):
+        self.root = root or default_cache_dir()
+        self.use_disk = use_disk
+        self.hits = 0
+        self.misses = 0
+        self._mem: Dict[str, Dict] = {}
+
+    @staticmethod
+    def key(recipe: Mapping) -> str:
+        canon = json.dumps({**recipe, "__format__": FORMAT_VERSION},
+                           sort_keys=True, separators=(",", ":"),
+                           default=str)
+        return hashlib.sha256(canon.encode()).hexdigest()[:32]
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, f"trace_{key}.npz")
+
+    def _load_disk(self, key: str) -> Optional[Dict]:
+        path = self._path(key)
+        try:
+            with np.load(path) as z:
+                return {**{k: z[k] for k in _ARRAY_KEYS},
+                        **{k: int(z[k]) for k in _SCALAR_KEYS}}
+        except (OSError, KeyError, ValueError):
+            return None
+
+    def _store_disk(self, key: str, ops: Dict) -> None:
+        try:
+            os.makedirs(self.root, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".npz.tmp")
+            with os.fdopen(fd, "wb") as f:
+                np.savez_compressed(
+                    f, **{k: ops[k] for k in _ARRAY_KEYS},
+                    **{k: np.int64(ops[k]) for k in _SCALAR_KEYS})
+            os.replace(tmp, self._path(key))   # atomic: no torn entries
+        except OSError:
+            pass                                # disk cache is best-effort
+
+    def get_or_build(self, recipe: Mapping,
+                     builder: Callable[[], Dict]) -> Dict:
+        """Memoized compiled op dict for `recipe`; `builder` runs on miss."""
+        key = self.key(recipe)
+        if key in self._mem:
+            self.hits += 1
+            return self._mem[key]
+        ops = self._load_disk(key) if self.use_disk else None
+        if ops is not None:
+            self.hits += 1
+        else:
+            self.misses += 1
+            ops = builder()
+            if self.use_disk:
+                self._store_disk(key, ops)
+        self._mem[key] = ops
+        return ops
+
+    def stats(self) -> Dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "dir": self.root if self.use_disk else None}

@@ -1,0 +1,223 @@
+"""Parametric scenario generators beyond the fixed MSR set.
+
+Each generator emits through the Trace IR and is calibrated in *capacity
+fractions* (like the MSR `TraceStats`), so the same scenario stresses the
+same cache-to-writeset ratio at any drive scale. The `SCENARIOS` registry
+exposes them under sweep-able names — `stack_traces`, the sweep runner and
+the CLI resolve any registered name exactly like an MSR trace name, so
+`--traces gc_pressure` or the "stress"/"mixed" named grids run through the
+identical fleet path.
+
+Scenarios (all seeded, all deterministic):
+
+  * zipf_hot     — heavy skewed overwrites of a tiny hot set: reprogram
+                   cycling + WA stress (no sequential component at all).
+  * diurnal      — day/night duty cycle: busy phases sized ~1x the SLC
+                   cache separated by long device-idle windows (ample
+                   reclamation supply — the paper's steady daily regime).
+  * read_burst   — read-mostly service with periodic write bursts (cache
+                   fills in spikes, drains between them).
+  * gc_pressure  — sustained random writes, several times the SLC cache,
+                   with near-zero idle: continuous cache overrun (the
+                   paper's Fig. 7/9b conflict regime).
+  * tenant_mix   — multi-tenant interleave (`mix_traces`) of a hot
+                   overwriter, a reader and a sequential streamer, each in
+                   its own partition of the logical window.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.workloads import ir
+
+__all__ = ["zipf_overwrite", "diurnal", "read_burst", "gc_pressure",
+           "tenant_mix", "mix_traces", "SCENARIOS", "SCENARIO_NAMES",
+           "VERSION"]
+
+# bump whenever any generator's sampling or default parameters change:
+# it is part of the content-addressed trace-cache recipe, so stale disk
+# entries invalidate without mtime heuristics
+VERSION = 1
+
+
+def _rng(label: str, seed: int) -> np.random.Generator:
+    # crc32, not hash(): PYTHONHASHSEED randomizes hash() across processes
+    return np.random.default_rng(
+        zlib.crc32(f"{label}/{seed}".encode()) % (2 ** 31))
+
+
+def _window(rng, total_logical_pages: int, capacity_pages: Optional[int],
+            frac: float) -> tuple:
+    """(base, ws): working-set window sized against drive capacity,
+    clipped to the logical window — mirrors the MSR synthesizer."""
+    cap = capacity_pages or total_logical_pages
+    ws = max(int(cap * frac), 1024)
+    ws = min(ws, int(total_logical_pages * 0.9))
+    base = int(rng.integers(0, max(total_logical_pages - ws, 1)))
+    return base, ws
+
+
+def _requests(arrival, lba, pages, is_write) -> Dict:
+    return {"arrival_ms": np.asarray(arrival, np.float64),
+            "lba": np.asarray(lba, np.int64),
+            "pages": np.asarray(pages, np.int64),
+            "is_write": np.asarray(is_write, bool)}
+
+
+def zipf_overwrite(total_logical_pages: int,
+                   capacity_pages: Optional[int] = None, seed: int = 0, *,
+                   n_requests: int = 24000, write_ratio: float = 0.95,
+                   skew: float = 3.0, ws_frac: float = 0.010,
+                   interarrival_ms: float = 0.4, idle_every: int = 8000,
+                   idle_ms: float = 280.0) -> ir.Trace:
+    """Skewed-overwrite workload: a tiny hot set rewritten continuously."""
+    rng = _rng("zipf_overwrite", seed)
+    base, ws = _window(rng, total_logical_pages, capacity_pages, ws_frac)
+    u = rng.random(n_requests)
+    lba = base + np.clip(np.floor(ws * u ** skew).astype(np.int64),
+                         0, ws - 1)
+    pages = np.clip(rng.poisson(2.0, n_requests), 1, 16)
+    is_write = rng.random(n_requests) < write_ratio
+    gaps = rng.exponential(interarrival_ms, n_requests)
+    idle = (np.arange(n_requests) % idle_every) == idle_every - 1
+    arrival = np.cumsum(gaps + idle * idle_ms)
+    arrival -= arrival[0]
+    return ir.from_requests(
+        _requests(arrival, lba, pages, is_write), total_logical_pages,
+        f"gen:zipf_overwrite/seed={seed}")
+
+
+def diurnal(total_logical_pages: int,
+            capacity_pages: Optional[int] = None, seed: int = 0, *,
+            cycles: int = 8, busy_requests: int = 3000,
+            write_ratio: float = 0.8, ws_frac: float = 0.03,
+            busy_interarrival_ms: float = 0.3,
+            night_ms: float = 2500.0) -> ir.Trace:
+    """Day/night duty cycle: dense busy phases separated by long idle."""
+    rng = _rng("diurnal", seed)
+    base, ws = _window(rng, total_logical_pages, capacity_pages, ws_frac)
+    n = cycles * busy_requests
+    lba = base + rng.integers(0, ws, n)
+    pages = np.clip(rng.poisson(3.0, n), 1, 16)
+    is_write = rng.random(n) < write_ratio
+    gaps = rng.exponential(busy_interarrival_ms, n)
+    night = (np.arange(n) % busy_requests) == busy_requests - 1
+    arrival = np.cumsum(gaps + night * night_ms)
+    arrival -= arrival[0]
+    return ir.from_requests(
+        _requests(arrival, lba, pages, is_write), total_logical_pages,
+        f"gen:diurnal/seed={seed}")
+
+
+def read_burst(total_logical_pages: int,
+               capacity_pages: Optional[int] = None, seed: int = 0, *,
+               n_requests: int = 24000, burst_every: int = 3000,
+               burst_len: int = 600, ws_frac: float = 0.03,
+               interarrival_ms: float = 0.5, idle_ms: float = 300.0
+               ) -> ir.Trace:
+    """Read-mostly service with periodic write bursts: the cache fills in
+    spikes and must drain between them."""
+    rng = _rng("read_burst", seed)
+    base, ws = _window(rng, total_logical_pages, capacity_pages, ws_frac)
+    lba = base + rng.integers(0, ws, n_requests)
+    pages = np.clip(rng.poisson(2.5, n_requests), 1, 16)
+    phase = np.arange(n_requests) % burst_every
+    in_burst = phase < burst_len
+    is_write = np.where(in_burst, rng.random(n_requests) < 0.95,
+                        rng.random(n_requests) < 0.10)
+    # bursts arrive back-to-back; the service period breathes, with an
+    # idle gap as each burst ends
+    gaps = np.where(in_burst, rng.exponential(0.05, n_requests),
+                    rng.exponential(interarrival_ms, n_requests))
+    gaps = gaps + (phase == burst_len) * idle_ms
+    arrival = np.cumsum(gaps)
+    arrival -= arrival[0]
+    return ir.from_requests(
+        _requests(arrival, lba, pages, is_write), total_logical_pages,
+        f"gen:read_burst/seed={seed}")
+
+
+def gc_pressure(total_logical_pages: int,
+                capacity_pages: Optional[int] = None, seed: int = 0, *,
+                n_requests: int = 26000, ws_frac: float = 0.08,
+                interarrival_ms: float = 0.1) -> ir.Trace:
+    """Cache-overrun stress: sustained random writes far beyond the SLC
+    cache with near-zero idle — reclamation must run in conflict with
+    host writes (paper Fig. 7)."""
+    rng = _rng("gc_pressure", seed)
+    base, ws = _window(rng, total_logical_pages, capacity_pages, ws_frac)
+    lba = base + rng.integers(0, ws, n_requests)
+    pages = np.clip(rng.poisson(3.0, n_requests), 1, 16)
+    is_write = rng.random(n_requests) < 0.97
+    arrival = np.cumsum(rng.exponential(interarrival_ms, n_requests))
+    arrival -= arrival[0]
+    return ir.from_requests(
+        _requests(arrival, lba, pages, is_write), total_logical_pages,
+        f"gen:gc_pressure/seed={seed}")
+
+
+def mix_traces(tenants: Sequence[ir.Trace], total_logical_pages: int, *,
+               partition: bool = True) -> ir.Trace:
+    """Multi-tenant mixer: interleave N traces by arrival time.
+
+    Each tenant is (optionally) remapped into its own slice of the logical
+    window, so tenants never alias pages; the merge is stable, so ops with
+    equal arrival keep tenant order, and every tenant's internal op order
+    is preserved (tests/test_workloads.py invariants)."""
+    if not tenants:
+        raise ValueError("mix_traces needs at least one tenant")
+    n = len(tenants)
+    slot = total_logical_pages // n
+    parts, req_off = [], 0
+    for i, t in enumerate(tenants):
+        if partition:
+            t = t.remap(slot, base=i * slot)
+        parts.append((t, req_off))
+        req_off += t.n_reqs
+    arrival = np.concatenate([t.arrival_ms for t, _ in parts])
+    order = np.argsort(arrival, kind="stable")
+    return ir.Trace(
+        arrival_ms=arrival[order],
+        lba=np.concatenate([t.lba for t, _ in parts])[order],
+        is_write=np.concatenate([t.is_write for t, _ in parts])[order],
+        req_id=np.concatenate(
+            [t.req_id + np.int32(off) for t, off in parts])[order],
+        n_reqs=req_off,
+        source="mix(" + ",".join(t.source for t, _ in parts) + ")",
+        history=(f"mix(n={n},partition={partition})",))
+
+
+def tenant_mix(total_logical_pages: int,
+               capacity_pages: Optional[int] = None,
+               seed: int = 0) -> ir.Trace:
+    """Three-tenant colocation: a hot overwriter, a read-heavy service and
+    a sequential streamer sharing one drive."""
+    from repro.workloads.synth import TraceStats, synthesize_stats
+    hot = zipf_overwrite(total_logical_pages, capacity_pages, seed,
+                         n_requests=10000, ws_frac=0.006)
+    reader = read_burst(total_logical_pages, capacity_pages, seed + 1,
+                        n_requests=8000, burst_every=2500, burst_len=300)
+    streamer_stats = TraceStats(
+        n_requests=8000, write_ratio=0.85, mean_req_pages=6.0,
+        seq_prob=0.9, working_set_frac=0.04, skew=1.0,
+        interarrival_ms=0.6, idle_every=2500, idle_ms=260.0)
+    streamer = ir.trace_from_requests(
+        synthesize_stats(streamer_stats, total_logical_pages, seed + 2,
+                         capacity_pages, label="streamer"),
+        "daily", total_logical_pages, f"gen:streamer/seed={seed + 2}")
+    return mix_traces([hot, reader, streamer], total_logical_pages)
+
+
+# name -> builder(total_logical_pages, capacity_pages, seed) -> Trace
+SCENARIOS: Dict[str, Callable] = {
+    "zipf_hot": zipf_overwrite,
+    "diurnal": diurnal,
+    "read_burst": read_burst,
+    "gc_pressure": gc_pressure,
+    "tenant_mix": tenant_mix,
+}
+
+SCENARIO_NAMES = tuple(SCENARIOS)

@@ -25,4 +25,9 @@ python -m repro.sweep.cli --trace-file tests/data/sample_msr.csv \
   --policies baseline,ips --modes daily --max-ops 4096 --no-save
 
 echo
+echo "== smoke: policy registry (beyond-paper compositions) =="
+python -m repro.sweep.cli --grid quick --policies dyn_slc,ips_lazy \
+  --max-ops 4096 --no-save
+
+echo
 echo "ci_check: OK"

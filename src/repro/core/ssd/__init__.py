@@ -1,6 +1,9 @@
 from repro.core.ssd.config import SSDConfig, TimingConfig
-from repro.core.ssd.fleet import (flush_fleet, run_fleet, shard_cells,
-                                  stack_ops, stack_params, summarize_fleet)
+from repro.core.ssd.fleet import (flush_fleet, init_fleet_state, run_fleet,
+                                  shard_cells, stack_ops, stack_params,
+                                  summarize_fleet)
+from repro.core.ssd.policies import (PAPER_POLICIES, PolicySpec, get_spec,
+                                     policy_names, register, resolve_spec)
 from repro.core.ssd.sim import (CTR, POLICIES, CellParams, SimState,
                                 default_params, flush_cache, init_state,
                                 make_step, run_trace, summarize)
@@ -11,5 +14,6 @@ __all__ = ["SSDConfig", "TimingConfig", "CTR", "POLICIES", "CellParams",
            "SimState", "default_params", "flush_cache", "init_state",
            "make_step", "run_trace", "summarize", "TRACE_NAMES", "TRACES",
            "make_trace", "stack_traces", "truncate_trace", "flush_fleet",
-           "run_fleet", "shard_cells", "stack_ops", "stack_params",
-           "summarize_fleet"]
+           "init_fleet_state", "run_fleet", "shard_cells", "stack_ops",
+           "stack_params", "summarize_fleet", "PolicySpec", "register",
+           "get_spec", "resolve_spec", "policy_names", "PAPER_POLICIES"]

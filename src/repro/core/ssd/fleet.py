@@ -1,11 +1,13 @@
 """Fleet simulation: batched multi-trace / multi-seed SSD simulation.
 
 Generalizes `sim.run_trace` from one `(PAD_OPS,)` trace to a stacked
-`(n_cells, PAD_OPS)` trace tensor: all cells of one (policy, mode) group —
-traces x seeds x cache sizes x repeat factors — execute inside a single
-compiled `vmap(lax.scan)`. Per-cell knobs (`CellParams`) are traced, so a
-whole cache-size sweep is one compile; only policy and mode (which select
-different code paths) split compilations (DESIGN.md §4).
+`(n_cells, PAD_OPS)` trace tensor: all cells of one (composition, mode)
+group — traces x seeds x cache sizes x repeat factors — execute inside a
+single compiled `vmap(lax.scan)`. Per-cell knobs (`CellParams`) are
+traced, so a whole cache-size sweep is one compile; only the policy's
+mechanism composition and the mode (which select different code paths)
+split compilations (DESIGN.md §4) — two registered policy names with the
+same composition share one compiled fleet.
 
 Device sharding: when the process has more than one JAX device (e.g. the
 sweep CLI forces `--xla_force_host_platform_device_count=<n>` host devices,
@@ -13,6 +15,12 @@ or real accelerators are present), `shard_cells` lays the cell axis across
 the device mesh and the jitted fleet scan runs cells in parallel — the scan
 carries no cross-cell dependency, so SPMD partitioning is embarrassingly
 clean. On one device it degrades to a plain vmap.
+
+Memory: the scan carry (dominated by the per-cell residency map `loc` /
+`loc_ep`, ~192 KB per cell at the 2^16 logical window) is built outside
+the jit and DONATED (`donate_argnums`), so XLA may alias the initial-state
+buffers into the scan instead of holding both across the fleet — the peak
+saving scales with the cell count.
 
 Equivalence contract: `run_fleet(...)[i]` is bit-for-bit identical to
 `run_trace` on cell i with the same `CellParams` (verified by
@@ -29,11 +37,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ssd.config import SSDConfig
+from repro.core.ssd.policies import resolve_spec, tracked_region
 from repro.core.ssd.sim import (CellParams, SimState, flush_cache,
                                 init_state, make_step, summarize)
 
-__all__ = ["stack_params", "stack_ops", "shard_cells", "run_fleet",
-           "flush_fleet", "summarize_fleet"]
+__all__ = ["stack_params", "stack_ops", "shard_cells", "init_fleet_state",
+           "run_fleet", "flush_fleet", "summarize_fleet"]
 
 
 def stack_params(params: Sequence[CellParams]) -> CellParams:
@@ -81,28 +90,45 @@ def shard_cells(tree, devices=None):
     return jax.tree.map(lambda x: jax.device_put(x, sharding), tree)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "policy", "closed_loop",
-                                             "n_logical"))
-def run_fleet(cfg: SSDConfig, policy: str, ops: dict, params: CellParams,
-              *, closed_loop: bool, n_logical: int):
-    """Simulate a whole (policy, mode) fleet in one compiled scan.
+def init_fleet_state(cfg: SSDConfig, n_logical: int,
+                     n_cells: int) -> SimState:
+    """(C,)-stacked initial SimState (the donated fleet scan carry)."""
+    return jax.vmap(lambda _: init_state(cfg, n_logical))(
+        jnp.arange(n_cells))
 
-    ops: (C, T) stacked op tensors from `stack_ops`; params: (C,)-stacked
-    CellParams. Returns (latency (C, T), final SimState with leading C)."""
-    def one(cell_ops, cell_params):
-        step = make_step(cfg, policy, closed_loop=closed_loop,
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec", "closed_loop"),
+                   donate_argnums=(2,))
+def _run_fleet(cfg: SSDConfig, spec, state0: SimState, ops: dict,
+               params: CellParams, *, closed_loop: bool):
+    def one(cell_state, cell_ops, cell_params):
+        step = make_step(cfg, spec, closed_loop=closed_loop,
                          params=cell_params)
-        final, latency = jax.lax.scan(step, init_state(cfg, n_logical),
-                                      cell_ops)
+        final, latency = jax.lax.scan(step, cell_state, cell_ops)
         return latency, final
 
-    latency, final = jax.vmap(one)(ops, params)
+    latency, final = jax.vmap(one)(state0, ops, params)
     return latency, final
 
 
-def flush_fleet(cfg: SSDConfig, states: SimState, policy: str) -> SimState:
+def run_fleet(cfg: SSDConfig, policy, ops: dict, params: CellParams,
+              *, closed_loop: bool, n_logical: int):
+    """Simulate a whole (composition, mode) fleet in one compiled scan.
+
+    ops: (C, T) stacked op tensors from `stack_ops`; params: (C,)-stacked
+    CellParams; `policy` a registered name or PolicySpec. Returns
+    (latency (C, T), final SimState with leading C). The freshly built
+    initial state is donated to the scan (see module docstring)."""
+    spec = resolve_spec(policy)
+    n_cells = ops["lba"].shape[0]
+    state0 = shard_cells(init_fleet_state(cfg, n_logical, n_cells))
+    return _run_fleet(cfg, spec, state0, ops, params,
+                      closed_loop=closed_loop)
+
+
+def flush_fleet(cfg: SSDConfig, states: SimState, policy) -> SimState:
     """Vectorized end-of-workload flush (sim.flush_cache) over the C axis."""
-    if policy in ("ips", "ips_agc"):
+    if tracked_region(resolve_spec(policy)) is None:
         return states
     return jax.vmap(lambda s: flush_cache(cfg, s, policy))(states)
 

@@ -1,0 +1,38 @@
+"""Composable policy engine for the hybrid-SSD simulator (DESIGN.md §8).
+
+A policy is a *static composition* of orthogonal mechanisms — allocation,
+reclamation trigger, reclamation mechanism, idle scheduler — assembled by
+`engine.build_step` into the specialized `lax.scan` step, and looked up by
+name through `registry`. The four paper schemes are registry entries with
+a bit-identity contract to the seed monolith; beyond-paper policies
+(`dyn_slc`, `ips_lazy`) are single `register(...)` calls.
+
+Import layering: `spec` and `registry` are pure Python (usable before jax
+initializes); `state`/`allocation`/`reclaim`/`idle`/`engine` — and hence
+this package `__init__` — import jax.
+"""
+from repro.core.ssd.policies.allocation import ALLOCATIONS, AllocationMech
+from repro.core.ssd.policies.engine import (StepCtx, build_step,
+                                            state_fields_used)
+from repro.core.ssd.policies.registry import (PAPER_POLICIES, PolicyEntry,
+                                              baseline_of, get_entry,
+                                              get_spec, policy_names,
+                                              register, resolve_spec)
+from repro.core.ssd.policies.spec import (ALLOCATION_AXIS, IDLE_AXIS,
+                                          MECHANISM_AXIS, TRIGGER_AXIS,
+                                          PolicySpec, tracked_region,
+                                          validate_spec)
+from repro.core.ssd.policies.state import (CTR, OVERRUN_PAGES,
+                                           WATERMARK_DEN, WATERMARK_NUM,
+                                           CellParams, SimState,
+                                           default_cell, init_state)
+
+__all__ = [
+    "PolicySpec", "PolicyEntry", "register", "get_entry", "get_spec",
+    "resolve_spec", "baseline_of", "policy_names", "PAPER_POLICIES",
+    "validate_spec", "tracked_region", "ALLOCATION_AXIS", "TRIGGER_AXIS",
+    "MECHANISM_AXIS", "IDLE_AXIS", "ALLOCATIONS", "AllocationMech",
+    "StepCtx", "build_step", "state_fields_used", "CellParams", "SimState",
+    "CTR", "init_state", "default_cell", "WATERMARK_NUM", "WATERMARK_DEN",
+    "OVERRUN_PAGES",
+]

@@ -1,0 +1,261 @@
+"""Policy engine: assembles the specialized `lax.scan` step from a
+mechanism composition (`PolicySpec`).
+
+The engine owns only what every policy shares — idle accounting, op
+service/queueing, residency-map maintenance, counters; everything
+policy-specific arrives as mechanism fragments selected *statically* from
+the spec, so each composition compiles to exactly the code it needs
+(XLA never sees the unselected fragments).
+
+Fragment order is fixed and canonical (it is the seed monolith's order):
+
+  1. triggered migrate reclamation        (mechanism == "migrate")
+  2. dual-region traditional reclamation  (allocation dual, idle != none)
+  3. AGC slot fill                        (idle == "agc")
+  4. generation completion                (mechanism == "reprogram")
+  5. destination selection + service + bookkeeping (shared)
+
+Bit-identity contract: for the four paper compositions the assembled step
+executes the monolith's op sequence verbatim — tests/test_policies.py
+checks every latency, counter and state field against the vendored golden.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.ssd.policies import idle as idle_mod
+from repro.core.ssd.policies import reclaim
+from repro.core.ssd.policies.allocation import ALLOCATIONS
+from repro.core.ssd.policies.registry import resolve_spec
+from repro.core.ssd.policies.spec import PolicySpec, tracked_region
+from repro.core.ssd.policies.state import CTR, CellParams, SimState
+
+__all__ = ["StepCtx", "build_step", "state_fields_used"]
+
+
+class StepCtx:
+    """Mutable per-op execution context shared by mechanism fragments.
+
+    Holds the arriving op's predicates, the local plane's state scalars
+    (fragments mutate these; the engine writes them back), the running
+    counter vector/conflict accumulator, the step's idle budgets, and the
+    spec-static cost constants. Plain attributes — everything is a traced
+    jax scalar except the Python-level constants."""
+    __slots__ = (
+        # op predicates
+        "is_write", "is_pad",
+        # local plane state (mutated by fragments)
+        "slc_used", "rp_done", "trad_used", "valid_mig", "epoch_p",
+        # accumulators
+        "ctr", "conflict",
+        # idle budgets (replay mode; 0-filled in closed loop)
+        "dev_budget", "full_gap",
+        # traced per-cell knobs
+        "cap_basic", "cap_trad", "cap_boost", "waste_p",
+        # static cost constants
+        "c_mig", "c_agc", "c_trad_rp", "erase_ms", "ppb_slc",
+    )
+
+
+def state_fields_used(spec: PolicySpec):
+    """Union of SimState fields the composition's fragments touch, plus
+    the fields the engine's shared service/bookkeeping section reads or
+    writes for every composition (that shared section touches the whole
+    carry — SimState is one fixed pytree — so the union is how mechanism
+    declarations are audited, not a pruning oracle). Registry/property
+    tests validate the result against `SimState._fields`."""
+    fields = {"busy", "slc_used", "rp_done", "trad_used", "valid_mig",
+              "epoch", "loc", "loc_ep", "counters", "prev_t", "idle_cum",
+              "idle_seen"}
+    alloc = ALLOCATIONS[spec.allocation]
+    fields.update(alloc.state_fields)
+    if spec.mechanism == "migrate":
+        fields.update(reclaim.MIGRATE_FIELDS)
+    if spec.mechanism == "reprogram":
+        fields.update(reclaim.REPROGRAM_FIELDS)
+    if alloc.dual and spec.idle != "none":
+        fields.update(reclaim.DUAL_RECLAIM_FIELDS)
+    if spec.idle == "agc":
+        fields.update(idle_mod.AGC_FIELDS)
+    return frozenset(fields)
+
+
+def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
+    """Returns the scan step specialized to (composition, mode).
+
+    `policy` is a registered name or a raw PolicySpec; per-cell knobs
+    (cache capacities, boost, idle threshold, waste_p) come from `params`
+    as traced scalars."""
+    spec = resolve_spec(policy)
+    t_ = cfg.timing
+    p_total = cfg.num_planes
+    alloc = ALLOCATIONS[spec.allocation]
+    dual = alloc.dual
+    use_rp = spec.mechanism == "reprogram"
+    run_migrate = spec.mechanism == "migrate"   # validate_spec guarantees
+    #                                             an idle scheduler exists
+    run_dual_reclaim = dual and spec.idle != "none"
+    run_agc = spec.idle == "agc"
+    pressure = spec.trigger == "watermark"
+    tracked = tracked_region(spec)
+    cap_basic = params.cap_basic
+    cap_trad = params.cap_trad
+    cap_boost = (jnp.int32(0) if params.cap_boost is None
+                 else params.cap_boost)
+    waste_p = params.waste_p
+    ppb_slc = cfg.pages_per_slc_block
+
+    c_mig = t_.slc_read_ms + t_.tlc_write_ms        # SLC -> TLC migration
+    c_agc = t_.tlc_read_ms + t_.reprogram_ms        # AGC fill of used SLC
+    c_trad_rp = t_.slc_read_ms + t_.reprogram_ms    # trad SLC -> IPS region
+    idle_thr = params.idle_thr
+
+    def step(state: SimState, op):
+        t, lba, kind = op["arrival_ms"], op["lba"], op["is_write"]
+        plane = lba % p_total
+
+        ctx = StepCtx()
+        ctx.is_pad = kind < 0
+        ctx.is_write = kind == 1
+        busy_p = state.busy[plane]
+        ctx.ctr = state.counters
+        ctx.slc_used = state.slc_used[plane]
+        ctx.rp_done = state.rp_done[plane]
+        ctx.trad_used = state.trad_used[plane]
+        ctx.valid_mig = state.valid_mig[plane]
+        ctx.epoch_p = state.epoch[plane]
+        ctx.conflict = jnp.float32(0.0)
+        ctx.cap_basic, ctx.cap_trad = cap_basic, cap_trad
+        ctx.cap_boost, ctx.waste_p = cap_boost, waste_p
+        ctx.c_mig, ctx.c_agc, ctx.c_trad_rp = c_mig, c_agc, c_trad_rp
+        ctx.erase_ms, ctx.ppb_slc = t_.erase_ms, ppb_slc
+
+        # ------------------------------------------------------------
+        # 1. idle work on this plane, lazily applied for [busy_p, t)
+        # ------------------------------------------------------------
+        # Idle accounting (shared by every composition):
+        # * Device-level idle: inter-arrival gaps exceeding the threshold
+        #   (Turbo-Write semantics) accumulate; every plane can consume the
+        #   window in parallel, applied lazily when next touched; unused
+        #   past idle expires.
+        # * Which fragments consume it — and whether they may overrun into
+        #   the arriving write — is the mechanism composition's business
+        #   (see module docstring for the canonical order).
+        idle_cum = state.idle_cum
+        if not closed_loop:
+            gap = jnp.maximum(t - state.prev_t, 0.0)
+            idle_cum = idle_cum + jnp.where((gap > idle_thr) & ~ctx.is_pad,
+                                            gap, 0.0)
+            ctx.dev_budget = jnp.where(ctx.is_pad, 0.0,
+                                       idle_cum - state.idle_seen[plane])
+            ctx.full_gap = jnp.where(ctx.is_pad, 0.0,
+                                     jnp.maximum(t - busy_p, 0.0))
+
+            if run_migrate:
+                reclaim.migrate_reclaim(ctx, alloc, pressure=pressure)
+            if run_dual_reclaim:
+                reclaim.dual_reclaim(ctx)
+            if run_agc:
+                idle_mod.agc_fill(ctx, dual=dual)
+
+        # generation completion: fully reprogrammed region -> fresh layer
+        if use_rp:
+            reclaim.generation_completion(ctx)
+
+        # ------------------------------------------------------------
+        # 2. service the op
+        # ------------------------------------------------------------
+        is_write, is_pad, conflict = ctx.is_write, ctx.is_pad, ctx.conflict
+        slc_used, rp_done = ctx.slc_used, ctx.rp_done
+        trad_used, valid_mig, epoch_p = (ctx.trad_used, ctx.valid_mig,
+                                         ctx.epoch_p)
+
+        if closed_loop:
+            wait = jnp.float32(0.0)
+            start = busy_p + conflict
+        else:
+            wait = jnp.maximum(busy_p - t, 0.0)
+            start = t + wait + conflict
+
+        old = state.loc[lba].astype(jnp.int32)          # single read of loc
+        old_ep = state.loc_ep[lba]                      # ... and of loc_ep
+        old_clip = jnp.clip(old, 0, p_total - 1)
+        # epoch may have been bumped this step (erase) for the local plane
+        epoch_eff = jnp.where(old_clip == plane, epoch_p,
+                              state.epoch[old_clip])
+        old_ok = (old >= 0) & (old_ep == epoch_eff.astype(jnp.int16))
+
+        # write destination: allocation decides region placement, the
+        # reprogram mechanism adds the in-place conversion path
+        to_slc = is_write & (slc_used < alloc.eff_cap(ctx))
+        if dual:
+            to_trad = is_write & ~to_slc & (trad_used < cap_trad)
+        else:
+            to_trad = jnp.zeros_like(to_slc)
+        if use_rp:
+            rp_avail = 2 * slc_used - rp_done
+            to_rp = is_write & ~to_slc & ~to_trad & (rp_avail > 0)
+        else:
+            to_rp = jnp.zeros_like(to_slc)
+        to_tlc = is_write & ~to_slc & ~to_trad & ~to_rp
+
+        prog_t = jnp.where(to_slc | to_trad, t_.slc_write_ms,
+                           jnp.where(to_rp, t_.reprogram_ms,
+                                     t_.tlc_write_ms))
+        read_t = jnp.where(old_ok, t_.slc_read_ms, t_.tlc_read_ms)
+        service = jnp.where(is_write, prog_t, read_t)
+        service = jnp.where(is_pad, 0.0, service)
+        latency = jnp.where(is_pad, 0.0,
+                            wait + conflict + service)
+        busy_new = jnp.where(is_pad, busy_p, start + service)
+
+        # bookkeeping
+        slc_used += to_slc.astype(jnp.int32)
+        trad_used += to_trad.astype(jnp.int32)
+        rp_done += to_rp.astype(jnp.int32)
+
+        # residency tracking covers exactly the migratable region
+        if tracked == "basic":
+            track_new = to_slc
+        elif tracked == "trad":
+            track_new = to_trad
+        else:
+            track_new = jnp.zeros_like(to_slc)
+        # invalidate previous cached copy (only on real writes)
+        valid_dec = (is_write & old_ok).astype(jnp.int32)
+
+        ctr = ctx.ctr
+        ctr = ctr.at[CTR["host_w"]].add(is_write.astype(jnp.float32))
+        ctr = ctr.at[CTR["slc_w"]].add((to_slc | to_trad).astype(jnp.float32))
+        ctr = ctr.at[CTR["tlc_w"]].add(to_tlc.astype(jnp.float32))
+        ctr = ctr.at[CTR["rp_host"]].add(to_rp.astype(jnp.float32))
+        ctr = ctr.at[CTR["conflict_ms"]].add(jnp.where(is_write, conflict,
+                                                       0.0))
+
+        # mapping update: writes set the new location; reads/pads keep it
+        loc_val = jnp.where(is_write,
+                            jnp.where(track_new, plane, -1),
+                            old).astype(jnp.int8)
+        loc_ep_val = jnp.where(is_write & track_new,
+                               epoch_p.astype(jnp.int16), old_ep)
+
+        new_state = SimState(
+            busy=state.busy.at[plane].set(busy_new),
+            slc_used=state.slc_used.at[plane].set(slc_used),
+            rp_done=state.rp_done.at[plane].set(rp_done),
+            trad_used=state.trad_used.at[plane].set(trad_used),
+            valid_mig=state.valid_mig.at[plane].set(valid_mig)
+            .at[old_clip].add(-valid_dec)
+            .at[plane].add(jnp.where(track_new, 1, 0).astype(jnp.int32)),
+            epoch=state.epoch.at[plane].set(epoch_p),
+            loc=state.loc.at[lba].set(loc_val),
+            loc_ep=state.loc_ep.at[lba].set(loc_ep_val),
+            counters=ctr,
+            prev_t=jnp.where(is_pad, state.prev_t, t),
+            idle_cum=idle_cum,
+            idle_seen=state.idle_seen.at[plane].set(
+                jnp.where(is_pad, state.idle_seen[plane], idle_cum)),
+        )
+        return new_state, latency
+
+    return step

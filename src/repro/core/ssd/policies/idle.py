@@ -1,0 +1,36 @@
+"""Idle-scheduler fragments: work that runs in idle time beyond triggered
+reclamation.
+
+"none" and "greedy" contribute no fragment of their own — greedy is a
+property of the triggered reclamation (it may consume any gap,
+non-interruptibly); only AGC adds an independent idle activity.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.ssd.policies.state import CTR
+
+__all__ = ["agc_fill", "AGC_FIELDS"]
+
+AGC_FIELDS = ("slc_used", "rp_done", "valid_mig", "counters")
+
+
+def agc_fill(ctx, *, dual: bool) -> None:
+    """Interruptible Active GC fill of remaining reprogram slots (last
+    resort for dual allocation, primary idle mechanism for ips_agc).
+    Interruptible at page granularity => safe to run in ANY per-plane
+    gap; an arriving write waits at most half an op."""
+    agc_budget = ctx.full_gap
+    rp_avail = 2 * ctx.slc_used - ctx.rp_done
+    if dual:
+        rp_avail = jnp.where(ctx.valid_mig == 0, rp_avail, 0)
+    ops = jnp.minimum(rp_avail, (agc_budget / ctx.c_agc).astype(jnp.int32))
+    ctx.rp_done = ctx.rp_done + ops
+    opsf = ops.astype(jnp.float32)
+    ctx.ctr = ctx.ctr.at[CTR["rp_agc"]].add(opsf)
+    ctx.ctr = ctx.ctr.at[CTR["agc_waste"]].add(opsf * ctx.waste_p)
+    # interruptible at page granularity: at most half an op
+    agc_active = (2 * ctx.slc_used - ctx.rp_done) > 0
+    ctx.conflict = ctx.conflict + jnp.where(agc_active & ctx.is_write,
+                                            ctx.c_agc * 0.5, 0.0)

@@ -1,0 +1,107 @@
+"""Reclamation fragments: how (and when) pages leave the cache.
+
+Step fragments mutate the engine's `StepCtx` in place; the op sequence of
+each fragment is the seed monolith's, verbatim, so assembling the paper
+compositions reproduces the pre-refactor scan bit for bit (enforced by
+tests/test_policies.py against the vendored golden).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.ssd.policies.state import (CTR, OVERRUN_PAGES,
+                                           WATERMARK_DEN, WATERMARK_NUM,
+                                           ceil_div)
+
+__all__ = ["migrate_reclaim", "dual_reclaim", "generation_completion",
+           "MIGRATE_FIELDS", "DUAL_RECLAIM_FIELDS", "REPROGRAM_FIELDS"]
+
+MIGRATE_FIELDS = ("slc_used", "valid_mig", "epoch", "counters")
+DUAL_RECLAIM_FIELDS = ("slc_used", "rp_done", "trad_used", "valid_mig",
+                       "epoch", "counters")
+REPROGRAM_FIELDS = ("slc_used", "rp_done", "counters")
+
+
+def migrate_reclaim(ctx, alloc, *, pressure: bool) -> None:
+    """Migrate-to-TLC reclamation of the tracked basic region.
+
+    trigger="watermark" (`pressure=True`): at/above 7/8 occupancy the
+    reclamation escalates onto the critical path — it may use the whole
+    per-plane gap plus a bounded OVERRUN into the arriving write (the
+    paper's Fig. 7 conflict), but only while that keeps the cache
+    writable; once full, writes go TLC-direct (the Fig. 3 cliff) and
+    reclamation stays gap-only. trigger="idle_gap" (`pressure=False`):
+    reclamation only ever consumes accumulated device-idle budget and
+    never stalls a write.
+    """
+    eff = alloc.eff_cap(ctx)
+    if pressure:
+        above_wm = ctx.slc_used >= (WATERMARK_NUM * eff // WATERMARK_DEN)
+        overrun_allow = jnp.where(ctx.slc_used < eff,
+                                  OVERRUN_PAGES * ctx.c_mig, 0.0)
+        budget = jnp.where(above_wm, ctx.full_gap + overrun_allow,
+                           ctx.dev_budget)
+    else:
+        budget = ctx.dev_budget
+    mig = jnp.minimum(ctx.valid_mig, (budget / ctx.c_mig).astype(jnp.int32))
+    ctx.valid_mig = ctx.valid_mig - mig
+    used_ms = mig.astype(jnp.float32) * ctx.c_mig
+    budget = budget - used_ms
+    ctx.ctr = ctx.ctr.at[CTR["mig_w"]].add(mig.astype(jnp.float32))
+    blocks = ceil_div(ctx.slc_used, ctx.ppb_slc)
+    erase_ms_total = blocks.astype(jnp.float32) * ctx.erase_ms
+    can_erase = ((ctx.valid_mig == 0) & (ctx.slc_used > 0)
+                 & (budget >= erase_ms_total))
+    ctx.ctr = ctx.ctr.at[CTR["erases"]].add(
+        jnp.where(can_erase, blocks, 0).astype(jnp.float32))
+    ctx.epoch_p = ctx.epoch_p + can_erase.astype(jnp.int32)
+    ctx.slc_used = jnp.where(can_erase, 0, ctx.slc_used)
+    used_ms += jnp.where(can_erase, erase_ms_total, 0.0)
+    if pressure:
+        # overrun beyond the real gap stalls the arriving write
+        ctx.conflict = ctx.conflict + jnp.where(
+            above_wm & ctx.is_write,
+            jnp.maximum(used_ms - ctx.full_gap, 0.0), 0.0)
+
+
+def dual_reclaim(ctx) -> None:
+    """Dual-allocation idle reclamation of the traditional region:
+    (1) reprogram valid pages into the IPS region's free slots (no TLC
+    write), (2) spill the overflow to free TLC, (3) erase clean blocks.
+    Consumes device-idle budget only (idle-gap triggered)."""
+    budget = ctx.dev_budget
+    # (1) traditional -> IPS region via reprogram (no TLC write)
+    rp_avail = 2 * ctx.slc_used - ctx.rp_done
+    ops1 = jnp.minimum(jnp.minimum(ctx.valid_mig, rp_avail),
+                       (budget / ctx.c_trad_rp).astype(jnp.int32))
+    ctx.rp_done = ctx.rp_done + ops1
+    ctx.valid_mig = ctx.valid_mig - ops1
+    budget = budget - ops1.astype(jnp.float32) * ctx.c_trad_rp
+    ctx.ctr = ctx.ctr.at[CTR["rp_trad"]].add(ops1.astype(jnp.float32))
+    # (2) overflow: remaining trad valid pages -> free TLC
+    rp_avail = 2 * ctx.slc_used - ctx.rp_done
+    ops2 = jnp.minimum(
+        jnp.where(rp_avail == 0, ctx.valid_mig, 0),
+        (budget / ctx.c_mig).astype(jnp.int32))
+    ctx.valid_mig = ctx.valid_mig - ops2
+    budget = budget - ops2.astype(jnp.float32) * ctx.c_mig
+    ctx.ctr = ctx.ctr.at[CTR["mig_w"]].add(ops2.astype(jnp.float32))
+    # (3) erase clean traditional blocks
+    blocks = ceil_div(ctx.trad_used, ctx.ppb_slc)
+    can_erase = ((ctx.valid_mig == 0) & (ctx.trad_used > 0)
+                 & (budget >= blocks.astype(jnp.float32) * ctx.erase_ms))
+    budget = budget - jnp.where(can_erase,
+                                blocks.astype(jnp.float32) * ctx.erase_ms,
+                                0.0)
+    ctx.ctr = ctx.ctr.at[CTR["erases"]].add(
+        jnp.where(can_erase, blocks, 0).astype(jnp.float32))
+    ctx.epoch_p = ctx.epoch_p + can_erase.astype(jnp.int32)
+    ctx.trad_used = jnp.where(can_erase, 0, ctx.trad_used)
+
+
+def generation_completion(ctx) -> None:
+    """Reprogram mechanism: a fully reprogrammed region (2 slots per used
+    SLC page consumed) densified in place — it yields a fresh SLC layer."""
+    fresh = (ctx.slc_used > 0) & (ctx.rp_done >= 2 * ctx.slc_used)
+    ctx.slc_used = jnp.where(fresh, 0, ctx.slc_used)
+    ctx.rp_done = jnp.where(fresh, 0, ctx.rp_done)

@@ -1,0 +1,123 @@
+"""Policy registry: names -> mechanism compositions (+ metadata).
+
+The four paper schemes and the beyond-paper compositions are data, not
+code: registering a policy is one `register(...)` call naming a
+`PolicySpec`. Every layer above the engine — `sim.run_trace`,
+`fleet.run_fleet`, `sweep.runner`/`cli`, `driver` — resolves policy names
+here, so adding a cache-management idea never touches the simulator step.
+
+Each entry declares its normalization `baseline`: the registered policy a
+cell of this policy divides by in reports (the paper normalizes everything
+to Turbo-Write "baseline"; `ips_lazy` instead declares `coop`, isolating
+exactly the value of coop's idle work).
+
+Pure Python (no jax) by design, like `policies.spec`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from repro.core.ssd.policies.spec import PolicySpec, validate_spec
+
+__all__ = ["PolicyEntry", "register", "get_entry", "get_spec",
+           "resolve_spec", "baseline_of", "policy_names",
+           "PAPER_POLICIES"]
+
+
+@dataclass(frozen=True)
+class PolicyEntry:
+    name: str
+    spec: PolicySpec
+    baseline: str = "baseline"   # registered policy this one normalizes to
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, PolicyEntry] = {}
+
+
+def register(name: str, spec: PolicySpec, *, baseline: str = "baseline",
+             doc: str = "", overwrite: bool = False) -> PolicyEntry:
+    """Register a named policy. Validates the composition up front so a
+    bad spec fails at import/registration time, not inside a traced scan."""
+    validate_spec(spec)
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"policy {name!r} already registered "
+                         f"({_REGISTRY[name].spec.composition}); pass "
+                         "overwrite=True to replace it")
+    if baseline != name and baseline not in _REGISTRY:
+        raise ValueError(
+            f"policy {name!r} declares baseline {baseline!r}, which is "
+            "not registered (register the baseline first)")
+    entry = PolicyEntry(name=name, spec=spec, baseline=baseline, doc=doc)
+    _REGISTRY[name] = entry
+    return entry
+
+
+def get_entry(name: str) -> PolicyEntry:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; registered: "
+                         f"{','.join(policy_names())}") from None
+
+
+def get_spec(name: str) -> PolicySpec:
+    return get_entry(name).spec
+
+
+def resolve_spec(policy) -> PolicySpec:
+    """Accept a registered name or a raw PolicySpec (validated)."""
+    if isinstance(policy, PolicySpec):
+        validate_spec(policy)
+        return policy
+    return get_spec(policy)
+
+
+def baseline_of(name: str) -> str:
+    return get_entry(name).baseline
+
+
+def policy_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# The paper's four schemes (sim.py module docstring describes each; the
+# composition is the normative definition).
+# ---------------------------------------------------------------------------
+
+register("baseline", PolicySpec("static", "watermark", "migrate", "greedy"),
+         doc="Turbo-Write static SLC cache; watermark-pressure migration "
+             "to TLC with bounded write-stalling overrun (paper Fig. 7).")
+register("ips", PolicySpec("static", "exhaustion", "reprogram", "none"),
+         doc="In-place Switch: SLC exhaustion converts host writes into "
+             "in-place reprogram writes; no idle work (paper §IV.B).")
+register("ips_agc", PolicySpec("static", "exhaustion", "reprogram", "agc"),
+         doc="IPS + interruptible Active GC: idle gaps pre-fill reprogram "
+             "slots from GC-victim blocks (paper §IV.C).")
+register("coop", PolicySpec("dual", "exhaustion", "reprogram", "agc"),
+         doc="Cooperative dual-region cache: idle reclaims the traditional "
+             "region by reprogramming into the IPS region (paper §IV.D).")
+
+PAPER_POLICIES = ("baseline", "ips", "ips_agc", "coop")
+
+# ---------------------------------------------------------------------------
+# Beyond-paper compositions: proof that the axes compose (ISSUE 3). Each is
+# one registration — no simulator code.
+# ---------------------------------------------------------------------------
+
+register("dyn_slc", PolicySpec("adaptive", "watermark", "migrate", "greedy"),
+         doc="Watermark-adaptive SLC sizing: crossing the pressure "
+             "watermark unlocks cap_boost extra SLC pages (TLC blocks "
+             "borrowed in SLC mode, cf. dynamic Turbo-Write); reclamation "
+             "and flush behave like baseline. cap_boost is a traced "
+             "CellParams knob — sizing sweeps never recompile.")
+register("ips_lazy", PolicySpec("dual", "exhaustion", "reprogram", "none"),
+         baseline="coop",
+         doc="coop minus all idle work: the dual-region layout absorbs "
+             "writes until both regions exhaust, then host writes "
+             "reprogram in place; the traditional region is only "
+             "reclaimed by the end-of-workload flush. Normalizes against "
+             "coop — the ratio is exactly the value of coop's idle "
+             "reclamation.")

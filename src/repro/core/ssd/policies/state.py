@@ -1,0 +1,104 @@
+"""Shared simulator state and traced per-cell parameters.
+
+Moved out of `repro.core.ssd.sim` so mechanism modules (allocation /
+reclaim / idle) and the engine can share them without import cycles;
+`sim` re-exports everything for backward compatibility.
+
+`SimState` is the union of the state fields every mechanism may use —
+one fixed pytree so fleets of *different* policies stack/stagger with
+identical carry shapes, and the fleet equivalence contract can compare
+states field-by-field across policies. Each mechanism declares the subset
+it reads/writes (`state_fields`), validated against `SimState._fields` at
+registration (DESIGN.md §8); unused fields cost nothing after XLA DCE.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+__all__ = ["CellParams", "SimState", "CTR", "init_state", "default_cell",
+           "WATERMARK_NUM", "WATERMARK_DEN", "OVERRUN_PAGES", "ceil_div"]
+
+# block-granularity reclamation model: pressure watermark + per-op overrun
+WATERMARK_NUM, WATERMARK_DEN = 7, 8
+OVERRUN_PAGES = 4               # one reclamation batch an arriving write may
+#                                 stall behind (paper Fig. 7)
+
+
+class CellParams(NamedTuple):
+    """Per-cell simulation knobs, *traced* through the compiled scan.
+
+    Everything that varies across sweep cells without changing control flow
+    lives here, so one compiled (composition, mode) scan serves every cell
+    of a parameter sweep — cache-size and idle-threshold sensitivity runs
+    (paper Fig. 12) are compile-free (DESIGN.md §4). The mechanism
+    composition and mode stay static: they select different code paths.
+    """
+    cap_basic: jnp.ndarray   # i32 — SLC pages/plane in the basic/IPS region
+    cap_trad: jnp.ndarray    # i32 — dual-allocation traditional pages/plane
+    idle_thr: jnp.ndarray    # f32 — device-idle gap threshold (ms)
+    waste_p: jnp.ndarray     # f32 — AGC early-migration waste probability
+    cap_boost: jnp.ndarray = None  # i32 — adaptive allocation: extra SLC
+    #                                pages unlocked above the watermark
+    #                                (None == 0 for non-adaptive policies)
+
+
+class SimState(NamedTuple):
+    busy: jnp.ndarray          # (P,) f32 — plane free time
+    slc_used: jnp.ndarray      # (P,) i32 — pages in current basic/IPS region
+    rp_done: jnp.ndarray       # (P,) i32 — reprogram writes into that region
+    trad_used: jnp.ndarray     # (P,) i32 — dual-alloc traditional pages
+    valid_mig: jnp.ndarray     # (P,) i32 — valid pages in migratable region
+    epoch: jnp.ndarray         # (P,) i32
+    loc: jnp.ndarray           # (N,) i8 — plane holding lba in cache, or -1
+    loc_ep: jnp.ndarray        # (N,) i16 — epoch at write (wraps; collisions
+    #                            astronomically unlikely within a trace)
+    counters: jnp.ndarray      # (10,) f32, see CTR
+    prev_t: jnp.ndarray        # () f32 — last arrival (device-level idle)
+    idle_cum: jnp.ndarray      # () f32 — cumulative usable device idle
+    idle_seen: jnp.ndarray     # (P,) f32 — idle_cum consumed per plane
+
+
+CTR = {name: i for i, name in enumerate(
+    ["host_w", "slc_w", "tlc_w", "rp_host", "rp_agc", "rp_trad",
+     "mig_w", "erases", "agc_waste", "conflict_ms"])}
+
+
+def init_state(cfg, n_logical: int) -> SimState:
+    p = cfg.num_planes
+    return SimState(
+        busy=jnp.zeros(p, jnp.float32),
+        slc_used=jnp.zeros(p, jnp.int32),
+        rp_done=jnp.zeros(p, jnp.int32),
+        trad_used=jnp.zeros(p, jnp.int32),
+        valid_mig=jnp.zeros(p, jnp.int32),
+        epoch=jnp.zeros(p, jnp.int32),
+        loc=jnp.full(n_logical, -1, jnp.int8),
+        loc_ep=jnp.zeros(n_logical, jnp.int16),
+        counters=jnp.zeros(len(CTR), jnp.float32),
+        prev_t=jnp.float32(0.0),
+        idle_cum=jnp.float32(0.0),
+        idle_seen=jnp.zeros(p, jnp.float32),
+    )
+
+
+def ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+def default_cell(cfg, spec, waste_p: float = 0.0) -> CellParams:
+    """CellParams matching the static config for one composition.
+
+    The reference single-cell path and the fleet path share these exact
+    values; per-name defaults come from the allocation mechanism."""
+    from repro.core.ssd.policies.allocation import ALLOCATIONS
+    cap_basic, cap_trad, cap_boost = \
+        ALLOCATIONS[spec.allocation].default_caps(cfg)
+    return CellParams(
+        cap_basic=jnp.int32(cap_basic),
+        cap_trad=jnp.int32(cap_trad),
+        idle_thr=jnp.float32(cfg.idle_threshold_ms),
+        waste_p=jnp.float32(waste_p),
+        cap_boost=jnp.int32(cap_boost),
+    )

@@ -1,5 +1,5 @@
 """Workload-driven hybrid-SSD simulator — the paper's evaluation engine,
-reimplemented as a `jax.lax.scan` over page-level trace operations.
+a `jax.lax.scan` over page-level trace operations.
 
 Fidelity model (DESIGN.md §2): full logical->cache residency tracking (exact
 valid-page counts for migration volume, O(1) epoch invalidation on region
@@ -8,8 +8,11 @@ queueing/conflicts), and counter-exact write-amplification accounting.
 TLC-space garbage collection beyond SLC-cache reclamation is out of scope —
 the evaluated traces never approach SSD capacity (as in the paper).
 
-Policies (all four schemes in one step function; the policy is a *static*
-argument so each compiles to its own specialized scan):
+The scan step is assembled by the policy engine
+(`repro.core.ssd.policies`, DESIGN.md §8): a policy is a static
+composition of mechanism layers — allocation, reclamation trigger,
+reclamation mechanism, idle scheduler — and compiles to its own
+specialized scan. The paper's four schemes are registry entries:
 
   baseline — Turbo-Write static SLC cache; idle-time reclamation = migrate
              valid pages to TLC + erase; reclamation conflicts delay writes.
@@ -23,6 +26,10 @@ argument so each compiles to its own specialized scan):
              the traditional region *into* the IPS region by reprogramming
              (opposite-direction migration), overflow spills to TLC.
 
+Beyond-paper compositions (`dyn_slc`, `ips_lazy`, ...) live in
+`policies.registry`; `POLICIES` below stays the paper tuple for backward
+compatibility — use `policies.policy_names()` for the full set.
+
 Modes: closed_loop=True is the paper's bursty scenario (sustained pressure,
 no idle, latency = program time + conflicts); closed_loop=False replays
 arrival times (daily scenario, queueing + idle work modeled).
@@ -30,327 +37,47 @@ arrival times (daily scenario, queueing + idle work modeled).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.ssd.config import SSDConfig
+from repro.core.ssd.policies import (PAPER_POLICIES, build_step,
+                                     default_cell, resolve_spec,
+                                     tracked_region)
+# re-exported for backward compatibility: these lived here pre-policy-engine
+from repro.core.ssd.policies.state import (CTR, OVERRUN_PAGES,  # noqa: F401
+                                           WATERMARK_DEN, WATERMARK_NUM,
+                                           CellParams, SimState, ceil_div,
+                                           init_state)
 
-POLICIES = ("baseline", "ips", "ips_agc", "coop")
+# the paper's four schemes (the full registry is policies.policy_names())
+POLICIES = PAPER_POLICIES
 
-# block-granularity reclamation model: pressure watermark + per-op overrun
-WATERMARK_NUM, WATERMARK_DEN = 7, 8
-OVERRUN_PAGES = 4               # one reclamation batch an arriving write may
-#                                 stall behind (paper Fig. 7)
-
-
-class CellParams(NamedTuple):
-    """Per-cell simulation knobs, *traced* through the compiled scan.
-
-    Everything that varies across sweep cells without changing control flow
-    lives here, so one compiled (policy, mode) scan serves every cell of a
-    parameter sweep — cache-size and idle-threshold sensitivity runs
-    (paper Fig. 12) are compile-free (DESIGN.md §4). Policy and mode stay
-    static: they select different code paths.
-    """
-    cap_basic: jnp.ndarray   # i32 — SLC pages/plane in the basic/IPS region
-    cap_trad: jnp.ndarray    # i32 — coop traditional-region pages/plane
-    idle_thr: jnp.ndarray    # f32 — device-idle gap threshold (ms)
-    waste_p: jnp.ndarray     # f32 — AGC early-migration waste probability
+_ceil_div = ceil_div    # old private name, kept for external references
 
 
-def default_params(cfg: SSDConfig, policy: str,
+def default_params(cfg: SSDConfig, policy,
                    waste_p: float = 0.0) -> CellParams:
     """CellParams matching the static config for one policy (the reference
-    single-cell path and the fleet path share these exact values)."""
-    has_trad = policy == "coop"
-    return CellParams(
-        cap_basic=jnp.int32(cfg.coop_ips_pages if has_trad
-                            else cfg.slc_cap_pages),
-        cap_trad=jnp.int32(cfg.coop_trad_pages if has_trad else 0),
-        idle_thr=jnp.float32(cfg.idle_threshold_ms),
-        waste_p=jnp.float32(waste_p),
-    )
+    single-cell path and the fleet path share these exact values).
+
+    `policy` is a registered name or a raw `PolicySpec`."""
+    return default_cell(cfg, resolve_spec(policy), waste_p)
 
 
-class SimState(NamedTuple):
-    busy: jnp.ndarray          # (P,) f32 — plane free time
-    slc_used: jnp.ndarray      # (P,) i32 — pages in current basic/IPS region
-    rp_done: jnp.ndarray       # (P,) i32 — reprogram writes into that region
-    trad_used: jnp.ndarray     # (P,) i32 — coop traditional region pages
-    valid_mig: jnp.ndarray     # (P,) i32 — valid pages in migratable region
-    epoch: jnp.ndarray         # (P,) i32
-    loc: jnp.ndarray           # (N,) i8 — plane holding lba in cache, or -1
-    loc_ep: jnp.ndarray        # (N,) i16 — epoch at write (wraps; collisions
-    #                            astronomically unlikely within a trace)
-    counters: jnp.ndarray      # (10,) f32, see CTR
-    prev_t: jnp.ndarray        # () f32 — last arrival (device-level idle)
-    idle_cum: jnp.ndarray      # () f32 — cumulative usable device idle
-    idle_seen: jnp.ndarray     # (P,) f32 — idle_cum consumed per plane
-
-
-CTR = {name: i for i, name in enumerate(
-    ["host_w", "slc_w", "tlc_w", "rp_host", "rp_agc", "rp_trad",
-     "mig_w", "erases", "agc_waste", "conflict_ms"])}
-
-
-def init_state(cfg: SSDConfig, n_logical: int) -> SimState:
-    p = cfg.num_planes
-    return SimState(
-        busy=jnp.zeros(p, jnp.float32),
-        slc_used=jnp.zeros(p, jnp.int32),
-        rp_done=jnp.zeros(p, jnp.int32),
-        trad_used=jnp.zeros(p, jnp.int32),
-        valid_mig=jnp.zeros(p, jnp.int32),
-        epoch=jnp.zeros(p, jnp.int32),
-        loc=jnp.full(n_logical, -1, jnp.int8),
-        loc_ep=jnp.zeros(n_logical, jnp.int16),
-        counters=jnp.zeros(len(CTR), jnp.float32),
-        prev_t=jnp.float32(0.0),
-        idle_cum=jnp.float32(0.0),
-        idle_seen=jnp.zeros(p, jnp.float32),
-    )
-
-
-def _ceil_div(a, b):
-    return (a + b - 1) // b
-
-
-def make_step(cfg: SSDConfig, policy: str, *, closed_loop: bool,
+def make_step(cfg: SSDConfig, policy, *, closed_loop: bool,
               waste_p: float | jnp.ndarray | None = None,
               params: CellParams | None = None):
-    """Returns scan step fn specialized to (policy, mode).
+    """Returns scan step fn specialized to (policy composition, mode).
 
     Per-cell knobs (cache capacities, idle threshold, waste_p) come from
     `params` as traced scalars; `waste_p` alone is accepted for backward
     compatibility and fills a default CellParams from the static config."""
-    assert policy in POLICIES
     if params is None:
         params = default_params(cfg, policy,
                                 0.0 if waste_p is None else waste_p)
-    t_ = cfg.timing
-    p_total = cfg.num_planes
-    is_baseline = policy == "baseline"
-    has_trad = policy == "coop"
-    use_runtime_rp = policy in ("ips", "ips_agc", "coop")
-    use_idle_agc = policy in ("ips_agc", "coop")
-    cap_basic = params.cap_basic
-    cap_trad = params.cap_trad
-    waste_p = params.waste_p
-    ppb_slc = cfg.pages_per_slc_block
-
-    c_mig = t_.slc_read_ms + t_.tlc_write_ms        # SLC -> TLC migration
-    c_agc = t_.tlc_read_ms + t_.reprogram_ms        # AGC fill of used SLC
-    c_trad_rp = t_.slc_read_ms + t_.reprogram_ms    # trad SLC -> IPS region
-    idle_thr = params.idle_thr
-
-    def step(state: SimState, op):
-        t, lba, kind = op["arrival_ms"], op["lba"], op["is_write"]
-        plane = lba % p_total
-        is_pad = kind < 0
-        is_write = kind == 1
-
-        busy_p = state.busy[plane]
-        ctr = state.counters
-
-        # ------------------------------------------------------------
-        # 1. idle work on this plane, lazily applied for [busy_p, t)
-        # ------------------------------------------------------------
-        slc_used = state.slc_used[plane]
-        rp_done = state.rp_done[plane]
-        trad_used = state.trad_used[plane]
-        valid_mig = state.valid_mig[plane]
-        epoch_p = state.epoch[plane]
-        conflict = jnp.float32(0.0)
-
-        # Idle accounting.
-        # * Device-level idle: inter-arrival gaps exceeding the threshold
-        #   (Turbo-Write semantics) accumulate; every plane can consume the
-        #   window in parallel, applied lazily when next touched; unused
-        #   past idle expires.
-        # * Block-granularity reclamation (baseline) additionally runs under
-        #   cache pressure (>= watermark) using any per-plane gap, and may
-        #   OVERRUN into the arriving write's time by up to one block batch —
-        #   the write stalls behind it (paper Fig. 7 conflict).
-        # * Page-granularity AGC (ips_agc/coop) is interruptible: it uses any
-        #   per-plane gap and delays an arriving write by at most half an op.
-        idle_cum = state.idle_cum
-        if not closed_loop:
-            gap = jnp.maximum(t - state.prev_t, 0.0)
-            idle_cum = idle_cum + jnp.where((gap > idle_thr) & ~is_pad,
-                                            gap, 0.0)
-            dev_budget = jnp.where(is_pad, 0.0,
-                                   idle_cum - state.idle_seen[plane])
-            full_gap = jnp.where(is_pad, 0.0, jnp.maximum(t - busy_p, 0.0))
-
-            if is_baseline:
-                # Under pressure (>= watermark) reclamation uses any gap and
-                # may overrun into the arriving write — but only while that
-                # keeps the cache writable. Once full, writes go TLC-direct
-                # (the Fig. 3 cliff) and reclamation stays off the critical
-                # path (gap-only).
-                above_wm = slc_used >= (WATERMARK_NUM * cap_basic
-                                        // WATERMARK_DEN)
-                overrun_allow = jnp.where(slc_used < cap_basic,
-                                          OVERRUN_PAGES * c_mig, 0.0)
-                budget = jnp.where(above_wm, full_gap + overrun_allow,
-                                   dev_budget)
-                mig = jnp.minimum(valid_mig,
-                                  (budget / c_mig).astype(jnp.int32))
-                valid_mig -= mig
-                used_ms = mig.astype(jnp.float32) * c_mig
-                budget -= used_ms
-                ctr = ctr.at[CTR["mig_w"]].add(mig.astype(jnp.float32))
-                blocks = _ceil_div(slc_used, ppb_slc)
-                erase_ms_total = blocks.astype(jnp.float32) * t_.erase_ms
-                can_erase = ((valid_mig == 0) & (slc_used > 0)
-                             & (budget >= erase_ms_total))
-                ctr = ctr.at[CTR["erases"]].add(
-                    jnp.where(can_erase, blocks, 0).astype(jnp.float32))
-                epoch_p = epoch_p + can_erase.astype(jnp.int32)
-                slc_used = jnp.where(can_erase, 0, slc_used)
-                used_ms += jnp.where(can_erase, erase_ms_total, 0.0)
-                # overrun beyond the real gap stalls the arriving write
-                conflict += jnp.where(above_wm & is_write,
-                                      jnp.maximum(used_ms - full_gap, 0.0),
-                                      0.0)
-
-            if has_trad:
-                budget = dev_budget
-                # (1) traditional -> IPS region via reprogram (no TLC write)
-                rp_avail = 2 * slc_used - rp_done
-                ops1 = jnp.minimum(jnp.minimum(valid_mig, rp_avail),
-                                   (budget / c_trad_rp).astype(jnp.int32))
-                rp_done += ops1
-                valid_mig -= ops1
-                budget -= ops1.astype(jnp.float32) * c_trad_rp
-                ctr = ctr.at[CTR["rp_trad"]].add(ops1.astype(jnp.float32))
-                # (2) overflow: remaining trad valid pages -> free TLC
-                rp_avail = 2 * slc_used - rp_done
-                ops2 = jnp.minimum(
-                    jnp.where(rp_avail == 0, valid_mig, 0),
-                    (budget / c_mig).astype(jnp.int32))
-                valid_mig -= ops2
-                budget -= ops2.astype(jnp.float32) * c_mig
-                ctr = ctr.at[CTR["mig_w"]].add(ops2.astype(jnp.float32))
-                # (3) erase clean traditional blocks
-                blocks = _ceil_div(trad_used, ppb_slc)
-                can_erase = ((valid_mig == 0) & (trad_used > 0)
-                             & (budget >= blocks.astype(jnp.float32)
-                                * t_.erase_ms))
-                budget -= jnp.where(can_erase,
-                                    blocks.astype(jnp.float32) * t_.erase_ms,
-                                    0.0)
-                ctr = ctr.at[CTR["erases"]].add(
-                    jnp.where(can_erase, blocks, 0).astype(jnp.float32))
-                epoch_p = epoch_p + can_erase.astype(jnp.int32)
-                trad_used = jnp.where(can_erase, 0, trad_used)
-
-            if use_idle_agc:
-                # AGC fill of remaining reprogram slots (last resort for coop,
-                # primary idle mechanism for ips_agc). Interruptible at page
-                # granularity => safe to run in ANY per-plane gap.
-                agc_budget = full_gap
-                rp_avail = 2 * slc_used - rp_done
-                if has_trad:
-                    rp_avail = jnp.where(valid_mig == 0, rp_avail, 0)
-                ops = jnp.minimum(rp_avail,
-                                  (agc_budget / c_agc).astype(jnp.int32))
-                rp_done += ops
-                opsf = ops.astype(jnp.float32)
-                ctr = ctr.at[CTR["rp_agc"]].add(opsf)
-                ctr = ctr.at[CTR["agc_waste"]].add(opsf * waste_p)
-                # interruptible at page granularity: at most half an op
-                agc_active = (2 * slc_used - rp_done) > 0
-                conflict += jnp.where(agc_active & is_write, c_agc * 0.5, 0.0)
-
-        # generation completion: fully reprogrammed region -> fresh SLC layer
-        if use_runtime_rp:
-            fresh = (slc_used > 0) & (rp_done >= 2 * slc_used)
-            slc_used = jnp.where(fresh, 0, slc_used)
-            rp_done = jnp.where(fresh, 0, rp_done)
-
-        # ------------------------------------------------------------
-        # 2. service the op
-        # ------------------------------------------------------------
-        if closed_loop:
-            wait = jnp.float32(0.0)
-            start = busy_p + conflict
-        else:
-            wait = jnp.maximum(busy_p - t, 0.0)
-            start = t + wait + conflict
-
-        old = state.loc[lba].astype(jnp.int32)          # single read of loc
-        old_ep = state.loc_ep[lba]                      # single read of loc_ep
-        old_clip = jnp.clip(old, 0, p_total - 1)
-        # epoch may have been bumped this step (erase) for the local plane
-        epoch_eff = jnp.where(old_clip == plane, epoch_p,
-                              state.epoch[old_clip])
-        old_ok = (old >= 0) & (old_ep == epoch_eff.astype(jnp.int16))
-
-        # write destination
-        to_slc = is_write & (slc_used < cap_basic)
-        to_trad = is_write & has_trad & ~to_slc & (trad_used < cap_trad)
-        rp_avail = 2 * slc_used - rp_done
-        to_rp = (is_write & use_runtime_rp & ~to_slc & ~to_trad
-                 & (rp_avail > 0))
-        to_tlc = is_write & ~to_slc & ~to_trad & ~to_rp
-
-        prog_t = jnp.where(to_slc | to_trad, t_.slc_write_ms,
-                           jnp.where(to_rp, t_.reprogram_ms,
-                                     t_.tlc_write_ms))
-        read_t = jnp.where(old_ok, t_.slc_read_ms, t_.tlc_read_ms)
-        service = jnp.where(is_write, prog_t, read_t)
-        service = jnp.where(is_pad, 0.0, service)
-        latency = jnp.where(is_pad, 0.0,
-                            wait + conflict + service)
-        busy_new = jnp.where(is_pad, busy_p, start + service)
-
-        # bookkeeping
-        slc_used += to_slc.astype(jnp.int32)
-        trad_used += to_trad.astype(jnp.int32)
-        rp_done += to_rp.astype(jnp.int32)
-
-        track_new = to_slc if is_baseline else (
-            to_trad if has_trad else jnp.zeros_like(to_slc))
-        # invalidate previous cached copy (only on real writes)
-        valid_dec = (is_write & old_ok).astype(jnp.int32)
-
-        ctr = ctr.at[CTR["host_w"]].add(is_write.astype(jnp.float32))
-        ctr = ctr.at[CTR["slc_w"]].add((to_slc | to_trad).astype(jnp.float32))
-        ctr = ctr.at[CTR["tlc_w"]].add(to_tlc.astype(jnp.float32))
-        ctr = ctr.at[CTR["rp_host"]].add(to_rp.astype(jnp.float32))
-        ctr = ctr.at[CTR["conflict_ms"]].add(jnp.where(is_write, conflict,
-                                                       0.0))
-
-        # mapping update: writes set the new location; reads/pads keep it
-        loc_val = jnp.where(is_write,
-                            jnp.where(track_new, plane, -1),
-                            old).astype(jnp.int8)
-        loc_ep_val = jnp.where(is_write & track_new,
-                               epoch_p.astype(jnp.int16), old_ep)
-
-        new_state = SimState(
-            busy=state.busy.at[plane].set(busy_new),
-            slc_used=state.slc_used.at[plane].set(slc_used),
-            rp_done=state.rp_done.at[plane].set(rp_done),
-            trad_used=state.trad_used.at[plane].set(trad_used),
-            valid_mig=state.valid_mig.at[plane].set(valid_mig)
-            .at[old_clip].add(-valid_dec)
-            .at[plane].add(jnp.where(track_new, 1, 0).astype(jnp.int32)),
-            epoch=state.epoch.at[plane].set(epoch_p),
-            loc=state.loc.at[lba].set(loc_val),
-            loc_ep=state.loc_ep.at[lba].set(loc_ep_val),
-            counters=ctr,
-            prev_t=jnp.where(is_pad, state.prev_t, t),
-            idle_cum=idle_cum,
-            idle_seen=state.idle_seen.at[plane].set(
-                jnp.where(is_pad, state.idle_seen[plane], idle_cum)),
-        )
-        return new_state, latency
-
-    return step
+    return build_step(cfg, policy, closed_loop=closed_loop, params=params)
 
 
 def as_ops(trace):
@@ -362,13 +89,14 @@ def as_ops(trace):
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "closed_loop",
                                              "n_logical"))
-def run_trace(cfg: SSDConfig, policy: str, trace, *, closed_loop: bool,
+def run_trace(cfg: SSDConfig, policy, trace, *, closed_loop: bool,
               n_logical: int, waste_p=0.0, params: CellParams | None = None):
     """Simulate one padded trace. Returns (per-op latency, final SimState).
 
     `params` (or the shorthand `waste_p`) are traced per-cell scalars
     (CellParams) so all workloads — and all sweep settings of cache size /
-    idle threshold — share one compiled scan per (policy, mode)."""
+    idle threshold — share one compiled scan per (composition, mode).
+    `policy` (static) is a registered name or a `PolicySpec`."""
     if params is None:
         params = default_params(cfg, policy, waste_p)
     step = make_step(cfg, policy, closed_loop=closed_loop, params=params)
@@ -377,21 +105,23 @@ def run_trace(cfg: SSDConfig, policy: str, trace, *, closed_loop: bool,
     return latency, final
 
 
-def flush_cache(cfg: SSDConfig, state: SimState, policy: str = "baseline"):
+def flush_cache(cfg: SSDConfig, state: SimState, policy="baseline"):
     """End-of-workload flush (paper §III/V): all data remaining in the SLC
     cache is migrated to TLC space and used blocks are erased. Analytic.
 
-    Only migratable regions flush (baseline's SLC cache; coop's traditional
-    region) — exact valid counts. IPS regions carry no reclamation debt:
-    their pages either densified in place already or will be densified by
-    future host writes; nothing migrates and nothing needs erasing (this is
-    precisely the mechanism's WA win — paper Fig. 10, HM_1/PROJ_4
-    discussion)."""
-    ctr = state.counters
-    if policy in ("ips", "ips_agc"):
+    Only migratable regions flush — `policies.tracked_region` names the
+    region carrying reclamation debt (baseline/dyn_slc: the basic SLC
+    cache; dual allocations: the traditional region) with exact valid
+    counts. IPS regions carry none: their pages either densified in place
+    already or will be densified by future host writes; nothing migrates
+    and nothing needs erasing (this is precisely the mechanism's WA win —
+    paper Fig. 10, HM_1/PROJ_4 discussion)."""
+    region = tracked_region(resolve_spec(policy))
+    if region is None:
         return state
+    ctr = state.counters
     mig = jnp.sum(state.valid_mig).astype(jnp.float32)
-    used = state.trad_used if policy == "coop" else state.slc_used
+    used = state.trad_used if region == "trad" else state.slc_used
     blocks = jnp.sum(_ceil_div(used, cfg.pages_per_slc_block))
     ctr = ctr.at[CTR["mig_w"]].add(mig)
     ctr = ctr.at[CTR["erases"]].add(blocks.astype(jnp.float32))

@@ -7,9 +7,19 @@ Examples (run with PYTHONPATH=src):
   python -m repro.sweep.cli --grid quick --max-ops 8192   # CI smoke gate
   python -m repro.sweep.cli --grid stress           # generator scenarios
   python -m repro.sweep.cli --grid mixed            # multi-tenant + CIs
+  python -m repro.sweep.cli --grid beyond           # beyond-paper policies
   python -m repro.sweep.cli --grid matrix --bench   # + fleet-vs-loop bench
   python -m repro.sweep.cli --traces hm_0,gc_pressure --seeds 0,1,2
   python -m repro.sweep.cli --trace-file traces/a.csv --policies ips,ips_agc
+  python -m repro.sweep.cli --grid quick --policies dyn_slc,ips_lazy
+      # registry smoke: replay a named grid's workloads under any
+      # registered policies (declared baselines are added automatically)
+
+Policies resolve through the mechanism-composition registry
+(`repro.core.ssd.policies`): any registered name — the four paper schemes
+plus beyond-paper compositions like dyn_slc / ips_lazy — is valid for
+--policies, and each cell normalizes against its policy's declared
+baseline (DESIGN.md §8).
 
 Workload specs resolve through `repro.workloads`: MSR trace names,
 scenario-generator names (zipf_hot, diurnal, read_burst, gc_pressure,
@@ -52,7 +62,11 @@ def _parse(argv):
                     metavar="PATH", help="add a real trace file (MSR CSV, "
                     "generic CSV, fio iolog; .gz/.zst ok) as a workload; "
                     "repeatable")
-    ap.add_argument("--policies", default="baseline,ips,ips_agc")
+    ap.add_argument("--policies", default=None,
+                    help="comma list of registered policy names (default: "
+                    "baseline,ips,ips_agc); combined with --grid it "
+                    "replays the grid's workload cells under these "
+                    "policies + their declared baselines")
     ap.add_argument("--modes", default="bursty,daily")
     ap.add_argument("--seeds", default="0", help="comma list of RNG seeds; "
                     ">1 seed adds bootstrap CIs to the geomean summary")
@@ -98,8 +112,20 @@ def main(argv=None) -> int:
     from repro.sweep.runner import bench_fleet_vs_loop, run_sweep
     from repro.sweep.store import save_bench
 
+    from repro.core.ssd.policies import baseline_of, policy_names
+
     cfg = PAPER_SSD.scaled(args.scale)
     seeds = tuple(int(s) for s in args.seeds.split(","))
+
+    def check_policies(policies) -> bool:
+        unknown = sorted(set(policies) - set(policy_names()))
+        if unknown:
+            print(f"error: unknown --policies value(s) "
+                  f"{','.join(unknown)}; registered: "
+                  f"{','.join(policy_names())}", file=sys.stderr)
+            return False
+        return True
+
     if args.grid:
         if args.trace_file:
             print("error: --trace-file cannot be combined with --grid "
@@ -108,13 +134,31 @@ def main(argv=None) -> int:
                   file=sys.stderr)
             return 2
         points = named_grid(args.grid)
+        if args.policies:
+            # registry smoke path: replay the grid's workload cells under
+            # the requested policies, auto-adding each policy's declared
+            # baseline so the normalized table stays meaningful
+            req = tuple(dict.fromkeys(args.policies.split(",")))
+            if not check_policies(req):
+                return 2
+            wanted = list(dict.fromkeys(
+                sum(((p, baseline_of(p)) for p in req), ())))
+            coords = list(dict.fromkeys(
+                (pt.trace, pt.mode, pt.seed, pt.repeat, pt.cache_frac,
+                 pt.idle_threshold_ms) for pt in points))
+            from repro.sweep.grid import SweepPoint
+            points = [SweepPoint(trace=t, mode=m, policy=p, seed=s,
+                                 repeat=r, cache_frac=c,
+                                 idle_threshold_ms=i,
+                                 baseline=baseline_of(p))
+                      for (t, m, s, r, c, i) in coords for p in wanted]
     else:
-        from repro.core.ssd.sim import POLICIES
         traces = tuple((args.traces.split(",") if args.traces else
                         (workloads.TRACE_NAMES if not args.trace_file
                          else ())))
         traces += tuple(args.trace_file)
-        policies = tuple(args.policies.split(","))
+        policies = tuple((args.policies or "baseline,ips,ips_agc")
+                         .split(","))
         modes = tuple(args.modes.split(","))
         bad, missing, file_specs = [], [], []
         for t in sorted(set(traces)):
@@ -140,31 +184,40 @@ def main(argv=None) -> int:
             print("note: file-backed traces are deterministic — the seed "
                   "axis only varies synthetic/scenario cells",
                   file=sys.stderr)
-        for val, valid, flag in ((policies, POLICIES, "--policies"),
-                                 (modes, ("bursty", "daily"), "--modes")):
-            unknown = sorted(set(val) - set(valid))
-            if unknown:
-                print(f"error: unknown {flag} value(s) "
-                      f"{','.join(unknown)}; valid: {','.join(valid)}",
-                      file=sys.stderr)
-                return 2
+        if not check_policies(policies):
+            return 2
+        unknown_modes = sorted(set(modes) - {"bursty", "daily"})
+        if unknown_modes:
+            print(f"error: unknown --modes value(s) "
+                  f"{','.join(unknown_modes)}; valid: bursty,daily",
+                  file=sys.stderr)
+            return 2
         if not traces:
             print("error: no workloads selected", file=sys.stderr)
             return 2
-        points = expand_grid(
-            traces=traces, modes=modes, policies=policies, seeds=seeds,
-            cache_fracs=tuple(float(c) for c in args.cache_fracs.split(",")))
+        from dataclasses import replace
+        points = [replace(pt, baseline=baseline_of(pt.policy))
+                  for pt in expand_grid(
+                      traces=traces, modes=modes, policies=policies,
+                      seeds=seeds,
+                      cache_fracs=tuple(float(c) for c in
+                                        args.cache_fracs.split(",")))]
 
     cache = workloads.TraceCache(use_disk=not args.no_trace_cache_disk)
     print(f"sweep: {len(points)} cells on a 1/{args.scale} drive "
           f"({cfg.capacity_gb:.1f} GB, SLC cache "
           f"{cfg.slc_cap_pages * cfg.num_planes} pages)")
+    group_timings = []
     results = run_sweep(cfg, points, max_ops=args.max_ops,
                         progress=lambda s: print(f"  {s}"),
-                        trace_cache=cache)
+                        trace_cache=cache, timings=group_timings)
     cstats = cache.stats()
     print(f"  trace cache: {cstats['hits']} hit(s), "
           f"{cstats['misses']} miss(es)")
+    disp = sum(g["dispatch_s"] for g in group_timings)
+    blk = sum(g["block_s"] for g in group_timings)
+    print(f"  async dispatch: {len(group_timings)} group(s), "
+          f"{disp:.2f}s dispatching, {blk:.2f}s blocked on results")
 
     _print_table(results)
 
@@ -172,6 +225,7 @@ def main(argv=None) -> int:
     payload = {"grid": args.grid or "custom", "n_cells": len(points),
                "max_ops": args.max_ops, "scale": args.scale,
                "trace_cache": cstats,
+               "group_timings": group_timings,
                "results": results,
                "geomeans": {f"{m}/{p}": v for (m, p), v in
                             policy_geomeans(results).items()}}
@@ -205,9 +259,9 @@ def _print_table(results) -> None:
         for point in sorted(lat, key=lambda p: p.key):
             print(f"{point.key:<40}{lat[point]:>10.3f}"
                   f"{wa.get(point, float('nan')):>10.3f}")
-    print("\n=== geomeans vs baseline (paper targets: ips bursty 0.77, "
-          "ips daily 1.3/0.53, agc daily 0.75/0.59, coop daily 0.78/0.67)"
-          " ===")
+    print("\n=== geomeans vs declared baseline (paper targets: ips bursty "
+          "0.77, ips daily 1.3/0.53, agc daily 0.75/0.59, coop daily "
+          "0.78/0.67) ===")
     for (mode, policy), v in sorted(policy_geomeans(results).items()):
         print(f"{mode:>7} {policy:<8} "
               f"lat={v.get('mean_write_latency_ms', float('nan')):.3f} "

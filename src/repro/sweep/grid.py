@@ -3,18 +3,23 @@
 A point pins everything that identifies one simulated cell: workload trace,
 access mode, policy, RNG seed, write-volume repeat factor (paper Fig. 12a),
 cache-size fraction (Fig. 12b sensitivity) and an optional idle-threshold
-override. Points whose knobs only differ in *traced* quantities (seed,
-cache_frac, idle threshold, waste_p) share one compiled scan; policy, mode
-and padded trace length split compilation groups (DESIGN.md §4).
+override — plus the cell's declared normalization `baseline` (the policy a
+grid divides this cell by in reports; "baseline" unless the grid says
+otherwise, e.g. the `beyond` grid normalizes `ips_lazy` against `coop`).
+Points whose knobs only differ in *traced* quantities (seed, cache_frac,
+idle threshold, waste_p) share one compiled scan; the policy's mechanism
+composition, mode and padded trace length split compilation groups
+(DESIGN.md §4/§8).
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 from typing import Iterable, Optional, Sequence
 
 __all__ = ["SweepPoint", "expand_grid", "matrix_grid", "paper_grid",
-           "quick_grid", "stress_grid", "mixed_grid", "named_grid", "GRIDS"]
+           "quick_grid", "stress_grid", "mixed_grid", "beyond_grid",
+           "named_grid", "GRIDS"]
 
 # NB: no repro.core.ssd import at module level — `import repro.sweep` must
 # stay jax-free so the CLI can pin XLA_FLAGS before jax initializes.
@@ -25,17 +30,24 @@ __all__ = ["SweepPoint", "expand_grid", "matrix_grid", "paper_grid",
 class SweepPoint:
     trace: str
     mode: str                      # "bursty" | "daily"
-    policy: str                    # sim.POLICIES
+    policy: str                    # any name in policies.registry
     seed: int = 0
     repeat: int = 1                # write-volume multiplier (Fig. 12a)
     cache_frac: float = 1.0        # scales SLC regions (Fig. 12b)
     idle_threshold_ms: Optional[float] = None
     waste_p: Optional[float] = None  # None -> per-trace calibration
+    # declared normalization policy — metadata, not cell identity:
+    # compare=False keeps hash/eq (and hence baseline_point() pairing)
+    # independent of who a cell normalizes against
+    baseline: str = field(default="baseline", compare=False)
 
     @property
     def key(self) -> str:
         """Result-store key: `trace/mode/policy[&qualifiers]`. The base
-        triple stays unqualified so baseline normalization pairs cells."""
+        triple stays unqualified so baseline normalization pairs cells.
+        The declared baseline is not a qualifier (it names another cell,
+        it does not change this one); a grid must not contain two points
+        differing only in `baseline`."""
         quals = []
         if self.seed:
             quals.append(f"seed={self.seed}")
@@ -49,9 +61,10 @@ class SweepPoint:
         return base + (f"&{','.join(quals)}" if quals else "")
 
     def baseline_point(self) -> "SweepPoint":
-        """The cell this point normalizes against: same everything,
-        baseline policy."""
-        return replace(self, policy="baseline", waste_p=None)
+        """The cell this point normalizes against: same everything, the
+        declared baseline policy (reference cells carry baseline ==
+        policy and normalize against nothing)."""
+        return replace(self, policy=self.baseline, waste_p=None)
 
 
 def expand_grid(traces: Optional[Iterable[str]] = None,
@@ -59,14 +72,17 @@ def expand_grid(traces: Optional[Iterable[str]] = None,
                 policies: Sequence[str] = ("baseline", "ips", "ips_agc"),
                 seeds: Sequence[int] = (0,),
                 repeats: Sequence[int] = (1,),
-                cache_fracs: Sequence[float] = (1.0,)) -> list[SweepPoint]:
+                cache_fracs: Sequence[float] = (1.0,),
+                baseline: str = "baseline") -> list[SweepPoint]:
     """Full cartesian product — traces x modes x policies x seeds x
-    repeats x cache fractions. traces=None means all 11 MSR-like traces."""
+    repeats x cache fractions. traces=None means all 11 MSR-like traces.
+    `baseline` declares the normalization policy for every produced
+    point (reference cells should be emitted with policy == baseline)."""
     if traces is None:
         from repro.workloads import TRACE_NAMES
         traces = TRACE_NAMES
     return [SweepPoint(trace=t, mode=m, policy=p, seed=s, repeat=r,
-                       cache_frac=c)
+                       cache_frac=c, baseline=baseline)
             for t, m, p, s, r, c in itertools.product(
                 traces, modes, policies, seeds, repeats, cache_fracs)]
 
@@ -121,8 +137,24 @@ def mixed_grid() -> list[SweepPoint]:
                        seeds=(0, 1, 2))
 
 
+def beyond_grid() -> list[SweepPoint]:
+    """Beyond-paper policy compositions (DESIGN.md §8), each normalized
+    against its declared baseline:
+
+    * `dyn_slc` (watermark-adaptive SLC sizing) vs the static `baseline` —
+      the ratio is the value of dynamic sizing alone;
+    * `ips_lazy` (dual-region exhaustion reprogram, no idle work) vs
+      `coop` — the ratio is exactly the value of coop's idle reclamation.
+    """
+    traces = ("hm_0", "hm_1", "proj_0")
+    pts = expand_grid(traces=traces, policies=("baseline", "dyn_slc"))
+    pts += expand_grid(traces=traces, policies=("coop", "ips_lazy"),
+                       baseline="coop")
+    return pts
+
+
 GRIDS = {"paper": paper_grid, "quick": quick_grid, "matrix": matrix_grid,
-         "stress": stress_grid, "mixed": mixed_grid}
+         "stress": stress_grid, "mixed": mixed_grid, "beyond": beyond_grid}
 
 
 def named_grid(name: str) -> list[SweepPoint]:

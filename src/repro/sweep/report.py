@@ -4,7 +4,11 @@ Lifted out of `repro.core.ssd.driver` so every consumer (driver matrix,
 benchmarks, sweep CLI) shares one implementation. The paper reports every
 policy metric normalized per (workload, mode) to the Turbo-Write baseline,
 then aggregated across workloads with means; we use geometric means, which
-are the right aggregate for ratios.
+are the right aggregate for ratios. A grid may declare a different
+normalization baseline per point (`SweepPoint.baseline`, e.g. the `beyond`
+grid normalizes `ips_lazy` cells against `coop`); the string-keyed
+`normalize_to_baseline` is the legacy BENCH-dict path and always divides
+by the `baseline` policy.
 """
 from __future__ import annotations
 
@@ -50,11 +54,13 @@ def normalize_to_baseline(results: Mapping[str, Dict], metric: str
 
 
 def normalize_points(results: Mapping, metric: str) -> Dict:
-    """SweepPoint-keyed variant: normalize each non-baseline point against
-    its `baseline_point()` (same trace/mode/seed/repeat/cache/idle)."""
+    """SweepPoint-keyed variant: normalize each point against its
+    `baseline_point()` (same trace/mode/seed/repeat/cache/idle, the
+    point's *declared* baseline policy). Reference cells — points whose
+    policy IS their declared baseline — are skipped, not self-normalized."""
     out = {}
     for point, val in results.items():
-        if point.policy == "baseline":
+        if point.policy == point.baseline:
             continue
         base = results.get(point.baseline_point())
         if base is None:

@@ -1,10 +1,20 @@
 """Fleet sweep runner: batch sweep points into compiled fleets.
 
 Points are grouped by everything that forces a fresh XLA compilation —
-(policy, mode, padded trace length). Each group becomes ONE
-`fleet.run_fleet` call: a `vmap(lax.scan)` over the stacked (C, T) trace
-tensor with per-cell traced `CellParams`, sharded across the process's JAX
-devices.
+(mechanism composition, mode, padded trace length). The composition is the
+policy's `PolicySpec` from the registry, NOT its name: two registered
+policies with identical compositions land in one group and share one
+compiled program. Each group becomes ONE `fleet.run_fleet` call: a
+`vmap(lax.scan)` over the stacked (C, T) trace tensor with per-cell traced
+`CellParams`, sharded across the process's JAX devices.
+
+Dispatch is ASYNC (ROADMAP open item): jax returns futures, so the runner
+first dispatches every independent group back-to-back — device execution
+of group k overlaps trace building and compilation of group k+1 — and only
+then blocks on results, group by group, converting to numpy (`max_pending`
+bounds the window of live dispatched buffers for memory-constrained
+hosts). Per-group dispatch/block wall-clocks are surfaced via the
+`timings` parameter and land in `BENCH_*` metadata (sweep.cli).
 
 Traces come from the workload engine (`repro.workloads`): a point's
 `trace` spec may be an MSR name, a scenario-generator name or a trace-file
@@ -15,13 +25,13 @@ hit/miss counts (the CLI logs them into `BENCH_*` run metadata).
 
 `driver.eval_cell` remains the single-cell reference path; equivalence is
 bit-for-bit (tests/test_fleet.py) because both paths run the same
-`make_step` with the same traced params.
+engine-built step with the same traced params.
 """
 from __future__ import annotations
 
 import time
 from collections import defaultdict
-from typing import Dict, Iterable, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
@@ -33,6 +43,7 @@ from repro.core.ssd.config import SSDConfig
 # imports repro.sweep.report, and this module is imported lazily by it)
 from repro.core.ssd.driver import (LOGICAL_SPACE_CAP, _agc_waste_p,
                                    agc_waste_from_stats)
+from repro.core.ssd.policies import get_spec
 from repro.core.ssd.sim import default_params
 from repro.sweep.grid import SweepPoint
 
@@ -52,7 +63,8 @@ def _cell_params(cfg: SSDConfig, point: SweepPoint, waste_p: float):
         p = p._replace(
             cap_basic=jnp.int32(max(int(int(p.cap_basic)
                                         * point.cache_frac), 4)),
-            cap_trad=jnp.int32(int(int(p.cap_trad) * point.cache_frac)))
+            cap_trad=jnp.int32(int(int(p.cap_trad) * point.cache_frac)),
+            cap_boost=jnp.int32(int(int(p.cap_boost) * point.cache_frac)))
     if point.idle_threshold_ms is not None:
         p = p._replace(idle_thr=jnp.float32(point.idle_threshold_ms))
     return p
@@ -61,13 +73,22 @@ def _cell_params(cfg: SSDConfig, point: SweepPoint, waste_p: float):
 def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
               max_ops: Optional[int] = None,
               progress=None,
-              trace_cache: Optional[workloads.TraceCache] = None
+              trace_cache: Optional[workloads.TraceCache] = None,
+              timings: Optional[List[Dict]] = None,
+              max_pending: Optional[int] = None
               ) -> Dict[SweepPoint, Dict[str, float]]:
     """Run every sweep point batched; returns {point: metrics}.
 
     max_ops truncates traces (smoke/CI runs). `progress` is an optional
     callable(str) for per-group status lines. `trace_cache` supplies the
-    compiled-trace cache (a fresh one per call otherwise)."""
+    compiled-trace cache (a fresh one per call otherwise). `timings`, if
+    given, is a list the runner appends one dict per compilation group to:
+    policies, mode, composition, cells, t_len, dispatch_s, block_s.
+    `max_pending` bounds the async-dispatch window: at most that many
+    groups' dispatched buffers stay live before the runner drains the
+    oldest (None — the default — dispatches every group before blocking;
+    set it on memory-constrained hosts with very large grids, where
+    group-count x (C, T) op tensors would multiply peak host RAM)."""
     import jax
 
     n_logical = _n_logical(cfg)
@@ -92,7 +113,7 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
     def cell_waste(pt: SweepPoint) -> float:
         if pt.waste_p is not None:
             return pt.waste_p
-        if pt.policy in ("baseline", "ips"):
+        if get_spec(pt.policy).idle != "agc":
             return 0.0                  # waste_p only drives AGC policies
         if pt.trace in workloads.TRACES:
             return _agc_waste_p(pt.trace)
@@ -108,13 +129,38 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
             fitted_waste[key] = agc_waste_from_stats(st)
         return fitted_waste[key]
 
+    # compilation groups: (composition, mode, padded length) — names with
+    # the same PolicySpec share one compiled fleet
     groups: Dict[tuple, list] = defaultdict(list)
     for pt in points:
-        groups[(pt.policy, pt.mode, len(cell_trace(pt)["arrival_ms"]))] \
-            .append(pt)
+        groups[(get_spec(pt.policy), pt.mode,
+                len(cell_trace(pt)["arrival_ms"]))].append(pt)
 
     results: Dict[SweepPoint, Dict[str, float]] = {}
-    for (policy, mode, _t_len), pts in sorted(groups.items()):
+
+    def drain(grp) -> None:
+        t0 = time.perf_counter()
+        summ = {k: np.asarray(v) for k, v in grp["summ"].items()}
+        block_s = time.perf_counter() - t0
+        for i, pt in enumerate(grp["pts"]):
+            out = {k: float(v[i]) for k, v in summ.items()}
+            out["n_ops"] = grp["n_ops"][i]
+            results[pt] = out
+        if timings is not None:
+            timings.append({
+                "policies": grp["names"], "mode": grp["mode"],
+                "composition": grp["spec"].composition,
+                "cells": len(grp["pts"]), "pad": grp["pad"],
+                "t_len": grp["t_len"],
+                "dispatch_s": round(grp["dispatch_s"], 4),
+                "block_s": round(block_s, 4)})
+
+    # ---- phase 1: dispatch every group (async — results are futures) ----
+    pending = []
+    for (spec, mode, _t_len), pts in sorted(
+            groups.items(), key=lambda kv: (kv[0][0], kv[0][1], kv[0][2])):
+        if max_pending is not None and len(pending) >= max_pending:
+            drain(pending.pop(0))       # bounded window: free the oldest
         traces = [cell_trace(p) for p in pts]
         params = [_cell_params(cfg, p, cell_waste(p)) for p in pts]
         # pad the cell axis to a device-count multiple so shard_cells can
@@ -125,23 +171,29 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
         traces += [traces[-1]] * pad
         params += [params[-1]] * pad
 
-        ops = fleet.shard_cells(fleet.stack_ops(traces))
-        stacked = fleet.shard_cells(fleet.stack_params(params))
+        names = ",".join(sorted({p.policy for p in pts}))
         if progress:
-            progress(f"fleet {policy}/{mode}: {n_cells} cells"
+            progress(f"fleet {names}/{mode}: {n_cells} cells"
                      f"{f' (+{pad} pad)' if pad else ''} x {_t_len} ops"
                      f" on {n_dev} device(s)")
+        t0 = time.perf_counter()
+        ops = fleet.shard_cells(fleet.stack_ops(traces))
+        stacked = fleet.shard_cells(fleet.stack_params(params))
         latency, states = fleet.run_fleet(
-            cfg, policy, ops, stacked,
+            cfg, spec, ops, stacked,
             closed_loop=(mode == "bursty"), n_logical=n_logical)
         if mode == "daily":
-            states = fleet.flush_fleet(cfg, states, policy)
+            states = fleet.flush_fleet(cfg, states, spec)
         summ = fleet.summarize_fleet(latency, ops["is_write"], states)
-        summ = {k: np.asarray(v) for k, v in summ.items()}
-        for i, pt in enumerate(pts):
-            out = {k: float(v[i]) for k, v in summ.items()}
-            out["n_ops"] = traces[i]["n_ops"]
-            results[pt] = out
+        dispatch_s = time.perf_counter() - t0
+        pending.append({"pts": pts, "n_ops": [t["n_ops"] for t in traces],
+                        "summ": summ, "names": names, "mode": mode,
+                        "spec": spec, "t_len": _t_len, "pad": pad,
+                        "dispatch_s": dispatch_s})
+
+    # ---- phase 2: block on each group's results, oldest first ----
+    for grp in pending:
+        drain(grp)
     return results
 
 

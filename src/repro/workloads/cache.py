@@ -17,9 +17,16 @@ the file *contents*, so editing a trace file invalidates its entries
 without any mtime heuristics. Cache misses rebuild; disk failures degrade
 to building (a cache must never be load-bearing for correctness).
 
-Hit/miss counts are exported via `stats()` and logged into `BENCH_*` run
-metadata by the sweep CLI, so trace-build amortization is visible in the
-perf trajectory.
+The on-disk store is size-capped with LRU eviction: when the directory
+grows past `$REPRO_TRACE_CACHE_MAX_MB` (or the `max_mb` constructor
+argument; unset/<=0 means unlimited), the least-recently-USED entries are
+deleted first — a disk hit refreshes the entry's mtime, so recency tracks
+use, not creation. Eviction is best-effort like every other disk path
+here.
+
+Hit/miss/eviction counts are exported via `stats()` and logged into
+`BENCH_*` run metadata by the sweep CLI, so trace-build amortization is
+visible in the perf trajectory.
 """
 from __future__ import annotations
 
@@ -27,14 +34,16 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 from typing import Callable, Dict, Mapping, Optional
 
 import numpy as np
 
-__all__ = ["TraceCache", "default_cache_dir", "file_digest",
-           "FORMAT_VERSION"]
+__all__ = ["TraceCache", "default_cache_dir", "default_max_mb",
+           "file_digest", "FORMAT_VERSION"]
 
 FORMAT_VERSION = 1
+_TMP_MAX_AGE_S = 3600      # reap orphaned .npz.tmp spills older than this
 
 _ARRAY_KEYS = ("arrival_ms", "lba", "is_write", "req_id")
 _SCALAR_KEYS = ("n_ops", "n_reqs")
@@ -44,6 +53,19 @@ def default_cache_dir() -> str:
     return (os.environ.get("REPRO_TRACE_CACHE_DIR")
             or os.path.join(os.path.expanduser("~"), ".cache", "repro",
                             "traces"))
+
+
+def default_max_mb() -> Optional[float]:
+    """Size cap from `$REPRO_TRACE_CACHE_MAX_MB`; None (unset, empty or
+    <= 0) means unlimited."""
+    raw = os.environ.get("REPRO_TRACE_CACHE_MAX_MB", "").strip()
+    if not raw:
+        return None
+    try:
+        val = float(raw)
+    except ValueError:
+        return None
+    return val if val > 0 else None
 
 
 _DIGEST_MEMO: Dict[tuple, str] = {}
@@ -71,12 +93,17 @@ class TraceCache:
     """Two-level (memory + disk) memo for compiled trace op dicts."""
 
     def __init__(self, root: Optional[str] = None, *,
-                 use_disk: bool = True):
+                 use_disk: bool = True,
+                 max_mb: Optional[float] = None):
         self.root = root or default_cache_dir()
         self.use_disk = use_disk
+        self.max_mb = default_max_mb() if max_mb is None else (
+            max_mb if max_mb > 0 else None)
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self._mem: Dict[str, Dict] = {}
+        self._tmp_reaped = False    # uncapped: one orphan sweep per process
 
     @staticmethod
     def key(recipe: Mapping) -> str:
@@ -92,10 +119,15 @@ class TraceCache:
         path = self._path(key)
         try:
             with np.load(path) as z:
-                return {**{k: z[k] for k in _ARRAY_KEYS},
-                        **{k: int(z[k]) for k in _SCALAR_KEYS}}
+                ops = {**{k: z[k] for k in _ARRAY_KEYS},
+                       **{k: int(z[k]) for k in _SCALAR_KEYS}}
         except (OSError, KeyError, ValueError):
             return None
+        try:
+            os.utime(path)          # LRU recency: a hit refreshes mtime
+        except OSError:
+            pass
+        return ops
 
     def _store_disk(self, key: str, ops: Dict) -> None:
         try:
@@ -107,7 +139,63 @@ class TraceCache:
                     **{k: np.int64(ops[k]) for k in _SCALAR_KEYS})
             os.replace(tmp, self._path(key))   # atomic: no torn entries
         except OSError:
-            pass                                # disk cache is best-effort
+            return                              # disk cache is best-effort
+        self._evict(keep=self._path(key))
+
+    def _evict(self, keep: Optional[str] = None) -> None:
+        """Reap abandoned `.npz.tmp` spills (interrupted writes), then —
+        when a size cap is set — delete least-recently-used entries until
+        the store fits `max_mb`. Never evicts `keep` (the entry just
+        written). All failures are swallowed — concurrent processes may
+        race on the same files, and losing the race only means the space
+        is freed.
+
+        Without a size cap the directory scan exists only for orphan
+        reaping, so it runs once per instance instead of on every store
+        (a capped store needs the scan anyway, for budget accounting)."""
+        if not self.max_mb and self._tmp_reaped:
+            return
+        try:
+            entries = []
+            with os.scandir(self.root) as it:
+                for de in it:
+                    try:
+                        st = de.stat()
+                    except OSError:
+                        continue
+                    if de.name.endswith(".npz.tmp"):
+                        # orphan from an interrupted write: invisible to
+                        # loads, so reap it once it is clearly abandoned
+                        # (another process may still be writing a fresh one)
+                        if time.time() - st.st_mtime > _TMP_MAX_AGE_S:
+                            try:
+                                os.remove(de.path)
+                            except OSError:
+                                pass
+                        continue
+                    if not (de.name.startswith("trace_")
+                            and de.name.endswith(".npz")):
+                        continue
+                    entries.append((st.st_mtime_ns, st.st_size, de.path))
+        except OSError:
+            return
+        self._tmp_reaped = True
+        if not self.max_mb:
+            return
+        total = sum(size for _, size, _ in entries)
+        budget = self.max_mb * 1024 * 1024
+        for mtime, size, path in sorted(entries):
+            if total <= budget:
+                break
+            if keep is not None and \
+                    os.path.abspath(path) == os.path.abspath(keep):
+                continue
+            try:
+                os.remove(path)
+            except OSError:
+                continue
+            total -= size
+            self.evictions += 1
 
     def get_or_build(self, recipe: Mapping,
                      builder: Callable[[], Dict]) -> Dict:
@@ -129,4 +217,6 @@ class TraceCache:
 
     def stats(self) -> Dict:
         return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "max_mb": self.max_mb,
                 "dir": self.root if self.use_disk else None}

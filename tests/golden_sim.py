@@ -1,0 +1,288 @@
+"""Vendored GOLDEN copy of the pre-policy-engine monolithic simulator step.
+
+This is the seed `repro.core.ssd.sim` scan (make_step + state/init verbatim,
+minus the CellParams plumbing sugar) frozen at the commit that introduced
+the composable policy engine. tests/test_policies.py runs the four paper
+policies through BOTH this monolith and the new engine and asserts
+bit-identical latencies, counters and final state — the same contract the
+PR 1/2 refactors enforced via vendored goldens (cf. tests/test_workloads.py
+for the trace-tensor golden).
+
+Do not "fix" or modernize this file: its value is that it does not change.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+GOLDEN_POLICIES = ("baseline", "ips", "ips_agc", "coop")
+
+WATERMARK_NUM, WATERMARK_DEN = 7, 8
+OVERRUN_PAGES = 4
+
+
+class GoldenParams(NamedTuple):
+    cap_basic: jnp.ndarray
+    cap_trad: jnp.ndarray
+    idle_thr: jnp.ndarray
+    waste_p: jnp.ndarray
+
+
+def golden_default_params(cfg, policy, waste_p=0.0):
+    has_trad = policy == "coop"
+    return GoldenParams(
+        cap_basic=jnp.int32(cfg.coop_ips_pages if has_trad
+                            else cfg.slc_cap_pages),
+        cap_trad=jnp.int32(cfg.coop_trad_pages if has_trad else 0),
+        idle_thr=jnp.float32(cfg.idle_threshold_ms),
+        waste_p=jnp.float32(waste_p),
+    )
+
+
+class GoldenState(NamedTuple):
+    busy: jnp.ndarray
+    slc_used: jnp.ndarray
+    rp_done: jnp.ndarray
+    trad_used: jnp.ndarray
+    valid_mig: jnp.ndarray
+    epoch: jnp.ndarray
+    loc: jnp.ndarray
+    loc_ep: jnp.ndarray
+    counters: jnp.ndarray
+    prev_t: jnp.ndarray
+    idle_cum: jnp.ndarray
+    idle_seen: jnp.ndarray
+
+
+CTR = {name: i for i, name in enumerate(
+    ["host_w", "slc_w", "tlc_w", "rp_host", "rp_agc", "rp_trad",
+     "mig_w", "erases", "agc_waste", "conflict_ms"])}
+
+
+def golden_init_state(cfg, n_logical: int) -> GoldenState:
+    p = cfg.num_planes
+    return GoldenState(
+        busy=jnp.zeros(p, jnp.float32),
+        slc_used=jnp.zeros(p, jnp.int32),
+        rp_done=jnp.zeros(p, jnp.int32),
+        trad_used=jnp.zeros(p, jnp.int32),
+        valid_mig=jnp.zeros(p, jnp.int32),
+        epoch=jnp.zeros(p, jnp.int32),
+        loc=jnp.full(n_logical, -1, jnp.int8),
+        loc_ep=jnp.zeros(n_logical, jnp.int16),
+        counters=jnp.zeros(len(CTR), jnp.float32),
+        prev_t=jnp.float32(0.0),
+        idle_cum=jnp.float32(0.0),
+        idle_seen=jnp.zeros(p, jnp.float32),
+    )
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+def golden_make_step(cfg, policy: str, *, closed_loop: bool,
+                     params: GoldenParams):
+    assert policy in GOLDEN_POLICIES
+    t_ = cfg.timing
+    p_total = cfg.num_planes
+    is_baseline = policy == "baseline"
+    has_trad = policy == "coop"
+    use_runtime_rp = policy in ("ips", "ips_agc", "coop")
+    use_idle_agc = policy in ("ips_agc", "coop")
+    cap_basic = params.cap_basic
+    cap_trad = params.cap_trad
+    waste_p = params.waste_p
+    ppb_slc = cfg.pages_per_slc_block
+
+    c_mig = t_.slc_read_ms + t_.tlc_write_ms
+    c_agc = t_.tlc_read_ms + t_.reprogram_ms
+    c_trad_rp = t_.slc_read_ms + t_.reprogram_ms
+    idle_thr = params.idle_thr
+
+    def step(state: GoldenState, op):
+        t, lba, kind = op["arrival_ms"], op["lba"], op["is_write"]
+        plane = lba % p_total
+        is_pad = kind < 0
+        is_write = kind == 1
+
+        busy_p = state.busy[plane]
+        ctr = state.counters
+
+        slc_used = state.slc_used[plane]
+        rp_done = state.rp_done[plane]
+        trad_used = state.trad_used[plane]
+        valid_mig = state.valid_mig[plane]
+        epoch_p = state.epoch[plane]
+        conflict = jnp.float32(0.0)
+
+        idle_cum = state.idle_cum
+        if not closed_loop:
+            gap = jnp.maximum(t - state.prev_t, 0.0)
+            idle_cum = idle_cum + jnp.where((gap > idle_thr) & ~is_pad,
+                                            gap, 0.0)
+            dev_budget = jnp.where(is_pad, 0.0,
+                                   idle_cum - state.idle_seen[plane])
+            full_gap = jnp.where(is_pad, 0.0, jnp.maximum(t - busy_p, 0.0))
+
+            if is_baseline:
+                above_wm = slc_used >= (WATERMARK_NUM * cap_basic
+                                        // WATERMARK_DEN)
+                overrun_allow = jnp.where(slc_used < cap_basic,
+                                          OVERRUN_PAGES * c_mig, 0.0)
+                budget = jnp.where(above_wm, full_gap + overrun_allow,
+                                   dev_budget)
+                mig = jnp.minimum(valid_mig,
+                                  (budget / c_mig).astype(jnp.int32))
+                valid_mig -= mig
+                used_ms = mig.astype(jnp.float32) * c_mig
+                budget -= used_ms
+                ctr = ctr.at[CTR["mig_w"]].add(mig.astype(jnp.float32))
+                blocks = _ceil_div(slc_used, ppb_slc)
+                erase_ms_total = blocks.astype(jnp.float32) * t_.erase_ms
+                can_erase = ((valid_mig == 0) & (slc_used > 0)
+                             & (budget >= erase_ms_total))
+                ctr = ctr.at[CTR["erases"]].add(
+                    jnp.where(can_erase, blocks, 0).astype(jnp.float32))
+                epoch_p = epoch_p + can_erase.astype(jnp.int32)
+                slc_used = jnp.where(can_erase, 0, slc_used)
+                used_ms += jnp.where(can_erase, erase_ms_total, 0.0)
+                conflict += jnp.where(above_wm & is_write,
+                                      jnp.maximum(used_ms - full_gap, 0.0),
+                                      0.0)
+
+            if has_trad:
+                budget = dev_budget
+                rp_avail = 2 * slc_used - rp_done
+                ops1 = jnp.minimum(jnp.minimum(valid_mig, rp_avail),
+                                   (budget / c_trad_rp).astype(jnp.int32))
+                rp_done += ops1
+                valid_mig -= ops1
+                budget -= ops1.astype(jnp.float32) * c_trad_rp
+                ctr = ctr.at[CTR["rp_trad"]].add(ops1.astype(jnp.float32))
+                rp_avail = 2 * slc_used - rp_done
+                ops2 = jnp.minimum(
+                    jnp.where(rp_avail == 0, valid_mig, 0),
+                    (budget / c_mig).astype(jnp.int32))
+                valid_mig -= ops2
+                budget -= ops2.astype(jnp.float32) * c_mig
+                ctr = ctr.at[CTR["mig_w"]].add(ops2.astype(jnp.float32))
+                blocks = _ceil_div(trad_used, ppb_slc)
+                can_erase = ((valid_mig == 0) & (trad_used > 0)
+                             & (budget >= blocks.astype(jnp.float32)
+                                * t_.erase_ms))
+                budget -= jnp.where(can_erase,
+                                    blocks.astype(jnp.float32) * t_.erase_ms,
+                                    0.0)
+                ctr = ctr.at[CTR["erases"]].add(
+                    jnp.where(can_erase, blocks, 0).astype(jnp.float32))
+                epoch_p = epoch_p + can_erase.astype(jnp.int32)
+                trad_used = jnp.where(can_erase, 0, trad_used)
+
+            if use_idle_agc:
+                agc_budget = full_gap
+                rp_avail = 2 * slc_used - rp_done
+                if has_trad:
+                    rp_avail = jnp.where(valid_mig == 0, rp_avail, 0)
+                ops = jnp.minimum(rp_avail,
+                                  (agc_budget / c_agc).astype(jnp.int32))
+                rp_done += ops
+                opsf = ops.astype(jnp.float32)
+                ctr = ctr.at[CTR["rp_agc"]].add(opsf)
+                ctr = ctr.at[CTR["agc_waste"]].add(opsf * waste_p)
+                agc_active = (2 * slc_used - rp_done) > 0
+                conflict += jnp.where(agc_active & is_write, c_agc * 0.5, 0.0)
+
+        if use_runtime_rp:
+            fresh = (slc_used > 0) & (rp_done >= 2 * slc_used)
+            slc_used = jnp.where(fresh, 0, slc_used)
+            rp_done = jnp.where(fresh, 0, rp_done)
+
+        if closed_loop:
+            wait = jnp.float32(0.0)
+            start = busy_p + conflict
+        else:
+            wait = jnp.maximum(busy_p - t, 0.0)
+            start = t + wait + conflict
+
+        old = state.loc[lba].astype(jnp.int32)
+        old_ep = state.loc_ep[lba]
+        old_clip = jnp.clip(old, 0, p_total - 1)
+        epoch_eff = jnp.where(old_clip == plane, epoch_p,
+                              state.epoch[old_clip])
+        old_ok = (old >= 0) & (old_ep == epoch_eff.astype(jnp.int16))
+
+        to_slc = is_write & (slc_used < cap_basic)
+        to_trad = is_write & has_trad & ~to_slc & (trad_used < cap_trad)
+        rp_avail = 2 * slc_used - rp_done
+        to_rp = (is_write & use_runtime_rp & ~to_slc & ~to_trad
+                 & (rp_avail > 0))
+        to_tlc = is_write & ~to_slc & ~to_trad & ~to_rp
+
+        prog_t = jnp.where(to_slc | to_trad, t_.slc_write_ms,
+                           jnp.where(to_rp, t_.reprogram_ms,
+                                     t_.tlc_write_ms))
+        read_t = jnp.where(old_ok, t_.slc_read_ms, t_.tlc_read_ms)
+        service = jnp.where(is_write, prog_t, read_t)
+        service = jnp.where(is_pad, 0.0, service)
+        latency = jnp.where(is_pad, 0.0,
+                            wait + conflict + service)
+        busy_new = jnp.where(is_pad, busy_p, start + service)
+
+        slc_used += to_slc.astype(jnp.int32)
+        trad_used += to_trad.astype(jnp.int32)
+        rp_done += to_rp.astype(jnp.int32)
+
+        track_new = to_slc if is_baseline else (
+            to_trad if has_trad else jnp.zeros_like(to_slc))
+        valid_dec = (is_write & old_ok).astype(jnp.int32)
+
+        ctr = ctr.at[CTR["host_w"]].add(is_write.astype(jnp.float32))
+        ctr = ctr.at[CTR["slc_w"]].add((to_slc | to_trad).astype(jnp.float32))
+        ctr = ctr.at[CTR["tlc_w"]].add(to_tlc.astype(jnp.float32))
+        ctr = ctr.at[CTR["rp_host"]].add(to_rp.astype(jnp.float32))
+        ctr = ctr.at[CTR["conflict_ms"]].add(jnp.where(is_write, conflict,
+                                                       0.0))
+
+        loc_val = jnp.where(is_write,
+                            jnp.where(track_new, plane, -1),
+                            old).astype(jnp.int8)
+        loc_ep_val = jnp.where(is_write & track_new,
+                               epoch_p.astype(jnp.int16), old_ep)
+
+        new_state = GoldenState(
+            busy=state.busy.at[plane].set(busy_new),
+            slc_used=state.slc_used.at[plane].set(slc_used),
+            rp_done=state.rp_done.at[plane].set(rp_done),
+            trad_used=state.trad_used.at[plane].set(trad_used),
+            valid_mig=state.valid_mig.at[plane].set(valid_mig)
+            .at[old_clip].add(-valid_dec)
+            .at[plane].add(jnp.where(track_new, 1, 0).astype(jnp.int32)),
+            epoch=state.epoch.at[plane].set(epoch_p),
+            loc=state.loc.at[lba].set(loc_val),
+            loc_ep=state.loc_ep.at[lba].set(loc_ep_val),
+            counters=ctr,
+            prev_t=jnp.where(is_pad, state.prev_t, t),
+            idle_cum=idle_cum,
+            idle_seen=state.idle_seen.at[plane].set(
+                jnp.where(is_pad, state.idle_seen[plane], idle_cum)),
+        )
+        return new_state, latency
+
+    return step
+
+
+def golden_run_trace(cfg, policy: str, trace, *, closed_loop: bool,
+                     n_logical: int, waste_p: float = 0.0):
+    """Scan the golden monolithic step over one padded trace."""
+    params = golden_default_params(cfg, policy, waste_p)
+    step = golden_make_step(cfg, policy, closed_loop=closed_loop,
+                            params=params)
+    ops = {"arrival_ms": jnp.asarray(trace["arrival_ms"], jnp.float32),
+           "lba": jnp.asarray(trace["lba"], jnp.int32),
+           "is_write": jnp.asarray(trace["is_write"], jnp.int32)}
+    final, latency = jax.lax.scan(step, golden_init_state(cfg, n_logical),
+                                  ops)
+    return latency, final

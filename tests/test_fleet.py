@@ -63,6 +63,23 @@ class TestFleetEquivalence:
                     np.asarray(getattr(st_f, field)[i])), \
                     f"state.{field} mismatch cell {NAMES[i]}"
 
+    def test_donated_carry_is_rebuildable(self):
+        """The fleet scan donates its freshly built initial state
+        (fleet.init_fleet_state); back-to-back calls must rebuild it and
+        return identical results — donation must never leak into reuse."""
+        traces, waste = _cells("daily")
+        params = fleet.stack_params(
+            [default_params(CFG, "baseline", w) for w in waste])
+        ops = fleet.stack_ops(traces)
+        lat1, st1 = fleet.run_fleet(CFG, "baseline", ops, params,
+                                    closed_loop=False, n_logical=N_LOGICAL)
+        lat2, st2 = fleet.run_fleet(CFG, "baseline", ops, params,
+                                    closed_loop=False, n_logical=N_LOGICAL)
+        assert np.array_equal(np.asarray(lat1), np.asarray(lat2))
+        for field in st1._fields:
+            assert np.array_equal(np.asarray(getattr(st1, field)),
+                                  np.asarray(getattr(st2, field)))
+
     def test_traced_cache_size_matches_static_config(self):
         """cache_frac through traced CellParams == shrinking the config."""
         import dataclasses

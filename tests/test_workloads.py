@@ -428,7 +428,8 @@ class TestTraceCache:
         a = c.get_or_build(recipe, build)
         b = c.get_or_build(recipe, build)
         assert len(calls) == 1 and a is b
-        assert c.stats() == {"hits": 1, "misses": 1, "dir": str(tmp_path)}
+        assert c.stats() == {"hits": 1, "misses": 1, "evictions": 0,
+                             "max_mb": None, "dir": str(tmp_path)}
         # second process (fresh memory): served from disk, bit-identical
         c2 = TraceCache(root=str(tmp_path))
         d = c2.get_or_build(recipe, build)
@@ -453,6 +454,73 @@ class TestTraceCache:
             "hm_1", N_LOGICAL, capacity_pages=CAPACITY).compile())
         assert not list(tmp_path.iterdir())
         assert c.stats()["dir"] is None
+
+    @staticmethod
+    def _tiny_ops(tag: int):
+        n = 256
+        return {"arrival_ms": np.full(n, float(tag), np.float32),
+                "lba": np.arange(n, dtype=np.int32),
+                "is_write": np.ones(n, np.int8),
+                "req_id": np.arange(n, dtype=np.int32),
+                "n_ops": n, "n_reqs": n}
+
+    def test_lru_eviction_order(self, tmp_path):
+        """Size-capped disk store evicts least-recently-USED first: a
+        disk hit refreshes recency, so the entry read most recently
+        survives entries merely written earlier."""
+        import os
+        c = TraceCache(root=str(tmp_path))          # unlimited: no evictions
+        paths = {}
+        for tag, name in enumerate(("a", "b", "cc")):
+            c.get_or_build({"unit": name}, lambda t=tag: self._tiny_ops(t))
+            paths[name] = c._path(TraceCache.key({"unit": name}))
+        sizes = {n: os.path.getsize(p) for n, p in paths.items()}
+        # ages: a oldest, then b, then cc
+        for age, name in ((300, "a"), (200, "b"), (100, "cc")):
+            t = 1_000_000 - age
+            os.utime(paths[name], times=(t, t))
+        # a disk hit on "a" (fresh cache, no memory entry) refreshes it
+        c2 = TraceCache(root=str(tmp_path))
+        c2.get_or_build({"unit": "a"}, lambda: pytest.fail("must hit disk"))
+        assert c2.hits == 1
+        # cap the store so that writing "d" keeps only {d, a}: "b" then
+        # "cc" (oldest mtimes) must go, the refreshed "a" must survive
+        # an abandoned tmp spill from an interrupted write is reaped too
+        orphan = tmp_path / "orphan.npz.tmp"
+        orphan.write_bytes(b"x" * 64)
+        os.utime(orphan, times=(1, 1))
+        c3 = TraceCache(root=str(tmp_path),
+                        max_mb=(sizes["a"] + sizes["cc"] + 1) / 2**20)
+        c3.get_or_build({"unit": "d"}, lambda: self._tiny_ops(9))
+        assert c3.evictions == 2
+        assert not orphan.exists()
+        assert not os.path.exists(paths["b"])
+        assert not os.path.exists(paths["cc"])
+        assert os.path.exists(paths["a"])
+        # evicted entries rebuild on the next request (miss, not failure)
+        c4 = TraceCache(root=str(tmp_path))
+        c4.get_or_build({"unit": "b"}, lambda: self._tiny_ops(1))
+        assert c4.misses == 1
+
+    def test_orphan_tmp_reaped_without_size_cap(self, tmp_path):
+        import os
+        orphan = tmp_path / "stale.npz.tmp"
+        orphan.write_bytes(b"x" * 32)
+        os.utime(orphan, times=(1, 1))
+        c = TraceCache(root=str(tmp_path))          # no cap: LRU disabled
+        c.get_or_build({"unit": "a"}, lambda: self._tiny_ops(0))
+        assert not orphan.exists()                  # ...but orphans still go
+        assert c.evictions == 0
+
+    def test_max_mb_from_env(self, monkeypatch, tmp_path):
+        monkeypatch.setenv("REPRO_TRACE_CACHE_MAX_MB", "12.5")
+        assert TraceCache(root=str(tmp_path)).max_mb == 12.5
+        monkeypatch.setenv("REPRO_TRACE_CACHE_MAX_MB", "0")
+        assert TraceCache(root=str(tmp_path)).max_mb is None
+        monkeypatch.setenv("REPRO_TRACE_CACHE_MAX_MB", "junk")
+        assert TraceCache(root=str(tmp_path)).max_mb is None
+        monkeypatch.delenv("REPRO_TRACE_CACHE_MAX_MB")
+        assert TraceCache(root=str(tmp_path), max_mb=3).max_mb == 3
 
 
 class TestSpecResolution:

@@ -30,4 +30,12 @@ python -m repro.sweep.cli --grid quick --policies dyn_slc,ips_lazy \
   --max-ops 4096 --no-save
 
 echo
+echo "== smoke: endurance grid (wear/reliability/lifetime, DESIGN.md §9) =="
+python -m repro.sweep.cli --grid endurance --max-ops 4096 --no-save
+
+echo
+echo "== zero-wear bit-identity vs the golden monolith =="
+python -m pytest -q tests/test_endurance.py -k "ZeroWearIdentity"
+
+echo
 echo "ci_check: OK"

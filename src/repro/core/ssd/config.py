@@ -38,6 +38,9 @@ class SSDConfig:
     slc_density_ratio: int = 3
     # idle handling
     idle_threshold_ms: float = 5.0      # gaps longer than this count as idle
+    # endurance model (DESIGN.md §9): wear buckets per plane cache region —
+    # the static block-granularity of P/E tracking (shapes, so not traced)
+    wear_buckets: int = 8
 
     # ------------------------------------------------------------------
     @property

@@ -1,0 +1,24 @@
+"""Endurance engine: wear, reliability and lifetime modeling for
+reprogram-based SLC caching (DESIGN.md §9).
+
+The paper's core tension — In-place Switch trades migration traffic for
+extra program stress on the switched blocks — is only decidable with a
+wear model: this package supplies the per-block (bucketed) P/E state
+carried through the simulator scan, the parameterized reliability model
+(`EnduranceSpec` -> traced `EnduranceParams`), and the lifetime /
+wear-leveling metrics (TBW projection, cycle skew, end-of-life step)
+the sweep layer reports per policy.
+
+Layering: `endurance.spec` is pure Python (importable before jax, like
+`policies.spec`); `endurance.model` is jnp-only and imported by
+`policies.state` / `policies.engine`.
+"""
+from repro.core.ssd.endurance.model import (EnduranceParams, WearState,
+                                            as_params, bucket_cycles,
+                                            init_wear, plane_cycles,
+                                            trad_cycles, wear_summary)
+from repro.core.ssd.endurance.spec import EnduranceSpec
+
+__all__ = ["EnduranceSpec", "EnduranceParams", "WearState", "as_params",
+           "init_wear", "bucket_cycles", "plane_cycles", "trad_cycles",
+           "wear_summary"]

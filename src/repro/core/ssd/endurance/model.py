@@ -1,0 +1,172 @@
+"""Traced endurance state and reliability math (DESIGN.md §9).
+
+Wear is carried through the `lax.scan` as `WearState`, an optional
+trailing field of `SimState`: statically absent (`None`) unless the cell's
+`CellParams.endurance` is set, so non-endurance runs keep the exact seed
+pytree and the golden bit-identity contract. When present, every program /
+reprogram / erase event lands in per-plane, per-*wear-bucket* counters —
+the bucket axis (`cfg.wear_buckets`, static) is a statistical stand-in for
+the blocks of a plane's cache region: fine enough to expose allocation-
+order skew (sequential fill hammers low buckets when erases happen at
+partial occupancy) and cheap enough to update every scan step.
+
+Effective P/E cycles of a bucket combine the weighted program events,
+normalized by the bucket's page share of the region, plus the erase
+cycles:
+
+    cycles[p, b] = (w_slc*pe_slc[p,b] + w_rp*pe_rp[p,b]) / (cap/B)
+                   + w_erase * erase[p]
+
+TLC-space wear (`pe_tlc`) is tracked per plane but kept out of the SLC
+cycle budget: migration traffic wears TLC blocks, whose budget is orders
+of magnitude larger and whose capacity dwarfs the cache (the paper's
+argument for migrating at all); it is still reported so WAF-vs-wear
+trades stay visible.
+
+This module is self-contained (jnp only) so `policies.state` / `engine`
+can import it without cycles.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.ssd.endurance.spec import EnduranceSpec
+
+__all__ = ["EnduranceParams", "WearState", "as_params", "init_wear",
+           "bucket_cycles", "plane_cycles", "wear_summary"]
+
+
+class EnduranceParams(NamedTuple):
+    """Traced per-cell endurance knobs (see `EnduranceSpec` for meaning).
+
+    Lives inside `CellParams`, so wear-weight / budget / penalty sweeps
+    share one compiled scan per (composition, mode) like every other
+    traced knob."""
+    w_slc: jnp.ndarray
+    w_tlc: jnp.ndarray
+    w_rp: jnp.ndarray
+    w_erase: jnp.ndarray
+    cycle_budget: jnp.ndarray
+    rp_budget: jnp.ndarray
+    read_penalty_ms: jnp.ndarray
+
+
+class WearState(NamedTuple):
+    """Per-plane wear carried through the scan (B = cfg.wear_buckets).
+
+    The basic/IPS region gets the bucket axis; the dual allocation's
+    traditional region is a distinct set of blocks with its own capacity,
+    so its programs/erases are tracked per plane (`pe_trad`/`erase_trad`)
+    and normalized by `cap_trad` — never mixed into the basic buckets."""
+    pe_slc: jnp.ndarray    # (P, B) f32 — basic-region SLC program events
+    pe_rp: jnp.ndarray     # (P, B) f32 — reprogram events (extra stress)
+    pe_tlc: jnp.ndarray    # (P,) f32 — TLC program events (GC + direct)
+    erase: jnp.ndarray     # (P,) f32 — basic-region erase events (one
+    #                          event cycles every block in the region once)
+    pe_trad: jnp.ndarray   # (P,) f32 — traditional-region SLC programs
+    erase_trad: jnp.ndarray  # (P,) f32 — traditional-region erase events
+    ops_seen: jnp.ndarray  # () f32 — non-pad ops processed (EOL clock)
+    eol_op: jnp.ndarray    # () f32 — first op where any block crossed
+    #                          cycle_budget; -1.0 while still alive
+
+
+def as_params(spec: EnduranceSpec) -> EnduranceParams:
+    return EnduranceParams(
+        w_slc=jnp.float32(spec.w_slc),
+        w_tlc=jnp.float32(spec.w_tlc),
+        w_rp=jnp.float32(spec.w_rp),
+        w_erase=jnp.float32(spec.w_erase),
+        cycle_budget=jnp.float32(spec.cycle_budget),
+        rp_budget=jnp.float32(spec.rp_budget),
+        read_penalty_ms=jnp.float32(spec.read_penalty_ms),
+    )
+
+
+def init_wear(cfg) -> WearState:
+    p, b = cfg.num_planes, cfg.wear_buckets
+    return WearState(
+        pe_slc=jnp.zeros((p, b), jnp.float32),
+        pe_rp=jnp.zeros((p, b), jnp.float32),
+        pe_tlc=jnp.zeros(p, jnp.float32),
+        erase=jnp.zeros(p, jnp.float32),
+        pe_trad=jnp.zeros(p, jnp.float32),
+        erase_trad=jnp.zeros(p, jnp.float32),
+        ops_seen=jnp.float32(0.0),
+        eol_op=jnp.float32(-1.0),
+    )
+
+
+def bucket_cycles(pe_slc, pe_rp, erase, endur: EnduranceParams, cap_basic):
+    """Effective P/E cycles per wear bucket (docstring formula).
+
+    Works on (B,) rows with scalar `erase` (the engine's per-op local
+    view) and on (P, B) tensors with (P,) `erase` (summaries)."""
+    b = pe_slc.shape[-1]
+    cap_f = jnp.maximum(jnp.asarray(cap_basic, jnp.float32), 1.0)
+    per_bucket_pages = jnp.maximum(cap_f / b, 1.0)
+    erase = jnp.asarray(erase, jnp.float32)
+    return ((endur.w_slc * pe_slc + endur.w_rp * pe_rp) / per_bucket_pages
+            + endur.w_erase * erase[..., None])
+
+
+def plane_cycles(pe_slc_row, pe_rp_row, erase_p, endur: EnduranceParams,
+                 cap_basic):
+    """Region-average effective cycles of one plane's basic region (gate /
+    read-penalty granularity — the bucket max drives EOL, the mean drives
+    retention)."""
+    cap_f = jnp.maximum(jnp.asarray(cap_basic, jnp.float32), 1.0)
+    return ((endur.w_slc * jnp.sum(pe_slc_row)
+             + endur.w_rp * jnp.sum(pe_rp_row)) / cap_f
+            + endur.w_erase * erase_p)
+
+
+def trad_cycles(pe_trad, erase_trad, endur: EnduranceParams, cap_trad):
+    """Per-block effective cycles of the dual allocation's traditional
+    region: its own blocks, its own capacity normalization. Zero for
+    non-dual compositions (the counters never move)."""
+    cap_f = jnp.maximum(jnp.asarray(cap_trad, jnp.float32), 1.0)
+    return (endur.w_slc * pe_trad / cap_f + endur.w_erase * erase_trad)
+
+
+def wear_summary(wear: WearState, endur: EnduranceParams, cap_basic,
+                 cap_trad, page_bytes: int, host_pages) -> dict:
+    """Lifetime / wear-leveling metrics from a final `WearState`.
+
+    * `eff_cycles_max` — worst cache block across the drive: the max over
+      basic-region buckets AND traditional-region planes (each region
+      normalized by its own capacity — the paper-relevant wear figure for
+      the reprogram-vs-migrate trade).
+    * `eff_cycles_mean` / `cycle_skew` — average and max/mean over the
+      bucket-modeled basic region (wear-leveling quality, 1.0 = perfect;
+      the trad region has no bucket axis so it is excluded from skew).
+    * `tbw_proj_gb` — host GB written so far, linearly projected to the
+      point where the worst block exhausts `cycle_budget` (the drive's
+      TBW if the workload keeps its mix).
+    * `eol_op` — op index at which the worst block crossed the budget
+      inside this trace (-1: not reached).
+    """
+    cyc = bucket_cycles(wear.pe_slc, wear.pe_rp, wear.erase, endur,
+                        cap_basic)
+    basic_max = jnp.max(cyc)
+    cyc_mean = jnp.mean(cyc)
+    cyc_max = jnp.maximum(
+        basic_max,
+        jnp.max(trad_cycles(wear.pe_trad, wear.erase_trad, endur,
+                            cap_trad)))
+    host_gb = (jnp.asarray(host_pages, jnp.float32)
+               * (page_bytes / 1024.0 ** 3))
+    return {
+        "eff_cycles_max": cyc_max,
+        "eff_cycles_mean": cyc_mean,
+        "cycle_skew": basic_max / jnp.maximum(cyc_mean, 1e-9),
+        "tbw_proj_gb": host_gb * endur.cycle_budget
+        / jnp.maximum(cyc_max, 1e-6),
+        "eol_op": wear.eol_op,
+        "pe_slc_total": jnp.sum(wear.pe_slc),
+        "pe_rp_total": jnp.sum(wear.pe_rp),
+        "pe_tlc_total": jnp.sum(wear.pe_tlc),
+        "pe_trad_total": jnp.sum(wear.pe_trad),
+        "erase_events": jnp.sum(wear.erase) + jnp.sum(wear.erase_trad),
+    }

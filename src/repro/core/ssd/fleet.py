@@ -90,10 +90,11 @@ def shard_cells(tree, devices=None):
     return jax.tree.map(lambda x: jax.device_put(x, sharding), tree)
 
 
-def init_fleet_state(cfg: SSDConfig, n_logical: int,
-                     n_cells: int) -> SimState:
+def init_fleet_state(cfg: SSDConfig, n_logical: int, n_cells: int, *,
+                     endurance: bool = False) -> SimState:
     """(C,)-stacked initial SimState (the donated fleet scan carry)."""
-    return jax.vmap(lambda _: init_state(cfg, n_logical))(
+    return jax.vmap(
+        lambda _: init_state(cfg, n_logical, endurance=endurance))(
         jnp.arange(n_cells))
 
 
@@ -121,7 +122,8 @@ def run_fleet(cfg: SSDConfig, policy, ops: dict, params: CellParams,
     initial state is donated to the scan (see module docstring)."""
     spec = resolve_spec(policy)
     n_cells = ops["lba"].shape[0]
-    state0 = shard_cells(init_fleet_state(cfg, n_logical, n_cells))
+    state0 = shard_cells(init_fleet_state(
+        cfg, n_logical, n_cells, endurance=params.endurance is not None))
     return _run_fleet(cfg, spec, state0, ops, params,
                       closed_loop=closed_loop)
 
@@ -133,11 +135,19 @@ def flush_fleet(cfg: SSDConfig, states: SimState, policy) -> SimState:
     return jax.vmap(lambda s: flush_cache(cfg, s, policy))(states)
 
 
-def summarize_fleet(latency, is_write, states: SimState) -> dict:
+def summarize_fleet(latency, is_write, states: SimState, *,
+                    params: CellParams | None = None,
+                    cfg: SSDConfig | None = None) -> dict:
     """Per-cell summaries: dict of (C,) arrays (same keys as sim.summarize).
 
     is_write: (C, T) int array (padding < 0 is excluded by the == 1 test
-    inside summarize)."""
+    inside summarize). Pass the (C,)-stacked `params` (+ cfg) to get the
+    endurance lifetime metrics for wear-tracked fleets (DESIGN.md §9)."""
+    if params is None or params.endurance is None:
+        return jax.vmap(
+            lambda lat, w, s: summarize(lat, {"is_write": w}, s)
+        )(latency, jnp.asarray(is_write), states)
     return jax.vmap(
-        lambda lat, w, s: summarize(lat, {"is_write": w}, s)
-    )(latency, jnp.asarray(is_write), states)
+        lambda lat, w, s, p: summarize(lat, {"is_write": w}, s,
+                                       cell=p, cfg=cfg)
+    )(latency, jnp.asarray(is_write), states, params)

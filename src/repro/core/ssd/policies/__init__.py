@@ -20,8 +20,8 @@ from repro.core.ssd.policies.registry import (PAPER_POLICIES, PolicyEntry,
                                               register, resolve_spec)
 from repro.core.ssd.policies.spec import (ALLOCATION_AXIS, IDLE_AXIS,
                                           MECHANISM_AXIS, TRIGGER_AXIS,
-                                          PolicySpec, tracked_region,
-                                          validate_spec)
+                                          PolicySpec, requires_endurance,
+                                          tracked_region, validate_spec)
 from repro.core.ssd.policies.state import (CTR, OVERRUN_PAGES,
                                            WATERMARK_DEN, WATERMARK_NUM,
                                            CellParams, SimState,
@@ -30,7 +30,8 @@ from repro.core.ssd.policies.state import (CTR, OVERRUN_PAGES,
 __all__ = [
     "PolicySpec", "PolicyEntry", "register", "get_entry", "get_spec",
     "resolve_spec", "baseline_of", "policy_names", "PAPER_POLICIES",
-    "validate_spec", "tracked_region", "ALLOCATION_AXIS", "TRIGGER_AXIS",
+    "validate_spec", "tracked_region", "requires_endurance",
+    "ALLOCATION_AXIS", "TRIGGER_AXIS",
     "MECHANISM_AXIS", "IDLE_AXIS", "ALLOCATIONS", "AllocationMech",
     "StepCtx", "build_step", "state_fields_used", "CellParams", "SimState",
     "CTR", "init_state", "default_cell", "WATERMARK_NUM", "WATERMARK_DEN",

@@ -26,6 +26,10 @@ class AllocationMech:
     state_fields: Tuple[str, ...]
     default_caps: Callable           # cfg -> (cap_basic, cap_trad, cap_boost)
     eff_cap: Callable                # ctx -> traced effective basic capacity
+    wear_aware: bool = False         # place SLC programs in the coldest
+    #                                  wear bucket instead of the sequential
+    #                                  fill position (needs endurance
+    #                                  tracking, DESIGN.md §9)
 
 
 def _static_caps(cfg):
@@ -64,4 +68,7 @@ ALLOCATIONS = {
     "adaptive": AllocationMech(
         name="adaptive", dual=False, state_fields=("slc_used",),
         default_caps=_adaptive_caps, eff_cap=_adaptive_cap),
+    "wear_min": AllocationMech(
+        name="wear_min", dual=False, state_fields=("slc_used", "wear"),
+        default_caps=_static_caps, eff_cap=_fixed_cap, wear_aware=True),
 }

@@ -10,10 +10,18 @@ the spec, so each composition compiles to exactly the code it needs
 Fragment order is fixed and canonical (it is the seed monolith's order):
 
   1. triggered migrate reclamation        (mechanism == "migrate")
+  1b. gated-reprogram fallback migration  (mechanism == "reprogram_gated")
   2. dual-region traditional reclamation  (allocation dual, idle != none)
   3. AGC slot fill                        (idle == "agc")
-  4. generation completion                (mechanism == "reprogram")
+  4. generation completion                (mechanism == reprogram*)
   5. destination selection + service + bookkeeping (shared)
+
+Endurance tracking (DESIGN.md §9) is orthogonal to the composition: when
+`CellParams.endurance` is set (a *static* pytree-structure property, so it
+selects its own compiled step), every fragment and the shared section
+additionally account P/E events into `SimState.wear`, reads pay the
+retention penalty, and the gated mechanism's reliability gate becomes
+live. Without it the assembled step is exactly the seed computation.
 
 Bit-identity contract: for the four paper compositions the assembled step
 executes the monolith's op sequence verbatim — tests/test_policies.py
@@ -23,11 +31,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.ssd.endurance.model import (WearState, bucket_cycles,
+                                            plane_cycles, trad_cycles)
 from repro.core.ssd.policies import idle as idle_mod
 from repro.core.ssd.policies import reclaim
 from repro.core.ssd.policies.allocation import ALLOCATIONS
 from repro.core.ssd.policies.registry import resolve_spec
-from repro.core.ssd.policies.spec import PolicySpec, tracked_region
+from repro.core.ssd.policies.spec import (PolicySpec, requires_endurance,
+                                          tracked_region)
 from repro.core.ssd.policies.state import CTR, CellParams, SimState
 
 __all__ = ["StepCtx", "build_step", "state_fields_used"]
@@ -54,6 +65,12 @@ class StepCtx:
         "cap_basic", "cap_trad", "cap_boost", "waste_p",
         # static cost constants
         "c_mig", "c_agc", "c_trad_rp", "erase_ms", "ppb_slc",
+        # endurance tracking (DESIGN.md §9): track_wear is a Python bool
+        # (False => fragments compile wear-free); the pe_*/erase rows are
+        # the local plane's wear, mutated by fragments like plane state;
+        # gate_ok is the reliability gate of the gated reprogram mechanism
+        "track_wear", "n_buckets", "pe_slc_p", "pe_rp_p", "pe_tlc_p",
+        "erase_p", "pe_trad_p", "erase_trad_p", "gate_ok",
     )
 
 
@@ -73,10 +90,14 @@ def state_fields_used(spec: PolicySpec):
         fields.update(reclaim.MIGRATE_FIELDS)
     if spec.mechanism == "reprogram":
         fields.update(reclaim.REPROGRAM_FIELDS)
+    if spec.mechanism == "reprogram_gated":
+        fields.update(reclaim.GATED_FIELDS)
     if alloc.dual and spec.idle != "none":
         fields.update(reclaim.DUAL_RECLAIM_FIELDS)
     if spec.idle == "agc":
         fields.update(idle_mod.AGC_FIELDS)
+    if requires_endurance(spec):
+        fields.add("wear")
     return frozenset(fields)
 
 
@@ -91,13 +112,26 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
     p_total = cfg.num_planes
     alloc = ALLOCATIONS[spec.allocation]
     dual = alloc.dual
-    use_rp = spec.mechanism == "reprogram"
+    use_rp = spec.mechanism in ("reprogram", "reprogram_gated")
+    gated = spec.mechanism == "reprogram_gated"
     run_migrate = spec.mechanism == "migrate"   # validate_spec guarantees
     #                                             an idle scheduler exists
     run_dual_reclaim = dual and spec.idle != "none"
     run_agc = spec.idle == "agc"
     pressure = spec.trigger == "watermark"
     tracked = tracked_region(spec)
+    # endurance tracking (DESIGN.md §9) is a static property of the cell:
+    # params.endurance present selects the wear-instrumented step, absent
+    # keeps the seed-identical one (the pytree structure is the jit key)
+    use_endurance = params.endurance is not None
+    endur = params.endurance
+    if requires_endurance(spec) and not use_endurance:
+        raise ValueError(
+            f"{spec.composition} requires endurance tracking: pass "
+            "CellParams.endurance (default_cell attaches default "
+            "EnduranceSpec knobs for such compositions)")
+    wear_aware = alloc.wear_aware
+    n_buckets = cfg.wear_buckets
     cap_basic = params.cap_basic
     cap_trad = params.cap_trad
     cap_boost = (jnp.int32(0) if params.cap_boost is None
@@ -129,6 +163,22 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
         ctx.cap_boost, ctx.waste_p = cap_boost, waste_p
         ctx.c_mig, ctx.c_agc, ctx.c_trad_rp = c_mig, c_agc, c_trad_rp
         ctx.erase_ms, ctx.ppb_slc = t_.erase_ms, ppb_slc
+        ctx.track_wear = use_endurance
+        if use_endurance:
+            wear = state.wear
+            ctx.n_buckets = n_buckets
+            ctx.pe_slc_p = wear.pe_slc[plane]
+            ctx.pe_rp_p = wear.pe_rp[plane]
+            ctx.pe_tlc_p = wear.pe_tlc[plane]
+            ctx.erase_p = wear.erase[plane]
+            ctx.pe_trad_p = wear.pe_trad[plane]
+            ctx.erase_trad_p = wear.erase_trad[plane]
+            if gated:
+                # RARO-style reliability gate: per-page average reprogram
+                # count of the plane's region vs the traced budget
+                cap_f = jnp.maximum(cap_basic.astype(jnp.float32), 1.0)
+                ctx.gate_ok = (jnp.sum(ctx.pe_rp_p) / cap_f
+                               < endur.rp_budget)
 
         # ------------------------------------------------------------
         # 1. idle work on this plane, lazily applied for [busy_p, t)
@@ -153,10 +203,12 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
 
             if run_migrate:
                 reclaim.migrate_reclaim(ctx, alloc, pressure=pressure)
+            if gated:
+                reclaim.gated_fallback_reclaim(ctx)
             if run_dual_reclaim:
                 reclaim.dual_reclaim(ctx)
             if run_agc:
-                idle_mod.agc_fill(ctx, dual=dual)
+                idle_mod.agc_fill(ctx, dual=dual, gated=gated)
 
         # generation completion: fully reprogrammed region -> fresh layer
         if use_rp:
@@ -195,6 +247,10 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
         if use_rp:
             rp_avail = 2 * slc_used - rp_done
             to_rp = is_write & ~to_slc & ~to_trad & (rp_avail > 0)
+            if gated:
+                # budget-exhausted blocks take no more reprogram stress:
+                # the overflow write goes TLC-direct instead
+                to_rp = to_rp & ctx.gate_ok
         else:
             to_rp = jnp.zeros_like(to_slc)
         to_tlc = is_write & ~to_slc & ~to_trad & ~to_rp
@@ -202,21 +258,60 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
         prog_t = jnp.where(to_slc | to_trad, t_.slc_write_ms,
                            jnp.where(to_rp, t_.reprogram_ms,
                                      t_.tlc_write_ms))
-        read_t = jnp.where(old_ok, t_.slc_read_ms, t_.tlc_read_ms)
+        # gated regions keep ips's conservative read model: resident data
+        # may already be densified (completed generations), so cache hits
+        # read at TLC speed — residency tracking exists for migration
+        # accounting, and must not hand the gated policy a read-speed
+        # advantage its ips baseline does not model
+        hit_read_ms = t_.tlc_read_ms if gated else t_.slc_read_ms
+        read_t = jnp.where(old_ok, hit_read_ms, t_.tlc_read_ms)
+        if use_endurance:
+            # retention-derived read cost: aged blocks need read-retry,
+            # ramping linearly to read_penalty_ms at the cycle budget
+            # (worst of the plane's basic and traditional regions)
+            aged = jnp.maximum(
+                plane_cycles(ctx.pe_slc_p, ctx.pe_rp_p, ctx.erase_p,
+                             endur, cap_basic),
+                trad_cycles(ctx.pe_trad_p, ctx.erase_trad_p, endur,
+                            cap_trad))
+            age = jnp.clip(aged / jnp.maximum(endur.cycle_budget, 1e-9),
+                           0.0, 1.0)
+            read_t = read_t + endur.read_penalty_ms * age
         service = jnp.where(is_write, prog_t, read_t)
         service = jnp.where(is_pad, 0.0, service)
         latency = jnp.where(is_pad, 0.0,
                             wait + conflict + service)
         busy_new = jnp.where(is_pad, busy_p, start + service)
 
+        # wear accounting (DESIGN.md §9): a basic-region host program
+        # lands in a wear bucket — the sequential fill position by
+        # default, the coldest bucket under wear-aware allocation;
+        # reprogram stress lands at the conversion position. Traditional-
+        # region programs are tracked per plane (own blocks/capacity).
+        if use_endurance:
+            if wear_aware:
+                bkt_slc = jnp.argmin(endur.w_slc * ctx.pe_slc_p
+                                     + endur.w_rp * ctx.pe_rp_p
+                                     ).astype(jnp.int32)
+            else:
+                bkt_slc = jnp.clip(
+                    slc_used * n_buckets // jnp.maximum(cap_basic, 1),
+                    0, n_buckets - 1)
+            bkt_rp = jnp.clip(
+                rp_done * n_buckets // jnp.maximum(2 * slc_used, 1),
+                0, n_buckets - 1)
+
         # bookkeeping
         slc_used += to_slc.astype(jnp.int32)
         trad_used += to_trad.astype(jnp.int32)
         rp_done += to_rp.astype(jnp.int32)
 
-        # residency tracking covers exactly the migratable region
+        # residency tracking covers exactly the migratable region (the
+        # gated mechanism also tracks reprogrammed data: it must migrate
+        # out if the block's budget exhausts; to_rp is identically False
+        # for the plain migrate mechanism)
         if tracked == "basic":
-            track_new = to_slc
+            track_new = to_slc | to_rp
         elif tracked == "trad":
             track_new = to_trad
         else:
@@ -239,7 +334,36 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
         loc_ep_val = jnp.where(is_write & track_new,
                                epoch_p.astype(jnp.int16), old_ep)
 
+        if use_endurance:
+            pe_slc_new = ctx.pe_slc_p.at[bkt_slc].add(
+                jnp.where(to_slc, 1.0, 0.0))
+            pe_rp_new = ctx.pe_rp_p.at[bkt_rp].add(
+                jnp.where(to_rp, 1.0, 0.0))
+            pe_tlc_new = ctx.pe_tlc_p + jnp.where(to_tlc, 1.0, 0.0)
+            pe_trad_new = ctx.pe_trad_p + jnp.where(to_trad, 1.0, 0.0)
+            ops_seen = wear.ops_seen + jnp.where(is_pad, 0.0, 1.0)
+            tripped = jnp.maximum(
+                jnp.max(bucket_cycles(pe_slc_new, pe_rp_new, ctx.erase_p,
+                                      endur, cap_basic)),
+                trad_cycles(pe_trad_new, ctx.erase_trad_p, endur,
+                            cap_trad)) >= endur.cycle_budget
+            wear_new = WearState(
+                pe_slc=wear.pe_slc.at[plane].set(pe_slc_new),
+                pe_rp=wear.pe_rp.at[plane].set(pe_rp_new),
+                pe_tlc=wear.pe_tlc.at[plane].set(pe_tlc_new),
+                erase=wear.erase.at[plane].set(ctx.erase_p),
+                pe_trad=wear.pe_trad.at[plane].set(pe_trad_new),
+                erase_trad=wear.erase_trad.at[plane].set(
+                    ctx.erase_trad_p),
+                ops_seen=ops_seen,
+                eol_op=jnp.where((wear.eol_op < 0) & tripped & ~is_pad,
+                                 ops_seen, wear.eol_op),
+            )
+        else:
+            wear_new = None
+
         new_state = SimState(
+            wear=wear_new,
             busy=state.busy.at[plane].set(busy_new),
             slc_used=state.slc_used.at[plane].set(slc_used),
             rp_done=state.rp_done.at[plane].set(rp_done),

@@ -16,20 +16,27 @@ __all__ = ["agc_fill", "AGC_FIELDS"]
 AGC_FIELDS = ("slc_used", "rp_done", "valid_mig", "counters")
 
 
-def agc_fill(ctx, *, dual: bool) -> None:
+def agc_fill(ctx, *, dual: bool, gated: bool = False) -> None:
     """Interruptible Active GC fill of remaining reprogram slots (last
     resort for dual allocation, primary idle mechanism for ips_agc).
     Interruptible at page granularity => safe to run in ANY per-plane
-    gap; an arriving write waits at most half an op."""
+    gap; an arriving write waits at most half an op. With the gated
+    reprogram mechanism, AGC respects the same reliability gate as host
+    conversions (an exhausted block takes no more reprogram stress)."""
     agc_budget = ctx.full_gap
     rp_avail = 2 * ctx.slc_used - ctx.rp_done
     if dual:
         rp_avail = jnp.where(ctx.valid_mig == 0, rp_avail, 0)
+    if gated:
+        rp_avail = jnp.where(ctx.gate_ok, rp_avail, 0)
     ops = jnp.minimum(rp_avail, (agc_budget / ctx.c_agc).astype(jnp.int32))
     ctx.rp_done = ctx.rp_done + ops
     opsf = ops.astype(jnp.float32)
     ctx.ctr = ctx.ctr.at[CTR["rp_agc"]].add(opsf)
     ctx.ctr = ctx.ctr.at[CTR["agc_waste"]].add(opsf * ctx.waste_p)
+    if ctx.track_wear:
+        # page-granular fills spread evenly over the region's buckets
+        ctx.pe_rp_p = ctx.pe_rp_p + opsf / ctx.n_buckets
     # interruptible at page granularity: at most half an op
     agc_active = (2 * ctx.slc_used - ctx.rp_done) > 0
     ctx.conflict = ctx.conflict + jnp.where(agc_active & ctx.is_write,

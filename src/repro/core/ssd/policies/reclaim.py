@@ -14,12 +14,15 @@ from repro.core.ssd.policies.state import (CTR, OVERRUN_PAGES,
                                            ceil_div)
 
 __all__ = ["migrate_reclaim", "dual_reclaim", "generation_completion",
-           "MIGRATE_FIELDS", "DUAL_RECLAIM_FIELDS", "REPROGRAM_FIELDS"]
+           "gated_fallback_reclaim", "MIGRATE_FIELDS",
+           "DUAL_RECLAIM_FIELDS", "REPROGRAM_FIELDS", "GATED_FIELDS"]
 
 MIGRATE_FIELDS = ("slc_used", "valid_mig", "epoch", "counters")
 DUAL_RECLAIM_FIELDS = ("slc_used", "rp_done", "trad_used", "valid_mig",
                        "epoch", "counters")
 REPROGRAM_FIELDS = ("slc_used", "rp_done", "counters")
+GATED_FIELDS = ("slc_used", "rp_done", "valid_mig", "epoch", "counters",
+                "wear")
 
 
 def migrate_reclaim(ctx, alloc, *, pressure: bool) -> None:
@@ -54,6 +57,10 @@ def migrate_reclaim(ctx, alloc, *, pressure: bool) -> None:
                  & (budget >= erase_ms_total))
     ctx.ctr = ctx.ctr.at[CTR["erases"]].add(
         jnp.where(can_erase, blocks, 0).astype(jnp.float32))
+    if ctx.track_wear:
+        # migrations program TLC pages; the erase cycles the region blocks
+        ctx.pe_tlc_p = ctx.pe_tlc_p + mig.astype(jnp.float32)
+        ctx.erase_p = ctx.erase_p + jnp.where(can_erase, 1.0, 0.0)
     ctx.epoch_p = ctx.epoch_p + can_erase.astype(jnp.int32)
     ctx.slc_used = jnp.where(can_erase, 0, ctx.slc_used)
     used_ms += jnp.where(can_erase, erase_ms_total, 0.0)
@@ -78,6 +85,9 @@ def dual_reclaim(ctx) -> None:
     ctx.valid_mig = ctx.valid_mig - ops1
     budget = budget - ops1.astype(jnp.float32) * ctx.c_trad_rp
     ctx.ctr = ctx.ctr.at[CTR["rp_trad"]].add(ops1.astype(jnp.float32))
+    if ctx.track_wear:
+        # batched reprogram fills spread page-granularly over the region
+        ctx.pe_rp_p = ctx.pe_rp_p + ops1.astype(jnp.float32) / ctx.n_buckets
     # (2) overflow: remaining trad valid pages -> free TLC
     rp_avail = 2 * ctx.slc_used - ctx.rp_done
     ops2 = jnp.minimum(
@@ -86,6 +96,8 @@ def dual_reclaim(ctx) -> None:
     ctx.valid_mig = ctx.valid_mig - ops2
     budget = budget - ops2.astype(jnp.float32) * ctx.c_mig
     ctx.ctr = ctx.ctr.at[CTR["mig_w"]].add(ops2.astype(jnp.float32))
+    if ctx.track_wear:
+        ctx.pe_tlc_p = ctx.pe_tlc_p + ops2.astype(jnp.float32)
     # (3) erase clean traditional blocks
     blocks = ceil_div(ctx.trad_used, ctx.ppb_slc)
     can_erase = ((ctx.valid_mig == 0) & (ctx.trad_used > 0)
@@ -95,8 +107,43 @@ def dual_reclaim(ctx) -> None:
                                 0.0)
     ctx.ctr = ctx.ctr.at[CTR["erases"]].add(
         jnp.where(can_erase, blocks, 0).astype(jnp.float32))
+    if ctx.track_wear:
+        # the traditional region's own blocks cycle, not the IPS region's
+        ctx.erase_trad_p = ctx.erase_trad_p + jnp.where(can_erase, 1.0,
+                                                        0.0)
     ctx.epoch_p = ctx.epoch_p + can_erase.astype(jnp.int32)
     ctx.trad_used = jnp.where(can_erase, 0, ctx.trad_used)
+
+
+def gated_fallback_reclaim(ctx) -> None:
+    """Reliability-gated reprogram (DESIGN.md §9): once the plane's
+    reprogram budget is exhausted (`~ctx.gate_ok`) the region stops
+    densifying in place and is reclaimed like a traditional cache —
+    valid pages migrate to TLC and the clean region is erased, consuming
+    device-idle budget only (never stalling a write). The plane then
+    keeps caching in SLC mode with idle-gap migrate reclamation; the
+    reprogram gate stays tripped for the block's lifetime."""
+    budget = jnp.where(ctx.gate_ok, 0.0, ctx.dev_budget)
+    mig = jnp.minimum(ctx.valid_mig, (budget / ctx.c_mig).astype(jnp.int32))
+    ctx.valid_mig = ctx.valid_mig - mig
+    budget = budget - mig.astype(jnp.float32) * ctx.c_mig
+    ctx.ctr = ctx.ctr.at[CTR["mig_w"]].add(mig.astype(jnp.float32))
+    blocks = ceil_div(ctx.slc_used, ctx.ppb_slc)
+    # erase only a watermark-full region: an early erase costs a full
+    # region P/E cycle for a handful of freed pages — exactly the wear
+    # this policy exists to avoid (amortization guard, DESIGN.md §9)
+    full_enough = ctx.slc_used >= (WATERMARK_NUM * ctx.cap_basic
+                                   // WATERMARK_DEN)
+    can_erase = ((ctx.valid_mig == 0) & full_enough
+                 & (budget >= blocks.astype(jnp.float32) * ctx.erase_ms))
+    ctx.ctr = ctx.ctr.at[CTR["erases"]].add(
+        jnp.where(can_erase, blocks, 0).astype(jnp.float32))
+    if ctx.track_wear:
+        ctx.pe_tlc_p = ctx.pe_tlc_p + mig.astype(jnp.float32)
+        ctx.erase_p = ctx.erase_p + jnp.where(can_erase, 1.0, 0.0)
+    ctx.epoch_p = ctx.epoch_p + can_erase.astype(jnp.int32)
+    ctx.slc_used = jnp.where(can_erase, 0, ctx.slc_used)
+    ctx.rp_done = jnp.where(can_erase, 0, ctx.rp_done)
 
 
 def generation_completion(ctx) -> None:

@@ -121,3 +121,30 @@ register("ips_lazy", PolicySpec("dual", "exhaustion", "reprogram", "none"),
              "reclaimed by the end-of-workload flush. Normalizes against "
              "coop — the ratio is exactly the value of coop's idle "
              "reclamation.")
+
+# ---------------------------------------------------------------------------
+# Endurance-aware compositions (DESIGN.md §9): wear tracking is auto-
+# enabled for these (policies.spec.requires_endurance); the sweep runner
+# attaches default EnduranceSpec knobs when a grid does not pin its own.
+# ---------------------------------------------------------------------------
+
+register("ips_raro",
+         PolicySpec("static", "exhaustion", "reprogram_gated", "none"),
+         baseline="ips",
+         doc="Reliability-gated IPS (RARO-style conversion gating): "
+             "in-place reprogram is allowed only while the plane's "
+             "per-page reprogram count stays under "
+             "EnduranceParams.rp_budget; an exhausted region falls back "
+             "to idle-gap migration + erase, and overflow host writes go "
+             "TLC-direct. Residency is tracked for migration accounting "
+             "only — cache reads keep ips's conservative TLC-speed model "
+             "so the declared-baseline ratio isolates the gate. "
+             "Normalizes against ips — the ratio is the latency/WAF "
+             "price of the lifetime guarantee.")
+register("base_wl",
+         PolicySpec("wear_min", "watermark", "migrate", "greedy"),
+         doc="Turbo-Write baseline + wear-aware allocation: each SLC "
+             "program lands in the coldest wear bucket of the plane's "
+             "region instead of the sequential fill position. Latencies "
+             "and WAF are bit-identical to baseline; only the wear skew "
+             "(BENCH cycle_skew column) improves.")

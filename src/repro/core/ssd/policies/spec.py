@@ -14,6 +14,11 @@ Axes (values are the registered mechanism names):
       "adaptive"  static basic region that unlocks `cap_boost` extra pages
                   (borrowed TLC blocks in SLC mode) while occupancy sits at
                   or above the pressure watermark — dynamic SLC sizing
+      "wear_min"  static capacity, wear-aware placement: each SLC program
+                  lands in the coldest wear bucket of the plane's region
+                  instead of the sequential fill position (pick-coldest-
+                  free-block wear leveling; requires endurance tracking,
+                  DESIGN.md §9)
   trigger     — what starts reclamation of the tracked region
       "watermark"  occupancy >= 7/8 of capacity escalates reclamation onto
                    the critical path (bounded overrun, paper Fig. 7)
@@ -23,6 +28,13 @@ Axes (values are the registered mechanism names):
   mechanism   — how pages leave the cache
       "migrate"    read SLC + program TLC + erase (traditional GC)
       "reprogram"  in-place density switch (the paper's IPS primitive)
+      "reprogram_gated"  reliability-gated reprogram (RARO-style,
+                   DESIGN.md §9): in-place conversion is allowed only
+                   while the plane's reprogram budget
+                   (`EnduranceParams.rp_budget`) lasts; an exhausted
+                   region falls back to idle-gap migration + erase and
+                   overflow host writes go TLC-direct (requires
+                   endurance tracking)
   idle        — what runs in idle time beyond triggered reclamation
       "none"       nothing (lazy policies)
       "greedy"     triggered reclamation may consume any gap, block-at-a-
@@ -40,11 +52,11 @@ from typing import Optional
 
 __all__ = ["PolicySpec", "ALLOCATION_AXIS", "TRIGGER_AXIS",
            "MECHANISM_AXIS", "IDLE_AXIS", "validate_spec",
-           "tracked_region"]
+           "tracked_region", "requires_endurance"]
 
-ALLOCATION_AXIS = ("static", "dual", "adaptive")
+ALLOCATION_AXIS = ("static", "dual", "adaptive", "wear_min")
 TRIGGER_AXIS = ("watermark", "idle_gap", "exhaustion")
-MECHANISM_AXIS = ("migrate", "reprogram")
+MECHANISM_AXIS = ("migrate", "reprogram", "reprogram_gated")
 IDLE_AXIS = ("none", "greedy", "agc")
 
 
@@ -83,7 +95,8 @@ def validate_spec(spec: PolicySpec) -> None:
         if val not in valid:
             raise ValueError(
                 f"unknown {axis} mechanism {val!r}; valid: {valid}")
-    if spec.mechanism == "reprogram" and spec.trigger != "exhaustion":
+    if (spec.mechanism in ("reprogram", "reprogram_gated")
+            and spec.trigger != "exhaustion"):
         raise ValueError(
             f"{spec.composition}: the reprogram mechanism is exhaustion-"
             "triggered by construction (host writes convert in place); "
@@ -104,7 +117,8 @@ def validate_spec(spec: PolicySpec) -> None:
             "migrate reclamation consumes gaps; with the reprogram "
             "mechanism it would be a dead axis value behaving exactly "
             "like \"none\" — say \"none\" (or \"agc\")")
-    if spec.idle == "agc" and spec.mechanism != "reprogram":
+    if spec.idle == "agc" and spec.mechanism not in ("reprogram",
+                                                     "reprogram_gated"):
         raise ValueError(
             f"{spec.composition}: AGC fills reprogram slots and therefore "
             "requires the reprogram mechanism")
@@ -112,7 +126,7 @@ def validate_spec(spec: PolicySpec) -> None:
         raise ValueError(
             f"{spec.composition}: the dual-region allocation reclaims the "
             "traditional region by reprogramming into the IPS region "
-            "(paper §IV.D); it requires the reprogram mechanism")
+            "(paper §IV.D); it requires the (ungated) reprogram mechanism")
     if spec.allocation == "adaptive" and spec.mechanism != "migrate":
         raise ValueError(
             f"{spec.composition}: adaptive sizing piggybacks on watermark "
@@ -125,11 +139,24 @@ def tracked_region(spec: PolicySpec) -> Optional[str]:
 
     Migratable regions must be tracked (migration volume = valid pages);
     IPS regions carry no reclamation debt, so nothing is tracked for
-    static/adaptive reprogram policies. Returns "basic", "trad" or None —
+    static/adaptive reprogram policies. The *gated* reprogram mechanism
+    tracks its basic region: once the reprogram budget is exhausted the
+    region's valid data must migrate out (and flush at end of workload)
+    exactly like a traditional cache. Returns "basic", "trad" or None —
     also the end-of-workload flush rule (sim.flush_cache).
     """
-    if spec.mechanism == "migrate":
+    if spec.mechanism in ("migrate", "reprogram_gated"):
         return "basic"
     if spec.allocation == "dual":
         return "trad"
     return None
+
+
+def requires_endurance(spec: PolicySpec) -> bool:
+    """Compositions that only make sense with wear tracking enabled: the
+    reliability gate reads reprogram wear, wear-aware placement reads
+    bucket wear. The sweep runner auto-attaches default `EnduranceSpec`
+    knobs to cells of such policies; `engine.build_step` rejects them
+    without `CellParams.endurance`."""
+    return (spec.mechanism == "reprogram_gated"
+            or spec.allocation == "wear_min")

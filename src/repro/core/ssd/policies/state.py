@@ -17,6 +17,10 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
+from repro.core.ssd.endurance.model import (EnduranceParams, WearState,
+                                            as_params, init_wear)
+from repro.core.ssd.endurance.spec import EnduranceSpec
+
 __all__ = ["CellParams", "SimState", "CTR", "init_state", "default_cell",
            "WATERMARK_NUM", "WATERMARK_DEN", "OVERRUN_PAGES", "ceil_div"]
 
@@ -42,6 +46,10 @@ class CellParams(NamedTuple):
     cap_boost: jnp.ndarray = None  # i32 — adaptive allocation: extra SLC
     #                                pages unlocked above the watermark
     #                                (None == 0 for non-adaptive policies)
+    endurance: EnduranceParams = None  # traced wear/reliability knobs
+    #                                (DESIGN.md §9); None — endurance
+    #                                tracking statically absent, keeping
+    #                                the seed pytree and golden identity
 
 
 class SimState(NamedTuple):
@@ -58,6 +66,10 @@ class SimState(NamedTuple):
     prev_t: jnp.ndarray        # () f32 — last arrival (device-level idle)
     idle_cum: jnp.ndarray      # () f32 — cumulative usable device idle
     idle_seen: jnp.ndarray     # (P,) f32 — idle_cum consumed per plane
+    wear: WearState = None     # per-plane/bucket P/E state (DESIGN.md §9);
+    #                            None unless CellParams.endurance is set —
+    #                            jax treats None as an empty pytree, so
+    #                            non-endurance carries keep the seed shape
 
 
 CTR = {name: i for i, name in enumerate(
@@ -65,9 +77,10 @@ CTR = {name: i for i, name in enumerate(
      "mig_w", "erases", "agc_waste", "conflict_ms"])}
 
 
-def init_state(cfg, n_logical: int) -> SimState:
+def init_state(cfg, n_logical: int, *, endurance: bool = False) -> SimState:
     p = cfg.num_planes
     return SimState(
+        wear=init_wear(cfg) if endurance else None,
         busy=jnp.zeros(p, jnp.float32),
         slc_used=jnp.zeros(p, jnp.int32),
         rp_done=jnp.zeros(p, jnp.int32),
@@ -87,12 +100,19 @@ def ceil_div(a, b):
     return (a + b - 1) // b
 
 
-def default_cell(cfg, spec, waste_p: float = 0.0) -> CellParams:
+def default_cell(cfg, spec, waste_p: float = 0.0,
+                 endurance: EnduranceSpec | None = None) -> CellParams:
     """CellParams matching the static config for one composition.
 
     The reference single-cell path and the fleet path share these exact
-    values; per-name defaults come from the allocation mechanism."""
+    values; per-name defaults come from the allocation mechanism.
+    `endurance` enables wear tracking (DESIGN.md §9); compositions that
+    require it (reliability gate, wear-aware placement) get default
+    `EnduranceSpec` knobs even when the caller passes None."""
     from repro.core.ssd.policies.allocation import ALLOCATIONS
+    from repro.core.ssd.policies.spec import requires_endurance
+    if endurance is None and requires_endurance(spec):
+        endurance = EnduranceSpec()
     cap_basic, cap_trad, cap_boost = \
         ALLOCATIONS[spec.allocation].default_caps(cfg)
     return CellParams(
@@ -101,4 +121,5 @@ def default_cell(cfg, spec, waste_p: float = 0.0) -> CellParams:
         idle_thr=jnp.float32(cfg.idle_threshold_ms),
         waste_p=jnp.float32(waste_p),
         cap_boost=jnp.int32(cap_boost),
+        endurance=None if endurance is None else as_params(endurance),
     )

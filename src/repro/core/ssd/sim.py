@@ -57,13 +57,16 @@ POLICIES = PAPER_POLICIES
 _ceil_div = ceil_div    # old private name, kept for external references
 
 
-def default_params(cfg: SSDConfig, policy,
-                   waste_p: float = 0.0) -> CellParams:
+def default_params(cfg: SSDConfig, policy, waste_p: float = 0.0,
+                   endurance=None) -> CellParams:
     """CellParams matching the static config for one policy (the reference
     single-cell path and the fleet path share these exact values).
 
-    `policy` is a registered name or a raw `PolicySpec`."""
-    return default_cell(cfg, resolve_spec(policy), waste_p)
+    `policy` is a registered name or a raw `PolicySpec`; `endurance` (an
+    `EnduranceSpec`) enables wear/reliability tracking (DESIGN.md §9) —
+    compositions that require it get default knobs even when None."""
+    return default_cell(cfg, resolve_spec(policy), waste_p,
+                        endurance=endurance)
 
 
 def make_step(cfg: SSDConfig, policy, *, closed_loop: bool,
@@ -100,7 +103,8 @@ def run_trace(cfg: SSDConfig, policy, trace, *, closed_loop: bool,
     if params is None:
         params = default_params(cfg, policy, waste_p)
     step = make_step(cfg, policy, closed_loop=closed_loop, params=params)
-    state0 = init_state(cfg, n_logical)
+    state0 = init_state(cfg, n_logical,
+                        endurance=params.endurance is not None)
     final, latency = jax.lax.scan(step, state0, as_ops(trace))
     return latency, final
 
@@ -128,8 +132,14 @@ def flush_cache(cfg: SSDConfig, state: SimState, policy="baseline"):
     return state._replace(counters=ctr)
 
 
-def summarize(latency, trace, state: SimState):
-    """Write-latency stats + write amplification from counters."""
+def summarize(latency, trace, state: SimState, *,
+              cell: CellParams | None = None, cfg: SSDConfig | None = None):
+    """Write-latency stats + write amplification from counters.
+
+    When the run carried endurance state (`state.wear`) and the caller
+    supplies its `CellParams` + config, the lifetime/wear-leveling metrics
+    (TBW projection, cycle skew, end-of-life step — DESIGN.md §9) are
+    merged into the summary."""
     is_w = trace["is_write"] == 1
     lat_w = jnp.where(is_w, latency, 0.0)
     n_w = jnp.maximum(jnp.sum(is_w), 1)
@@ -138,7 +148,14 @@ def summarize(latency, trace, state: SimState):
     host = jnp.maximum(c[CTR["host_w"]], 1.0)
     extra_paper = c[CTR["mig_w"]] + c[CTR["rp_trad"]] + c[CTR["agc_waste"]]
     extra_raw = c[CTR["mig_w"]] + c[CTR["rp_trad"]] + c[CTR["rp_agc"]]
-    return {
+    wear_metrics = {}
+    if (state.wear is not None and cell is not None
+            and cell.endurance is not None and cfg is not None):
+        from repro.core.ssd.endurance.model import wear_summary
+        wear_metrics = wear_summary(state.wear, cell.endurance,
+                                    cell.cap_basic, cell.cap_trad,
+                                    cfg.page_bytes, c[CTR["host_w"]])
+    return wear_metrics | {
         "mean_write_latency_ms": mean_lat,
         "wa_paper": 1.0 + extra_paper / host,
         "wa_raw": 1.0 + extra_raw / host,

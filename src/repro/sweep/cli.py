@@ -14,6 +14,12 @@ Examples (run with PYTHONPATH=src):
   python -m repro.sweep.cli --grid quick --policies dyn_slc,ips_lazy
       # registry smoke: replay a named grid's workloads under any
       # registered policies (declared baselines are added automatically)
+  python -m repro.sweep.cli --grid endurance      # wear/lifetime columns
+  python -m repro.sweep.cli --grid sensitivity    # one-axis deltas vs ips
+  python -m repro.sweep.cli --traces hm_0 --policies ips,ips_raro \
+      --endurance w_rp=4,rp_budget=2   # endurance knobs on a custom grid
+  python -m repro.sweep.cli --list-policies   # registry: name/composition
+  python -m repro.sweep.cli --list-grids      # named grids + cell counts
 
 Policies resolve through the mechanism-composition registry
 (`repro.core.ssd.policies`): any registered name — the four paper schemes
@@ -68,6 +74,19 @@ def _parse(argv):
                     "replays the grid's workload cells under these "
                     "policies + their declared baselines")
     ap.add_argument("--modes", default="bursty,daily")
+    ap.add_argument("--endurance", nargs="?", const="", default=None,
+                    metavar="K=V[,K=V...]",
+                    help="enable wear/reliability tracking on every cell "
+                    "(DESIGN.md §9); optional knobs over EnduranceSpec "
+                    "fields, e.g. w_rp=4,rp_budget=2,cycle_budget=60,"
+                    "read_penalty_ms=0.05 (bare flag: defaults). "
+                    "Overrides a named grid's pinned knobs")
+    ap.add_argument("--list-policies", action="store_true",
+                    help="print the policy registry (name, composition, "
+                    "baseline, doc) and exit")
+    ap.add_argument("--list-grids", action="store_true",
+                    help="print the named grids (name, cells, summary) "
+                    "and exit")
     ap.add_argument("--seeds", default="0", help="comma list of RNG seeds; "
                     ">1 seed adds bootstrap CIs to the geomean summary")
     ap.add_argument("--cache-fracs", default="1.0",
@@ -108,12 +127,31 @@ def main(argv=None) -> int:
     from repro import workloads
     from repro.configs.ssd_paper import PAPER_SSD
     from repro.sweep.grid import expand_grid, named_grid
-    from repro.sweep.report import policy_geomeans, policy_geomeans_ci
+    from repro.sweep.report import (endurance_summary, policy_geomeans,
+                                    policy_geomeans_ci, sensitivity_deltas)
     from repro.sweep.runner import bench_fleet_vs_loop, run_sweep
     from repro.sweep.store import save_bench
 
-    from repro.core.ssd.policies import baseline_of, policy_names
+    from repro.core.ssd.endurance.spec import EnduranceSpec
+    from repro.core.ssd.policies import baseline_of, get_entry, policy_names
 
+    if args.list_policies:
+        print(f"{'policy':<10}{'composition':<42}{'baseline':<10}doc")
+        for name in policy_names():
+            e = get_entry(name)
+            doc = e.doc.partition(";")[0].partition(":")[0]
+            print(f"{name:<10}{e.spec.composition:<42}{e.baseline:<10}"
+                  f"{doc}")
+        return 0
+    if args.list_grids:
+        print(f"{'grid':<13}{'cells':>6}  summary")
+        for gname, fn in GRIDS.items():
+            summary = (fn.__doc__ or "").strip().splitlines()[0]
+            print(f"{gname:<13}{len(fn()):>6}  {summary}")
+        return 0
+
+    endurance = (None if args.endurance is None
+                 else EnduranceSpec.parse(args.endurance))
     cfg = PAPER_SSD.scaled(args.scale)
     seeds = tuple(int(s) for s in args.seeds.split(","))
 
@@ -145,13 +183,13 @@ def main(argv=None) -> int:
                 sum(((p, baseline_of(p)) for p in req), ())))
             coords = list(dict.fromkeys(
                 (pt.trace, pt.mode, pt.seed, pt.repeat, pt.cache_frac,
-                 pt.idle_threshold_ms) for pt in points))
+                 pt.idle_threshold_ms, pt.endurance) for pt in points))
             from repro.sweep.grid import SweepPoint
             points = [SweepPoint(trace=t, mode=m, policy=p, seed=s,
                                  repeat=r, cache_frac=c,
-                                 idle_threshold_ms=i,
+                                 idle_threshold_ms=i, endurance=e,
                                  baseline=baseline_of(p))
-                      for (t, m, s, r, c, i) in coords for p in wanted]
+                      for (t, m, s, r, c, i, e) in coords for p in wanted]
     else:
         traces = tuple((args.traces.split(",") if args.traces else
                         (workloads.TRACE_NAMES if not args.trace_file
@@ -203,6 +241,10 @@ def main(argv=None) -> int:
                       cache_fracs=tuple(float(c) for c in
                                         args.cache_fracs.split(",")))]
 
+    if endurance is not None:
+        from dataclasses import replace
+        points = [replace(pt, endurance=endurance) for pt in points]
+
     cache = workloads.TraceCache(use_disk=not args.no_trace_cache_disk)
     print(f"sweep: {len(points)} cells on a 1/{args.scale} drive "
           f"({cfg.capacity_gb:.1f} GB, SLC cache "
@@ -229,6 +271,16 @@ def main(argv=None) -> int:
                "results": results,
                "geomeans": {f"{m}/{p}": v for (m, p), v in
                             policy_geomeans(results).items()}}
+    if any("tbw_proj_gb" in v for v in results.values()):
+        endur = endurance_summary(results)
+        _print_endurance_table(endur)
+        payload["endurance"] = {f"{m}/{p}": v for (m, p), v in
+                                endur.items()}
+    if args.grid == "sensitivity":
+        deltas = sensitivity_deltas(results)
+        _print_sensitivity_table(deltas)
+        payload["sensitivity"] = {"/".join(k): v
+                                  for k, v in deltas.items()}
     if n_seeds > 1:
         cis = policy_geomeans_ci(results)
         _print_ci_table(cis)
@@ -266,6 +318,34 @@ def _print_table(results) -> None:
         print(f"{mode:>7} {policy:<8} "
               f"lat={v.get('mean_write_latency_ms', float('nan')):.3f} "
               f"wa={v.get('wa_paper', float('nan')):.3f}  (n={v['n']})")
+
+
+def _print_endurance_table(endur) -> None:
+    print("\n=== endurance: lifetime + wear leveling (DESIGN.md §9) ===")
+    print(f"{'mode':>7} {'policy':<9}{'tbw/base':>9}{'eol/base':>9}"
+          f"{'cyc_max':>9}{'skew':>7}{'eol%':>6}")
+    for (mode, policy), v in sorted(endur.items()):
+        def fmt(x):
+            # "ref": a reference cell (nothing to normalize against);
+            # "n/a": a normalized policy with no comparable pairs (e.g.
+            # EOL never reached on either side)
+            if x is not None:
+                return f"{x:.3f}"
+            return "ref" if v["is_ref"] else "n/a"
+        print(f"{mode:>7} {policy:<9}{fmt(v['tbw_ratio']):>9}"
+              f"{fmt(v['eol_ratio']):>9}{v['eff_cycles_max']:>9.1f}"
+              f"{v['cycle_skew']:>7.3f}{v['eol_frac']:>6.0%}")
+
+
+def _print_sensitivity_table(deltas) -> None:
+    print("\n=== sensitivity: one-axis swaps around ips "
+          "(ratios vs ips) ===")
+    print(f"{'axis':<11}{'swap':<29}{'policy':<9}{'mode':<7}"
+          f"{'lat':>7}{'wa':>7}")
+    for (axis, swap, policy, mode), v in sorted(deltas.items()):
+        print(f"{axis:<11}{swap:<29}{policy:<9}{mode:<7}"
+              f"{v.get('mean_write_latency_ms', float('nan')):>7.3f}"
+              f"{v.get('wa_paper', float('nan')):>7.3f}")
 
 
 def _print_ci_table(cis) -> None:

@@ -2,28 +2,35 @@
 
 A point pins everything that identifies one simulated cell: workload trace,
 access mode, policy, RNG seed, write-volume repeat factor (paper Fig. 12a),
-cache-size fraction (Fig. 12b sensitivity) and an optional idle-threshold
-override — plus the cell's declared normalization `baseline` (the policy a
+cache-size fraction (Fig. 12b sensitivity), an optional idle-threshold
+override and optional endurance-model knobs (`EnduranceSpec`, DESIGN.md
+§9) — plus the cell's declared normalization `baseline` (the policy a
 grid divides this cell by in reports; "baseline" unless the grid says
 otherwise, e.g. the `beyond` grid normalizes `ips_lazy` against `coop`).
 Points whose knobs only differ in *traced* quantities (seed, cache_frac,
-idle threshold, waste_p) share one compiled scan; the policy's mechanism
-composition, mode and padded trace length split compilation groups
-(DESIGN.md §4/§8).
+idle threshold, waste_p, endurance weights/budgets) share one compiled
+scan; the policy's mechanism composition, mode, padded trace length and
+endurance *presence* (it changes the carry pytree) split compilation
+groups (DESIGN.md §4/§8/§9).
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field, replace
-from typing import Iterable, Optional, Sequence
+from typing import TYPE_CHECKING, Iterable, Optional, Sequence
 
 __all__ = ["SweepPoint", "expand_grid", "matrix_grid", "paper_grid",
            "quick_grid", "stress_grid", "mixed_grid", "beyond_grid",
-           "named_grid", "GRIDS"]
+           "endurance_grid", "sensitivity_grid", "named_grid", "GRIDS"]
 
 # NB: no repro.core.ssd import at module level — `import repro.sweep` must
 # stay jax-free so the CLI can pin XLA_FLAGS before jax initializes.
-# (repro.workloads is numpy-only and safe.)
+# (repro.workloads is numpy-only and safe; EnduranceSpec and the policy
+# registry are pure Python but live under repro.core.ssd, whose package
+# __init__ pulls jax — grids that need them import inside the function.)
+
+if TYPE_CHECKING:                                     # typing only, no jax
+    from repro.core.ssd.endurance.spec import EnduranceSpec
 
 
 @dataclass(frozen=True)
@@ -36,6 +43,10 @@ class SweepPoint:
     cache_frac: float = 1.0        # scales SLC regions (Fig. 12b)
     idle_threshold_ms: Optional[float] = None
     waste_p: Optional[float] = None  # None -> per-trace calibration
+    # endurance-model knobs (DESIGN.md §9); None disables wear tracking
+    # unless the policy's composition requires it (the runner then
+    # attaches default knobs)
+    endurance: Optional["EnduranceSpec"] = None
     # declared normalization policy — metadata, not cell identity:
     # compare=False keeps hash/eq (and hence baseline_point() pairing)
     # independent of who a cell normalizes against
@@ -57,6 +68,8 @@ class SweepPoint:
             quals.append(f"cache={self.cache_frac:g}")
         if self.idle_threshold_ms is not None:
             quals.append(f"idle={self.idle_threshold_ms:g}")
+        if self.endurance is not None:
+            quals.append(f"endur={self.endurance.tag}")
         base = f"{self.trace}/{self.mode}/{self.policy}"
         return base + (f"&{','.join(quals)}" if quals else "")
 
@@ -153,8 +166,55 @@ def beyond_grid() -> list[SweepPoint]:
     return pts
 
 
+def endurance_grid() -> list[SweepPoint]:
+    """Wear / reliability / lifetime evaluation (DESIGN.md §9). Every cell
+    tracks endurance with one pinned knob set:
+
+    * `w_rp=4` — reprogram stress well above an erase cycle (the paper's
+      reliability concern made concrete); `rp_budget=2` — blocks tolerate
+      two full reprogram passes before the gate trips, so the gate is
+      live inside the traces; `cycle_budget=15` — small enough that the
+      end-of-life step is reachable on write-heavy cells;
+      `read_penalty_ms=0.05` — aged planes pay up to one extra SLC read.
+    * `ips_raro` (reliability-gated reprogram) normalizes against `ips`:
+      the lifetime win vs the latency/WAF price of the gate.
+    * `base_wl` (wear-aware allocation) vs `baseline`: identical
+      latency/WAF, lower cycle skew.
+    """
+    from repro.core.ssd.endurance.spec import EnduranceSpec
+    e = EnduranceSpec(w_rp=4.0, w_erase=1.0, cycle_budget=15.0,
+                      rp_budget=2.0, read_penalty_ms=0.05)
+    traces = ("hm_0", "hm_1", "proj_0")
+    pts = expand_grid(traces=traces, policies=("baseline", "ips",
+                                               "base_wl"))
+    pts += expand_grid(traces=traces, policies=("ips_raro",),
+                       baseline="ips")
+    return [replace(p, endurance=e) for p in pts]
+
+
+def sensitivity_grid() -> list[SweepPoint]:
+    """Per-mechanism sensitivity around the `ips` composition (ROADMAP
+    PR 3 follow-on): every registered policy whose spec differs from ips
+    on exactly ONE axis, each normalized against ips — the per-axis delta
+    is the isolated value of that mechanism swap. Axes with no valid
+    registered neighbor (e.g. the trigger axis: reprogram is exhaustion-
+    triggered by construction) are fixed by the composition constraints.
+    """
+    from repro.core.ssd.policies.registry import get_spec, policy_names
+    center = "ips"
+    cspec = get_spec(center)
+    axes = ("allocation", "trigger", "mechanism", "idle")
+    neighbors = sorted(
+        name for name in policy_names()
+        if sum(getattr(get_spec(name), a) != getattr(cspec, a)
+               for a in axes) == 1)
+    return expand_grid(traces=("hm_0", "hm_1", "proj_0"),
+                       policies=(center, *neighbors), baseline=center)
+
+
 GRIDS = {"paper": paper_grid, "quick": quick_grid, "matrix": matrix_grid,
-         "stress": stress_grid, "mixed": mixed_grid, "beyond": beyond_grid}
+         "stress": stress_grid, "mixed": mixed_grid, "beyond": beyond_grid,
+         "endurance": endurance_grid, "sensitivity": sensitivity_grid}
 
 
 def named_grid(name: str) -> list[SweepPoint]:

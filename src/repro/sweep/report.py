@@ -17,7 +17,8 @@ from typing import Dict, Mapping
 import numpy as np
 
 __all__ = ["geomean", "normalize_to_baseline", "normalize_points",
-           "policy_geomeans", "bootstrap_ci", "policy_geomeans_ci"]
+           "policy_geomeans", "bootstrap_ci", "policy_geomeans_ci",
+           "endurance_summary", "sensitivity_deltas"]
 
 
 def geomean(values) -> float:
@@ -55,15 +56,18 @@ def normalize_to_baseline(results: Mapping[str, Dict], metric: str
 
 def normalize_points(results: Mapping, metric: str) -> Dict:
     """SweepPoint-keyed variant: normalize each point against its
-    `baseline_point()` (same trace/mode/seed/repeat/cache/idle, the
-    point's *declared* baseline policy). Reference cells — points whose
-    policy IS their declared baseline — are skipped, not self-normalized."""
+    `baseline_point()` (same trace/mode/seed/repeat/cache/idle/endurance,
+    the point's *declared* baseline policy). Reference cells — points
+    whose policy IS their declared baseline — are skipped, not
+    self-normalized; cells where either side lacks the metric (e.g. the
+    endurance lifetime columns against a wear-free baseline) are skipped
+    too."""
     out = {}
     for point, val in results.items():
-        if point.policy == point.baseline:
+        if point.policy == point.baseline or metric not in val:
             continue
         base = results.get(point.baseline_point())
-        if base is None:
+        if base is None or metric not in base:
             continue
         out[point] = val[metric] / max(base[metric], 1e-12)
     return out
@@ -85,6 +89,77 @@ def policy_geomeans(results: Mapping, metrics=("mean_write_latency_ms",
                 continue
             agg.setdefault((point.mode, point.policy), {}).setdefault(
                 metric, []).append(ratio)
+    return {k: {m: geomean(v) for m, v in d.items()}
+            | {"n": max(len(v) for v in d.values())}
+            for k, d in agg.items()}
+
+
+def endurance_summary(results: Mapping) -> Dict:
+    """Per-(mode, policy) lifetime / wear-leveling columns (DESIGN.md §9)
+    over cells that carried endurance metrics:
+
+    * `tbw_ratio` — geomean of the TBW projection normalized against each
+      cell's declared baseline (None for reference cells);
+    * `eol_ratio` — likewise for the end-of-life step, over cell pairs
+      where BOTH sides reached EOL inside the trace (an `eol_op` of -1
+      means the budget was never exhausted — not comparable as a ratio);
+    * `cycle_skew` / `eff_cycles_max` — raw means (max/mean bucket-cycle
+      skew: wear-leveling quality; worst-block cycles: lifetime driver);
+    * `eol_frac` — fraction of cells whose worst bucket hit the cycle
+      budget inside the trace.
+    """
+    tbw = normalize_points(results, "tbw_proj_gb")
+    agg: Dict = {}
+    for point, val in results.items():
+        if "tbw_proj_gb" not in val:
+            continue
+        d = agg.setdefault((point.mode, point.policy),
+                           {"tbw": [], "eol": [], "skew": [], "cyc": [],
+                            "eol_hit": [], "is_ref": True})
+        if point.policy != point.baseline:
+            d["is_ref"] = False         # normalizes against someone else
+        if point in tbw:
+            d["tbw"].append(tbw[point])
+            base = results[point.baseline_point()]
+            if val["eol_op"] >= 0 and base.get("eol_op", -1) >= 0:
+                d["eol"].append(val["eol_op"] / base["eol_op"])
+        d["skew"].append(val["cycle_skew"])
+        d["cyc"].append(val["eff_cycles_max"])
+        d["eol_hit"].append(val["eol_op"] >= 0)
+    return {k: {"tbw_ratio": geomean(d["tbw"]) if d["tbw"] else None,
+                "eol_ratio": geomean(d["eol"]) if d["eol"] else None,
+                "cycle_skew": float(np.mean(d["skew"])),
+                "eff_cycles_max": float(np.mean(d["cyc"])),
+                "eol_frac": float(np.mean(d["eol_hit"])),
+                "is_ref": d["is_ref"],
+                "n": len(d["skew"])}
+            for k, d in agg.items()}
+
+
+def sensitivity_deltas(results: Mapping, center: str = "ips",
+                       metrics=("mean_write_latency_ms", "wa_paper")
+                       ) -> Dict:
+    """Per-axis deltas around `center` (the `sensitivity` grid's report):
+    for every policy in `results` differing from the center's composition
+    on exactly one axis, the geomean of its center-normalized metrics per
+    (axis, policy, mode). The axis attribution is recomputed from the
+    registry, so the table stays honest if compositions change."""
+    from repro.core.ssd.policies.registry import get_spec
+    cspec = get_spec(center)
+    axes = ("allocation", "trigger", "mechanism", "idle")
+    agg: Dict = {}
+    for metric in metrics:
+        for point, ratio in normalize_points(results, metric).items():
+            if point.baseline != center:
+                continue
+            spec = get_spec(point.policy)
+            diff = [a for a in axes
+                    if getattr(spec, a) != getattr(cspec, a)]
+            if len(diff) != 1:
+                continue
+            key = (diff[0], f"{getattr(cspec, diff[0])}->"
+                   f"{getattr(spec, diff[0])}", point.policy, point.mode)
+            agg.setdefault(key, {}).setdefault(metric, []).append(ratio)
     return {k: {m: geomean(v) for m, v in d.items()}
             | {"n": max(len(v) for v in d.values())}
             for k, d in agg.items()}

@@ -43,7 +43,8 @@ from repro.core.ssd.config import SSDConfig
 # imports repro.sweep.report, and this module is imported lazily by it)
 from repro.core.ssd.driver import (LOGICAL_SPACE_CAP, _agc_waste_p,
                                    agc_waste_from_stats)
-from repro.core.ssd.policies import get_spec
+from repro.core.ssd.endurance.spec import EnduranceSpec
+from repro.core.ssd.policies import get_spec, requires_endurance
 from repro.core.ssd.sim import default_params
 from repro.sweep.grid import SweepPoint
 
@@ -54,11 +55,24 @@ def _n_logical(cfg: SSDConfig) -> int:
     return min(cfg.total_pages, LOGICAL_SPACE_CAP)
 
 
+def _endurance_of(point: SweepPoint):
+    """The point's endurance knobs: its own, or defaults when the policy's
+    composition requires wear tracking (reliability gate / wear-aware
+    placement — DESIGN.md §9), else None."""
+    if point.endurance is not None:
+        return point.endurance
+    if requires_endurance(get_spec(point.policy)):
+        return EnduranceSpec()
+    return None
+
+
 def _cell_params(cfg: SSDConfig, point: SweepPoint, waste_p: float):
     """Per-point CellParams: calibrated waste_p unless pinned, cache_frac
-    scaling, idle override — all traced, never a recompile."""
+    scaling, idle override, endurance knobs — all traced, never a
+    recompile."""
     import jax.numpy as jnp
-    p = default_params(cfg, point.policy, waste_p)
+    p = default_params(cfg, point.policy, waste_p,
+                       endurance=_endurance_of(point))
     if point.cache_frac != 1.0:
         p = p._replace(
             cap_basic=jnp.int32(max(int(int(p.cap_basic)
@@ -129,12 +143,15 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
             fitted_waste[key] = agc_waste_from_stats(st)
         return fitted_waste[key]
 
-    # compilation groups: (composition, mode, padded length) — names with
-    # the same PolicySpec share one compiled fleet
+    # compilation groups: (composition, mode, padded length, endurance
+    # presence) — names with the same PolicySpec share one compiled fleet;
+    # wear tracking changes the carry pytree, so endurance-on and -off
+    # cells of one composition cannot share a stacked fleet
     groups: Dict[tuple, list] = defaultdict(list)
     for pt in points:
         groups[(get_spec(pt.policy), pt.mode,
-                len(cell_trace(pt)["arrival_ms"]))].append(pt)
+                len(cell_trace(pt)["arrival_ms"]),
+                _endurance_of(pt) is not None)].append(pt)
 
     results: Dict[SweepPoint, Dict[str, float]] = {}
 
@@ -157,8 +174,9 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
 
     # ---- phase 1: dispatch every group (async — results are futures) ----
     pending = []
-    for (spec, mode, _t_len), pts in sorted(
-            groups.items(), key=lambda kv: (kv[0][0], kv[0][1], kv[0][2])):
+    for (spec, mode, _t_len, _endur), pts in sorted(
+            groups.items(), key=lambda kv: (kv[0][0], kv[0][1], kv[0][2],
+                                            kv[0][3])):
         if max_pending is not None and len(pending) >= max_pending:
             drain(pending.pop(0))       # bounded window: free the oldest
         traces = [cell_trace(p) for p in pts]
@@ -184,7 +202,8 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
             closed_loop=(mode == "bursty"), n_logical=n_logical)
         if mode == "daily":
             states = fleet.flush_fleet(cfg, states, spec)
-        summ = fleet.summarize_fleet(latency, ops["is_write"], states)
+        summ = fleet.summarize_fleet(latency, ops["is_write"], states,
+                                     params=stacked, cfg=cfg)
         dispatch_s = time.perf_counter() - t0
         pending.append({"pts": pts, "n_ops": [t["n_ops"] for t in traces],
                         "summ": summ, "names": names, "mode": mode,

@@ -22,7 +22,12 @@ grows past `$REPRO_TRACE_CACHE_MAX_MB` (or the `max_mb` constructor
 argument; unset/<=0 means unlimited), the least-recently-USED entries are
 deleted first — a disk hit refreshes the entry's mtime, so recency tracks
 use, not creation. Eviction is best-effort like every other disk path
-here.
+here, and guarded against concurrent sweeps sharing the store: evictors
+serialize on a non-blocking `flock` over `.evict.lock` (a busy lock means
+another process is already evicting — skip), and each candidate is
+re-`stat`ed immediately before deletion so an entry a concurrent reader
+just touched (refreshed mtime) is no longer LRU and survives. A reader
+that still loses the race to a deletion simply misses and rebuilds.
 
 Hit/miss/eviction counts are exported via `stats()` and logged into
 `BENCH_*` run metadata by the sweep CLI, so trace-build amortization is
@@ -30,6 +35,7 @@ visible in the perf trajectory.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
@@ -38,6 +44,11 @@ import time
 from typing import Callable, Dict, Mapping, Optional
 
 import numpy as np
+
+try:                                    # POSIX; eviction runs unlocked on
+    import fcntl                        # platforms without flock
+except ImportError:                     # pragma: no cover
+    fcntl = None
 
 __all__ = ["TraceCache", "default_cache_dir", "default_max_mb",
            "file_digest", "FORMAT_VERSION"]
@@ -142,6 +153,33 @@ class TraceCache:
             return                              # disk cache is best-effort
         self._evict(keep=self._path(key))
 
+    @contextlib.contextmanager
+    def _evict_lock(self):
+        """Non-blocking exclusive lock serializing evictors across
+        processes (yields whether the lock was won). Losing the race
+        means another sweep is already evicting this store — skipping is
+        both safe and cheaper. No-ops (always "won") without flock."""
+        if fcntl is None:
+            yield True
+            return
+        fd = None
+        try:
+            fd = os.open(os.path.join(self.root, ".evict.lock"),
+                         os.O_CREAT | os.O_RDWR, 0o644)
+            fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+        except OSError:
+            if fd is not None:
+                os.close(fd)
+            yield False
+            return
+        try:
+            yield True
+        finally:
+            try:
+                fcntl.flock(fd, fcntl.LOCK_UN)
+            finally:
+                os.close(fd)
+
     def _evict(self, keep: Optional[str] = None) -> None:
         """Reap abandoned `.npz.tmp` spills (interrupted writes), then —
         when a size cap is set — delete least-recently-used entries until
@@ -150,11 +188,23 @@ class TraceCache:
         race on the same files, and losing the race only means the space
         is freed.
 
+        Concurrency (module docstring): evictors hold the `.evict.lock`
+        flock, and every candidate is re-stat'ed right before deletion —
+        an entry whose mtime moved since the scan was just USED by a
+        concurrent sweep, is no longer least-recently-used, and must
+        survive.
+
         Without a size cap the directory scan exists only for orphan
         reaping, so it runs once per instance instead of on every store
         (a capped store needs the scan anyway, for budget accounting)."""
         if not self.max_mb and self._tmp_reaped:
             return
+        with self._evict_lock() as won:
+            if not won:
+                return
+            self._evict_locked(keep)
+
+    def _evict_locked(self, keep: Optional[str]) -> None:
         try:
             entries = []
             with os.scandir(self.root) as it:
@@ -191,6 +241,11 @@ class TraceCache:
                     os.path.abspath(path) == os.path.abspath(keep):
                 continue
             try:
+                # freshness re-check: an mtime moved since the scan means
+                # a concurrent sweep just hit this entry — it is no longer
+                # LRU, so it survives this pass
+                if os.stat(path).st_mtime_ns != mtime:
+                    continue
                 os.remove(path)
             except OSError:
                 continue

@@ -1,0 +1,491 @@
+"""Endurance engine tests (DESIGN.md §9).
+
+Load-bearing contracts:
+
+* Zero-wear bit-identity — endurance tracking with all-zero wear weights
+  is pure observation: latencies and every legacy state field of the four
+  paper policies stay bit-identical to the vendored golden monolith
+  (ci_check's zero-wear gate), while the wear counters populate.
+* The reliability gate (`ips_raro`) stops reprogram stress at the traced
+  `rp_budget` and falls back to migration; lifetime (TBW projection)
+  improves over `ips` while write latency does not regress.
+* Wear-aware allocation (`base_wl`) changes ONLY wear placement: latency
+  and legacy state bit-identical to baseline, cycle skew lower.
+* Fleet/single-cell equivalence extends to the wear state.
+
+Satellite coverage rides along: PolicySpec validation for the new axis
+values, CellParams (incl. EnduranceParams) round-trip through the fleet
+stacker, and the trace-cache eviction lock.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from golden_sim import golden_run_trace
+from repro.configs.ssd_paper import PAPER_SSD
+from repro.core.ssd import fleet
+from repro.core.ssd.driver import _agc_waste_p
+from repro.core.ssd.endurance import EnduranceSpec, WearState
+from repro.core.ssd.endurance.model import as_params
+from repro.core.ssd.policies import (PAPER_POLICIES, PolicySpec, get_entry,
+                                     get_spec, policy_names,
+                                     requires_endurance, state_fields_used,
+                                     tracked_region, validate_spec)
+from repro.core.ssd.sim import (CTR, SimState, default_params, flush_cache,
+                                run_trace, summarize)
+from repro.core.ssd.workloads import make_trace, truncate_trace
+from repro.sweep.grid import SweepPoint, endurance_grid, named_grid
+from repro.sweep.report import (endurance_summary, normalize_points,
+                                sensitivity_deltas)
+
+CFG = PAPER_SSD.scaled(128)
+N_LOGICAL = min(CFG.total_pages, 1 << 16)
+MAX_OPS = 4096
+
+
+def _hm0(mode, max_ops=MAX_OPS):
+    return truncate_trace(
+        make_trace("hm_0", N_LOGICAL, mode=mode,
+                   capacity_pages=CFG.total_pages), max_ops)
+
+
+def _hammer_trace(n_mult=12, seed=0):
+    """Replay-mode cache hammer: enough writes to cycle the SLC region
+    many times, with occasional long gaps so idle reclamation can run."""
+    cache = CFG.slc_cap_pages * CFG.num_planes
+    n = n_mult * cache
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(np.where(rng.random(n) < 0.01, 50.0, 0.05))
+    return {"arrival_ms": arr.astype(np.float32),
+            "lba": rng.integers(0, 60000, n).astype(np.int32),
+            "is_write": np.ones(n, np.int8)}
+
+
+def _assert_legacy_identical(lat_a, st_a, lat_b, st_b, tag):
+    """Latency + every non-wear SimState field bit-identical."""
+    assert np.array_equal(np.asarray(lat_a), np.asarray(lat_b)), \
+        f"latency mismatch [{tag}]"
+    for f in SimState._fields:
+        if f == "wear":
+            continue
+        assert np.array_equal(np.asarray(getattr(st_a, f)),
+                              np.asarray(getattr(st_b, f))), \
+            f"state.{f} mismatch [{tag}]"
+
+
+class TestZeroWearIdentity:
+    """Endurance tracking with zero weights == the golden monolith."""
+
+    @pytest.mark.parametrize("mode", ["bursty", "daily"])
+    @pytest.mark.parametrize("policy", PAPER_POLICIES)
+    def test_zero_wear_vs_golden(self, policy, mode):
+        trace = _hm0(mode)
+        waste = _agc_waste_p("hm_0")
+        closed = mode == "bursty"
+        lat_g, st_g = golden_run_trace(CFG, policy, trace,
+                                       closed_loop=closed,
+                                       n_logical=N_LOGICAL, waste_p=waste)
+        params = default_params(CFG, policy, waste,
+                                endurance=EnduranceSpec.zero())
+        lat_e, st_e = run_trace(CFG, policy, trace, closed_loop=closed,
+                                n_logical=N_LOGICAL, params=params)
+        _assert_legacy_identical(lat_g, SimState(*st_g), lat_e, st_e,
+                                 f"{policy}/{mode}/zero-wear")
+        # ... and the wear side actually observed the run
+        assert st_e.wear is not None
+        assert float(jnp.sum(st_e.wear.pe_slc)) > 0
+        assert float(st_e.wear.eol_op) == -1.0   # zero weights: no aging
+
+    def test_wear_counts_are_weight_independent(self):
+        """Raw P/E event counts don't depend on the (traced) weights."""
+        trace = _hm0("daily")
+        outs = []
+        for e in (EnduranceSpec.zero(), EnduranceSpec(w_rp=9.0)):
+            p = default_params(CFG, "ips", endurance=e)
+            _, st = run_trace(CFG, "ips", trace, closed_loop=False,
+                              n_logical=N_LOGICAL, params=p)
+            outs.append(st.wear)
+        for f in ("pe_slc", "pe_rp", "pe_tlc", "erase"):
+            assert np.array_equal(np.asarray(getattr(outs[0], f)),
+                                  np.asarray(getattr(outs[1], f))), f
+
+    def test_read_penalty_only_touches_read_service(self):
+        """The retention penalty lands on read SERVICE time only: in
+        closed-loop mode (no queueing coupling) write latencies are
+        untouched while aged reads slow down. (In replay mode slower
+        reads may legitimately delay writes through plane queueing.)"""
+        n = 16384
+        rng = np.random.default_rng(3)
+        trace = {"arrival_ms": np.zeros(n, np.float32),
+                 "lba": rng.integers(0, 4096, n).astype(np.int32),
+                 "is_write": rng.choice(
+                     np.array([0, 1], np.int8), n, p=[0.3, 0.7])}
+        lat0, _ = run_trace(CFG, "baseline", trace, closed_loop=True,
+                            n_logical=4096)
+        p = default_params(CFG, "baseline",
+                           endurance=EnduranceSpec(read_penalty_ms=5.0,
+                                                   cycle_budget=1.0))
+        lat1, _ = run_trace(CFG, "baseline", trace, closed_loop=True,
+                            n_logical=4096, params=p)
+        w = trace["is_write"] == 1
+        a0, a1 = np.asarray(lat0), np.asarray(lat1)
+        assert np.array_equal(a0[w], a1[w])
+        assert (a1[~w] >= a0[~w]).all() and (a1[~w] > a0[~w]).any()
+
+
+class TestReliabilityGate:
+    """ips_raro: reprogram stress stops at rp_budget, lifetime improves."""
+
+    def test_gate_caps_reprogram_stress(self):
+        trace = _hammer_trace()
+        e = EnduranceSpec(rp_budget=2.0, cycle_budget=60.0, w_rp=4.0)
+        outs = {}
+        for pol in ("ips", "ips_raro"):
+            p = default_params(CFG, pol, endurance=e)
+            lat, st = run_trace(CFG, pol, trace, closed_loop=False,
+                                n_logical=60000, params=p)
+            outs[pol] = (np.asarray(st.counters), st.wear,
+                         summarize(lat, {"is_write": trace["is_write"]},
+                                   st, cell=p, cfg=CFG))
+        c_i, w_i, s_i = outs["ips"]
+        c_r, w_r, s_r = outs["ips_raro"]
+        # the gate bites: far less reprogram stress, migration instead
+        assert c_r[CTR["rp_host"]] < 0.5 * c_i[CTR["rp_host"]]
+        assert c_r[CTR["mig_w"]] > 0 and c_i[CTR["mig_w"]] == 0
+        # per-page reprogram wear stays in the budget's neighborhood:
+        # the gate closes within one op of crossing, so the overshoot is
+        # bounded by one reprogram per page-slot granule
+        rp_cycles = np.asarray(w_r.pe_rp).sum(axis=1) / CFG.slc_cap_pages
+        assert rp_cycles.max() <= e.rp_budget + 1.0
+        # lifetime improves, write latency does not regress
+        assert float(s_r["tbw_proj_gb"]) > 1.2 * float(s_i["tbw_proj_gb"])
+        assert (float(s_r["mean_write_latency_ms"])
+                <= 1.05 * float(s_i["mean_write_latency_ms"]))
+
+    def test_huge_budget_never_gates(self):
+        """With an unreachable budget the gate never fires: no migration,
+        reprogram volume equals plain ips."""
+        trace = _hammer_trace(n_mult=6)
+        p = default_params(CFG, "ips_raro",
+                           endurance=EnduranceSpec(rp_budget=1e9))
+        _, st_r = run_trace(CFG, "ips_raro", trace, closed_loop=False,
+                            n_logical=60000, params=p)
+        _, st_i = run_trace(CFG, "ips", trace, closed_loop=False,
+                            n_logical=60000)
+        c_r, c_i = np.asarray(st_r.counters), np.asarray(st_i.counters)
+        assert c_r[CTR["mig_w"]] == 0 and c_r[CTR["erases"]] == 0
+        assert c_r[CTR["rp_host"]] == c_i[CTR["rp_host"]]
+
+    def test_eol_step_recorded_and_delayed_by_gating(self):
+        trace = _hammer_trace()
+        e = EnduranceSpec(rp_budget=2.0, cycle_budget=15.0, w_rp=4.0,
+                          w_erase=1.0)
+        eols = {}
+        for pol in ("ips", "ips_raro"):
+            p = default_params(CFG, pol, endurance=e)
+            _, st = run_trace(CFG, pol, trace, closed_loop=False,
+                              n_logical=60000, params=p)
+            eols[pol] = float(st.wear.eol_op)
+        assert eols["ips"] > 0                   # budget exhausted in-trace
+        assert eols["ips_raro"] == -1.0 or \
+            eols["ips_raro"] > eols["ips"]       # gating delays end of life
+
+    def test_flush_covers_gated_region(self):
+        """tracked_region: the gated mechanism tracks its basic region,
+        so the end-of-workload flush migrates the resident data."""
+        assert tracked_region(get_spec("ips_raro")) == "basic"
+        trace = _hm0("daily")
+        p = default_params(CFG, "ips_raro")
+        _, st = run_trace(CFG, "ips_raro", trace, closed_loop=False,
+                          n_logical=N_LOGICAL, params=p)
+        flushed = flush_cache(CFG, st, "ips_raro")
+        gain = float(flushed.counters[CTR["mig_w"]]
+                     - st.counters[CTR["mig_w"]])
+        assert gain == float(np.asarray(st.valid_mig).sum())
+
+
+class TestWearAwareAllocation:
+    def test_base_wl_identical_latency_lower_skew(self):
+        trace = _hm0("daily", max_ops=65536)
+        e = EnduranceSpec(w_erase=1.0)
+        runs = {}
+        for pol in ("baseline", "base_wl"):
+            p = default_params(CFG, pol, endurance=e)
+            lat, st = run_trace(CFG, pol, trace, closed_loop=False,
+                                n_logical=N_LOGICAL, params=p)
+            s = summarize(lat, {"is_write": np.asarray(trace["is_write"])},
+                          st, cell=p, cfg=CFG)
+            runs[pol] = (lat, st, s)
+        lat_b, st_b, s_b = runs["baseline"]
+        lat_w, st_w, s_w = runs["base_wl"]
+        _assert_legacy_identical(lat_b, st_b, lat_w, st_w,
+                                 "base_wl vs baseline")
+        assert float(s_w["cycle_skew"]) < float(s_b["cycle_skew"])
+
+    def test_wear_min_requires_endurance(self):
+        from repro.core.ssd.policies import build_step
+        params = default_params(CFG, "baseline")   # endurance=None
+        with pytest.raises(ValueError, match="requires endurance"):
+            build_step(CFG, "base_wl", closed_loop=True, params=params)
+        assert requires_endurance(get_spec("base_wl"))
+        assert requires_endurance(get_spec("ips_raro"))
+        assert not requires_endurance(get_spec("ips"))
+
+
+class TestSpecValidation:
+    """Satellite: PolicySpec validation errors for the endurance axes."""
+
+    @pytest.mark.parametrize("spec", [
+        # gated reprogram is exhaustion-triggered by construction
+        PolicySpec("static", "watermark", "reprogram_gated", "none"),
+        PolicySpec("static", "idle_gap", "reprogram_gated", "none"),
+        # greedy describes migrate-gap consumption only
+        PolicySpec("static", "exhaustion", "reprogram_gated", "greedy"),
+        # dual reclaims by UNgated reprogramming; adaptive rides migrate
+        PolicySpec("dual", "exhaustion", "reprogram_gated", "none"),
+        PolicySpec("adaptive", "exhaustion", "reprogram_gated", "none"),
+        # axis typos still rejected
+        PolicySpec("wear_max", "watermark", "migrate", "greedy"),
+        PolicySpec("static", "exhaustion", "gated", "none"),
+    ])
+    def test_invalid_compositions_rejected(self, spec):
+        with pytest.raises(ValueError):
+            validate_spec(spec)
+
+    @pytest.mark.parametrize("spec", [
+        PolicySpec("static", "exhaustion", "reprogram_gated", "none"),
+        PolicySpec("static", "exhaustion", "reprogram_gated", "agc"),
+        PolicySpec("wear_min", "watermark", "migrate", "greedy"),
+        PolicySpec("wear_min", "exhaustion", "reprogram", "none"),
+    ])
+    def test_valid_endurance_compositions(self, spec):
+        validate_spec(spec)
+
+    def test_state_fields_cover_wear(self):
+        for name in ("ips_raro", "base_wl"):
+            used = state_fields_used(get_spec(name))
+            assert "wear" in used
+            assert used <= set(SimState._fields)
+
+    def test_registry_entries(self):
+        assert get_entry("ips_raro").baseline == "ips"
+        assert get_entry("base_wl").baseline == "baseline"
+        assert {"ips_raro", "base_wl"} <= set(policy_names())
+
+
+class TestCellParamsStacker:
+    """Satellite: CellParams (incl. EnduranceParams) round-trips through
+    the fleet stacker."""
+
+    @pytest.mark.parametrize("endurance", [
+        None, EnduranceSpec(), EnduranceSpec(w_rp=7.0, rp_budget=3.0)])
+    def test_round_trip(self, endurance):
+        cells = [default_params(CFG, p, w, endurance=endurance)
+                 for p, w in (("baseline", 0.0), ("ips", 0.1),
+                              ("ips_agc", 0.2))]
+        stacked = fleet.stack_params(cells)
+        for i, cell in enumerate(cells):
+            back = jax.tree.map(lambda x: x[i], stacked)
+            flat_a, tree_a = jax.tree.flatten(cell)
+            flat_b, tree_b = jax.tree.flatten(back)
+            assert tree_a == tree_b
+            for a, b in zip(flat_a, flat_b):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_default_cell_attaches_required_endurance(self):
+        p = default_params(CFG, "ips_raro")
+        assert p.endurance is not None
+        # defaults mirror EnduranceSpec()
+        ref = as_params(EnduranceSpec())
+        for a, b in zip(p.endurance, ref):
+            assert float(a) == float(b)
+        assert default_params(CFG, "ips").endurance is None
+
+
+class TestFleetEnduranceEquivalence:
+    def test_fleet_matches_single_cell_with_wear(self):
+        e = EnduranceSpec(w_rp=4.0, w_erase=1.0, rp_budget=2.0)
+        names = ("hm_0", "hm_1")
+        traces = [_hm0("daily", 8192),
+                  truncate_trace(
+                      make_trace("hm_1", N_LOGICAL, mode="daily",
+                                 capacity_pages=CFG.total_pages), 8192)]
+        params = [default_params(CFG, "ips_raro", endurance=e)] * 2
+        lat_f, st_f = fleet.run_fleet(
+            CFG, "ips_raro", fleet.stack_ops(traces),
+            fleet.stack_params(params), closed_loop=False,
+            n_logical=N_LOGICAL)
+        for i, tr in enumerate(traces):
+            lat_r, st_r = run_trace(CFG, "ips_raro", tr, closed_loop=False,
+                                    n_logical=N_LOGICAL, params=params[i])
+            assert np.array_equal(np.asarray(lat_r), np.asarray(lat_f[i]))
+            for f in WearState._fields:
+                assert np.array_equal(
+                    np.asarray(getattr(st_r.wear, f)),
+                    np.asarray(getattr(st_f.wear, f)[i])), \
+                    f"wear.{f} mismatch cell {names[i]}"
+
+    def test_summarize_fleet_carries_lifetime_metrics(self):
+        e = EnduranceSpec(w_erase=1.0)
+        traces = [_hm0("daily", 8192)] * 2
+        params = fleet.stack_params(
+            [default_params(CFG, "baseline", endurance=e)] * 2)
+        ops = fleet.stack_ops(traces)
+        lat, st = fleet.run_fleet(CFG, "baseline", ops, params,
+                                  closed_loop=False, n_logical=N_LOGICAL)
+        summ = fleet.summarize_fleet(lat, ops["is_write"], st,
+                                     params=params, cfg=CFG)
+        for key in ("tbw_proj_gb", "cycle_skew", "eff_cycles_max",
+                    "eol_op"):
+            assert np.asarray(summ[key]).shape == (2,)
+        # without params the legacy summary shape is preserved
+        legacy = fleet.summarize_fleet(lat, ops["is_write"], st)
+        assert "tbw_proj_gb" not in legacy
+
+
+class TestSweepAndReport:
+    def test_endurance_grid_runs_and_reports(self):
+        from repro.sweep.runner import run_sweep
+        pts = [p for p in endurance_grid() if p.trace == "hm_0"]
+        assert all(p.endurance is not None for p in pts)
+        res = run_sweep(CFG, pts, max_ops=2048)
+        assert set(res) == set(pts)
+        for v in res.values():
+            assert "tbw_proj_gb" in v and np.isfinite(v["tbw_proj_gb"])
+        summ = endurance_summary(res)
+        for (mode, policy), row in summ.items():
+            assert row["n"] == 1
+            assert row["cycle_skew"] >= 1.0
+        assert ("daily", "ips_raro") in summ
+
+    def test_point_key_carries_endurance_tag(self):
+        e = EnduranceSpec(w_rp=4.0, rp_budget=2.0, cycle_budget=15.0)
+        pt = SweepPoint("hm_0", "daily", "ips_raro", endurance=e,
+                        baseline="ips")
+        assert "endur=rp2:w4:b15" in pt.key
+        assert pt.baseline_point().endurance == e   # pairing keeps knobs
+        bare = SweepPoint("hm_0", "daily", "ips_raro", baseline="ips")
+        assert "endur" not in bare.key
+
+    def test_endurance_spec_parse(self):
+        e = EnduranceSpec.parse("w_rp=4,rp_budget=2,read_penalty_ms=0.05")
+        assert e.w_rp == 4.0 and e.rp_budget == 2.0
+        assert e.read_penalty_ms == 0.05
+        assert e.w_slc == 1.0                       # untouched default
+        assert EnduranceSpec.parse("") == EnduranceSpec()
+        with pytest.raises(ValueError, match="bad --endurance knob"):
+            EnduranceSpec.parse("nope=1")
+
+    def test_sensitivity_grid_single_axis_neighbors(self):
+        pts = named_grid("sensitivity")
+        policies = {p.policy for p in pts}
+        assert "ips" in policies
+        # every non-center policy differs from ips on exactly one axis
+        cspec = get_spec("ips")
+        axes = ("allocation", "trigger", "mechanism", "idle")
+        for pol in policies - {"ips"}:
+            spec = get_spec(pol)
+            assert sum(getattr(spec, a) != getattr(cspec, a)
+                       for a in axes) == 1, pol
+        assert {"ips_agc", "ips_lazy", "ips_raro"} <= policies
+        assert all(p.baseline == "ips" for p in pts)
+
+    def test_sensitivity_deltas_attribute_axes(self):
+        pts = named_grid("sensitivity")
+        res = {}
+        for p in pts:
+            val = 1.0 if p.policy == "ips" else 2.0
+            res[p] = {"mean_write_latency_ms": val, "wa_paper": val}
+        deltas = sensitivity_deltas(res)
+        assert deltas
+        for (axis, swap, policy, mode), v in deltas.items():
+            assert axis in ("allocation", "trigger", "mechanism", "idle")
+            assert "->" in swap
+            assert v["mean_write_latency_ms"] == pytest.approx(2.0)
+
+    def test_normalize_points_skips_missing_metric(self):
+        a = SweepPoint("t", "daily", "baseline")
+        b = SweepPoint("t", "daily", "ips")
+        res = {a: {"m": 2.0}, b: {"m": 1.0, "extra": 3.0}}
+        assert normalize_points(res, "extra") == {}      # baseline lacks it
+        assert normalize_points(res, "m") == {b: 0.5}
+
+
+class TestEvictionLock:
+    """Satellite: concurrent sweeps can't race the LRU eviction."""
+
+    def _fill(self, cache, n=6, kb=64):
+        rng = np.random.default_rng(0)
+        for i in range(n):
+            ops = {"arrival_ms": rng.random(kb * 128).astype(np.float32),
+                   "lba": np.arange(kb * 128, dtype=np.int32),
+                   "is_write": np.ones(kb * 128, np.int8),
+                   "req_id": np.arange(kb * 128, dtype=np.int32),
+                   "n_ops": kb * 128, "n_reqs": kb * 128}
+            cache.get_or_build({"i": i}, lambda o=ops: o)
+
+    def test_held_lock_skips_eviction(self, tmp_path):
+        import fcntl
+        from repro.workloads.cache import TraceCache
+        cache = TraceCache(root=str(tmp_path), max_mb=0.05)
+        self._fill(cache)
+        n_before = len(list(tmp_path.glob("trace_*.npz")))
+        assert cache.evictions > 0       # cap enforced when uncontended
+        evicted_so_far = cache.evictions
+        # a concurrent evictor holds the lock: this process must skip
+        fd = (tmp_path / ".evict.lock").open("w")
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        try:
+            cache._evict()
+            assert cache.evictions == evicted_so_far
+            assert len(list(tmp_path.glob("trace_*.npz"))) == n_before
+        finally:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+            fd.close()
+        # lock released: eviction proceeds again
+        cache._evict()
+        assert len(list(tmp_path.glob("trace_*.npz"))) <= n_before
+
+    def test_touched_entry_survives_eviction_pass(self, tmp_path,
+                                                  monkeypatch):
+        """The freshness re-check: an entry whose mtime moves between the
+        LRU scan and the unlink (a concurrent reader's hit) survives the
+        pass. Simulated by serving the evictor a STALE scan snapshot —
+        every on-disk entry then looks freshly touched and none may be
+        deleted, despite the store being far over budget."""
+        import os as _os
+        from repro.workloads import cache as cache_mod
+        cache = cache_mod.TraceCache(root=str(tmp_path), max_mb=10.0)
+        self._fill(cache, n=3)
+        files = sorted(tmp_path.glob("trace_*.npz"))
+        assert len(files) == 3
+        real_scandir = _os.scandir
+
+        class StaleEntry:
+            def __init__(self, de):
+                self.name, self.path = de.name, de.path
+                self._st = de.stat()
+
+            def stat(self):
+                class St:
+                    st_mtime = self._st.st_mtime
+                    st_mtime_ns = self._st.st_mtime_ns - 1   # pre-touch
+                    st_size = self._st.st_size
+                return St()
+
+        class StaleScan:
+            def __init__(self, path):
+                self._it = real_scandir(path)
+
+            def __enter__(self):
+                return (StaleEntry(de) for de in self._it.__enter__())
+
+            def __exit__(self, *exc):
+                return self._it.__exit__(*exc)
+
+        monkeypatch.setattr(cache_mod.os, "scandir", StaleScan)
+        cache.max_mb = 0.0001            # now far over budget
+        cache._evict()
+        assert cache.evictions == 0
+        assert sorted(tmp_path.glob("trace_*.npz")) == files

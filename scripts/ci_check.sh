@@ -38,4 +38,21 @@ echo "== zero-wear bit-identity vs the golden monolith =="
 python -m pytest -q tests/test_endurance.py -k "ZeroWearIdentity"
 
 echo
+echo "== smoke: search engine (tiny budget, 2 rounds, DESIGN.md §10) =="
+search_tmp=$(mktemp -d)
+python -m repro.sweep.cli --search smoke --max-ops 2048 \
+  --out-dir "$search_tmp"
+python - "$search_tmp" <<'EOF'
+import json, os, sys
+doc = json.load(open(os.path.join(sys.argv[1], "BENCH_search.json")))
+assert doc["front"], "BENCH_search: empty Pareto front"
+assert len(doc["rounds"]) == 2, "BENCH_search: expected 2 rounds"
+for r in doc["rounds"]:
+    assert {"survivors", "compiles", "cells", "wall_s"} <= set(r), r
+print(f"search artifact OK: {len(doc['front'])} front point(s), "
+      f"round compiles {[r['compiles'] for r in doc['rounds']]}")
+EOF
+rm -rf "$search_tmp"
+
+echo
 echo "ci_check: OK"

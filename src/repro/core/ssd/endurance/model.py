@@ -51,6 +51,7 @@ class EnduranceParams(NamedTuple):
     cycle_budget: jnp.ndarray
     rp_budget: jnp.ndarray
     read_penalty_ms: jnp.ndarray
+    rp_hysteresis: jnp.ndarray
 
 
 class WearState(NamedTuple):
@@ -81,6 +82,7 @@ def as_params(spec: EnduranceSpec) -> EnduranceParams:
         cycle_budget=jnp.float32(spec.cycle_budget),
         rp_budget=jnp.float32(spec.rp_budget),
         read_penalty_ms=jnp.float32(spec.read_penalty_ms),
+        rp_hysteresis=jnp.float32(spec.rp_hysteresis),
     )
 
 

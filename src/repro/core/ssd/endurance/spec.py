@@ -24,6 +24,15 @@ Semantics of the knobs (how they map to the paper / RARO, DESIGN.md §9):
       margin is gone (RARO's conversion gate): the `reprogram_gated`
       mechanism stops converting in place and falls back to migration
       once a plane's average per-page reprogram count crosses this.
+  rp_hysteresis — width of the gate's early-warning band below
+      `rp_budget`: once a plane's reprogram count enters
+      [rp_budget - rp_hysteresis, rp_budget), the idle-gap migrate
+      fallback already starts draining the region while in-place
+      conversion is still allowed, so the write path does not flip
+      abruptly from reprogram to TLC-direct against a full, undrained
+      region at the budget boundary (gate thrash). 0 (the default)
+      keeps the PR 4 single-threshold gate bit-identically: fallback
+      and conversion switch at the same instant.
   read_penalty_ms — retention-derived read-cost penalty at end-of-life:
       reads on a plane pay `read_penalty_ms * min(cycles/budget, 1)`
       extra (read-retry as blocks age). Zero keeps reads untouched.
@@ -45,6 +54,7 @@ class EnduranceSpec:
     cycle_budget: float = 30000.0
     rp_budget: float = 1e9
     read_penalty_ms: float = 0.0
+    rp_hysteresis: float = 0.0
 
     @classmethod
     def zero(cls) -> "EnduranceSpec":
@@ -83,4 +93,6 @@ class EnduranceSpec:
                  f"b{self.cycle_budget:g}"]
         if self.read_penalty_ms:
             parts.append(f"p{self.read_penalty_ms:g}")
+        if self.rp_hysteresis:
+            parts.append(f"h{self.rp_hysteresis:g}")
         return ":".join(parts)

@@ -42,7 +42,8 @@ from repro.core.ssd.sim import (CellParams, SimState, flush_cache,
                                 init_state, make_step, summarize)
 
 __all__ = ["stack_params", "stack_ops", "shard_cells", "init_fleet_state",
-           "run_fleet", "flush_fleet", "summarize_fleet"]
+           "run_fleet", "flush_fleet", "summarize_fleet", "compile_count",
+           "cell_quantum"]
 
 
 def stack_params(params: Sequence[CellParams]) -> CellParams:
@@ -110,6 +111,29 @@ def _run_fleet(cfg: SSDConfig, spec, state0: SimState, ops: dict,
 
     latency, final = jax.vmap(one)(state0, ops, params)
     return latency, final
+
+
+def cell_quantum(cell_bucket: int | None = None) -> int:
+    """Cell-axis padding quantum: the device count (so `shard_cells` can
+    lay the axis across the mesh), lcm'd with `cell_bucket` when given so
+    padded cell counts — and hence compiled (C, T) shapes — stay stable
+    across runs whose cell counts drift within a bucket (the search
+    engine's compile-free knob-refinement contract). Callers pad to a
+    multiple of this, replaying the last real cell, and drop the pad from
+    results (sweep.runner / search.scenario)."""
+    import math
+    n_dev = len(jax.devices())
+    return math.lcm(cell_bucket, n_dev) if cell_bucket else n_dev
+
+
+def compile_count() -> int:
+    """Fleet-scan compilations so far in this process: the size of the
+    `_run_fleet` jit cache, which is keyed on (cfg, composition, mode) and
+    the stacked (C, T) array shapes. Traced-knob variation (CellParams
+    values, endurance weights/budgets) never grows it. The search engine
+    (repro.search) records per-round deltas of this in BENCH_search.json
+    and asserts knob-only rounds add zero."""
+    return _run_fleet._cache_size()
 
 
 def run_fleet(cfg: SSDConfig, policy, ops: dict, params: CellParams,

@@ -70,7 +70,7 @@ class StepCtx:
         # the local plane's wear, mutated by fragments like plane state;
         # gate_ok is the reliability gate of the gated reprogram mechanism
         "track_wear", "n_buckets", "pe_slc_p", "pe_rp_p", "pe_tlc_p",
-        "erase_p", "pe_trad_p", "erase_trad_p", "gate_ok",
+        "erase_p", "pe_trad_p", "erase_trad_p", "gate_ok", "fallback_on",
     )
 
 
@@ -175,10 +175,18 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
             ctx.erase_trad_p = wear.erase_trad[plane]
             if gated:
                 # RARO-style reliability gate: per-page average reprogram
-                # count of the plane's region vs the traced budget
+                # count of the plane's region vs the traced budget. The
+                # hysteresis band [rp_budget - rp_hysteresis, rp_budget)
+                # pre-arms the migrate fallback while conversion is still
+                # allowed, so the region is already draining when the gate
+                # finally closes (no hard flip at the boundary); with
+                # rp_hysteresis == 0 the fallback condition is exactly
+                # ~gate_ok — the PR 4 single-threshold gate, bit-identical.
                 cap_f = jnp.maximum(cap_basic.astype(jnp.float32), 1.0)
-                ctx.gate_ok = (jnp.sum(ctx.pe_rp_p) / cap_f
-                               < endur.rp_budget)
+                rp_count = jnp.sum(ctx.pe_rp_p) / cap_f
+                ctx.gate_ok = rp_count < endur.rp_budget
+                ctx.fallback_on = (rp_count
+                                   >= endur.rp_budget - endur.rp_hysteresis)
 
         # ------------------------------------------------------------
         # 1. idle work on this plane, lazily applied for [busy_p, t)

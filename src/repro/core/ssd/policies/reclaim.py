@@ -117,13 +117,15 @@ def dual_reclaim(ctx) -> None:
 
 def gated_fallback_reclaim(ctx) -> None:
     """Reliability-gated reprogram (DESIGN.md §9): once the plane's
-    reprogram budget is exhausted (`~ctx.gate_ok`) the region stops
-    densifying in place and is reclaimed like a traditional cache —
-    valid pages migrate to TLC and the clean region is erased, consuming
-    device-idle budget only (never stalling a write). The plane then
-    keeps caching in SLC mode with idle-gap migrate reclamation; the
-    reprogram gate stays tripped for the block's lifetime."""
-    budget = jnp.where(ctx.gate_ok, 0.0, ctx.dev_budget)
+    reprogram count enters the gate's hysteresis band (`ctx.fallback_on`,
+    == budget exhaustion `~ctx.gate_ok` when `rp_hysteresis` is 0) the
+    region is additionally reclaimed like a traditional cache — valid
+    pages migrate to TLC and the clean region is erased, consuming
+    device-idle budget only (never stalling a write). Past the budget
+    itself, in-place conversion stops and the plane keeps caching in SLC
+    mode with idle-gap migrate reclamation; the reprogram gate stays
+    tripped for the block's lifetime."""
+    budget = jnp.where(ctx.fallback_on, ctx.dev_budget, 0.0)
     mig = jnp.minimum(ctx.valid_mig, (budget / ctx.c_mig).astype(jnp.int32))
     ctx.valid_mig = ctx.valid_mig - mig
     budget = budget - mig.astype(jnp.float32) * ctx.c_mig

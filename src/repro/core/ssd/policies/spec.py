@@ -52,7 +52,7 @@ from typing import Optional
 
 __all__ = ["PolicySpec", "ALLOCATION_AXIS", "TRIGGER_AXIS",
            "MECHANISM_AXIS", "IDLE_AXIS", "validate_spec",
-           "tracked_region", "requires_endurance"]
+           "tracked_region", "requires_endurance", "iter_valid_specs"]
 
 ALLOCATION_AXIS = ("static", "dual", "adaptive", "wear_min")
 TRIGGER_AXIS = ("watermark", "idle_gap", "exhaustion")
@@ -132,6 +132,24 @@ def validate_spec(spec: PolicySpec) -> None:
             f"{spec.composition}: adaptive sizing piggybacks on watermark "
             "state and migrate reclamation; reprogram-based adaptive "
             "sizing is not modeled")
+
+
+def iter_valid_specs() -> tuple:
+    """Every composition that passes `validate_spec`, in axis order — the
+    full physically-consistent policy space (the search engine's candidate
+    universe, DESIGN.md §10). Pure enumeration: 4*3*3*3 = 108 raw points,
+    of which the constraints admit a small frontier."""
+    import itertools
+    out = []
+    for axes in itertools.product(ALLOCATION_AXIS, TRIGGER_AXIS,
+                                  MECHANISM_AXIS, IDLE_AXIS):
+        spec = PolicySpec(*axes)
+        try:
+            validate_spec(spec)
+        except ValueError:
+            continue
+        out.append(spec)
+    return tuple(out)
 
 
 def tracked_region(spec: PolicySpec) -> Optional[str]:

@@ -1,0 +1,40 @@
+"""Search engine: batched policy & scenario autotuning (DESIGN.md §10).
+
+The first subsystem that *drives* the other four engines rather than
+adding a fifth axis: candidates come from the policy engine's composition
+space (registered + valid-but-unregistered specs) crossed with the traced
+knob ranges of the fleet/endurance engines, workloads come from the
+workload engine's synthesizer, and every evaluation is a batched fleet
+sweep.
+
+  space    — `Candidate` (policy x traced knobs), named candidate spaces,
+             auto-registration of the valid composition frontier.
+  tune     — successive-halving driver to a Pareto front over
+             (write-latency, WAF, projected TBW), each vs the candidate's
+             declared baseline; per-round survivor/compile accounting.
+  scenario — adversarial `TraceStats` search maximizing the ranking
+             separation of a policy pair vs the MSR consensus.
+
+Entry point: `python -m repro.sweep.cli --search quick` (writes
+`BENCH_search.json`). Like `repro.sweep`, importing this package is
+jax-free so the CLI can pin XLA_FLAGS first.
+"""
+from repro.search.space import (SPACES, Candidate, auto_name, build_space,
+                                group_candidates, group_key,
+                                register_space)
+from repro.search.tune import (SCHEDULES, TuneResult,
+                               default_score_endurance,
+                               evaluate_candidates, pareto_front, prune,
+                               successive_halving)
+from repro.search.scenario import (DEFAULT_SCEN_OPS, evaluate_stats,
+                                   msr_reference, perturb_stats,
+                                   separation_search)
+
+__all__ = [
+    "Candidate", "SPACES", "auto_name", "build_space", "group_key",
+    "group_candidates", "register_space",
+    "SCHEDULES", "TuneResult", "default_score_endurance",
+    "evaluate_candidates", "prune", "pareto_front", "successive_halving",
+    "DEFAULT_SCEN_OPS", "evaluate_stats", "msr_reference", "perturb_stats",
+    "separation_search",
+]

@@ -20,6 +20,12 @@ Examples (run with PYTHONPATH=src):
       --endurance w_rp=4,rp_budget=2   # endurance knobs on a custom grid
   python -m repro.sweep.cli --list-policies   # registry: name/composition
   python -m repro.sweep.cli --list-grids      # named grids + cell counts
+  python -m repro.sweep.cli --search quick    # policy+scenario autotuning
+      # (repro.search, DESIGN.md §10): successive-halving over the
+      # composition x knob space to a Pareto front (latency/WAF/TBW vs
+      # declared baselines) + adversarial scenario search; writes
+      # BENCH_search.json with per-round survivor/compile counts
+  python -m repro.sweep.cli --search smoke --search-scenario ips:coop
 
 Policies resolve through the mechanism-composition registry
 (`repro.core.ssd.policies`): any registered name — the four paper schemes
@@ -81,6 +87,16 @@ def _parse(argv):
                     "fields, e.g. w_rp=4,rp_budget=2,cycle_budget=60,"
                     "read_penalty_ms=0.05 (bare flag: defaults). "
                     "Overrides a named grid's pinned knobs")
+    ap.add_argument("--search", choices=("smoke", "quick", "full"),
+                    default=None, metavar="BUDGET",
+                    help="run the search engine (repro.search) instead of "
+                    "a sweep: successive-halving policy autotuning to a "
+                    "Pareto front + adversarial scenario search at the "
+                    "named budget (smoke|quick|full); writes "
+                    "BENCH_search.json")
+    ap.add_argument("--search-scenario", default="ips:baseline",
+                    metavar="A:B", help="policy pair for the scenario "
+                    "search (default ips:baseline); 'none' skips it")
     ap.add_argument("--list-policies", action="store_true",
                     help="print the policy registry (name, composition, "
                     "baseline, doc) and exit")
@@ -155,6 +171,28 @@ def main(argv=None) -> int:
     cfg = PAPER_SSD.scaled(args.scale)
     seeds = tuple(int(s) for s in args.seeds.split(","))
 
+    if args.search:
+        conflicts = [flag for flag, used in (
+            ("--grid", args.grid), ("--traces", args.traces),
+            ("--trace-file", args.trace_file),
+            ("--policies", args.policies),
+            ("--endurance", args.endurance is not None),
+            ("--modes", args.modes != "bursty,daily"),
+            ("--cache-fracs", args.cache_fracs != "1.0"),
+            ("--bench", args.bench),
+            ("--seeds (search scores one seed)", len(seeds) > 1),
+        ) if used]
+        if conflicts:
+            print("error: --search runs its own candidate space and "
+                  "round schedule (repro.search.SPACES/SCHEDULES); drop "
+                  + ", ".join(conflicts), file=sys.stderr)
+            return 2
+        return _run_search(args, cfg, seeds[0])
+    if args.search_scenario != "ips:baseline":
+        print("error: --search-scenario only applies to --search runs",
+              file=sys.stderr)
+        return 2
+
     def check_policies(policies) -> bool:
         unknown = sorted(set(policies) - set(policy_names()))
         if unknown:
@@ -183,13 +221,15 @@ def main(argv=None) -> int:
                 sum(((p, baseline_of(p)) for p in req), ())))
             coords = list(dict.fromkeys(
                 (pt.trace, pt.mode, pt.seed, pt.repeat, pt.cache_frac,
-                 pt.idle_threshold_ms, pt.endurance) for pt in points))
+                 pt.idle_threshold_ms, pt.cap_boost_frac, pt.endurance)
+                for pt in points))
             from repro.sweep.grid import SweepPoint
             points = [SweepPoint(trace=t, mode=m, policy=p, seed=s,
                                  repeat=r, cache_frac=c,
-                                 idle_threshold_ms=i, endurance=e,
-                                 baseline=baseline_of(p))
-                      for (t, m, s, r, c, i, e) in coords for p in wanted]
+                                 idle_threshold_ms=i, cap_boost_frac=b,
+                                 endurance=e, baseline=baseline_of(p))
+                      for (t, m, s, r, c, i, b, e) in coords
+                      for p in wanted]
     else:
         traces = tuple((args.traces.split(",") if args.traces else
                         (workloads.TRACE_NAMES if not args.trace_file
@@ -223,6 +263,20 @@ def main(argv=None) -> int:
                   "axis only varies synthetic/scenario cells",
                   file=sys.stderr)
         if not check_policies(policies):
+            return 2
+        # fail fast on a normalization hole: outside --grid replay there is
+        # no auto-add, so a policy whose declared baseline is excluded
+        # would silently produce no normalized rows/geomeans
+        orphans = {p: baseline_of(p) for p in policies
+                   if baseline_of(p) not in policies}
+        if orphans:
+            for pol, base in sorted(orphans.items()):
+                print(f"error: policy {pol!r} normalizes against {base!r}, "
+                      "which is not in --policies — its cells would have "
+                      "nothing to normalize to; add the baseline, e.g. "
+                      f"--policies {','.join(dict.fromkeys((*policies, base)))} "
+                      "(baselines are auto-added only in --grid replay)",
+                      file=sys.stderr)
             return 2
         unknown_modes = sorted(set(modes) - {"bursty", "daily"})
         if unknown_modes:
@@ -297,6 +351,79 @@ def main(argv=None) -> int:
                                     if k != "results"}
     if not args.no_save:
         name = args.name or f"sweep_{args.grid or 'custom'}"
+        path = save_bench(name, payload, directory=args.out_dir, cfg=cfg)
+        print(f"\nwrote {path}")
+    return 0
+
+
+def _run_search(args, cfg, seed: int) -> int:
+    """`--search BUDGET`: policy autotuning + scenario search
+    (repro.search, DESIGN.md §10) -> BENCH_search.json."""
+    from repro import workloads
+    from repro.core.ssd import fleet
+    from repro.core.ssd.policies import policy_names
+    from repro.search import (SCHEDULES, build_space, group_candidates,
+                              separation_search, successive_halving)
+    from repro.sweep.report import search_front_table, search_rounds_table
+    from repro.sweep.store import save_bench
+
+    budget = args.search
+    sched = SCHEDULES[budget]
+    scen_pair = None
+    if args.search_scenario.lower() != "none":
+        scen_pair = tuple(args.search_scenario.split(":"))
+        unknown = sorted(set(scen_pair) - set(policy_names()))
+        if len(scen_pair) != 2 or unknown:
+            print(f"error: --search-scenario wants A:B over registered "
+                  f"policies, got {args.search_scenario!r}"
+                  + (f" (unknown: {','.join(unknown)})" if unknown else ""),
+                  file=sys.stderr)
+            return 2
+    rounds = [dict(r) for r in sched["rounds"]]
+    if args.max_ops:                 # CI tightening: cap every round
+        for r in rounds:
+            r["max_ops"] = (args.max_ops if r["max_ops"] is None
+                            else min(r["max_ops"], args.max_ops))
+    space = build_space(budget)
+    print(f"search[{budget}]: {len(space)} candidate(s) in "
+          f"{len(group_candidates(space))} composition group(s), "
+          f"{len(rounds)} round(s) on a 1/{args.scale} drive")
+    cache = workloads.TraceCache(use_disk=not args.no_trace_cache_disk)
+    tune = successive_halving(
+        cfg, space, rounds, seed=seed, keep_frac=sched["keep_frac"],
+        min_keep=sched["min_keep"], cell_bucket=sched["cell_bucket"],
+        trace_cache=cache, progress=lambda s: print(f"  {s}"))
+    doc = tune.to_json()
+    print("\n=== search rounds (survivors / compiles per round) ===")
+    print(search_rounds_table(tune.rounds))
+    print("\n=== Pareto front: lat/waf/tbw vs declared baselines ===")
+    print(search_front_table(doc["front"]))
+
+    scen = None
+    if scen_pair is not None:
+        pair = scen_pair
+        sc = sched["scenario"]
+        max_ops = (min(sc["max_ops"], args.max_ops) if args.max_ops
+                   else sc["max_ops"])
+        print(f"\nscenario search: separate {pair[0]} vs {pair[1]} "
+              f"({sc['iters']} iter(s) x {sc['pop']})")
+        scen = separation_search(
+            cfg, pair[0], pair[1], seed=seed, iters=sc["iters"],
+            pop=sc["pop"], max_ops=max_ops,
+            progress=lambda s: print(f"  {s}"))
+        print(f"  msr geomean {scen['msr_geomean']:.3f} -> found "
+              f"{scen['best_ratio']:.3f}: ranking "
+              f"{'FLIPS' if scen['flipped'] else 'does not flip'}")
+
+    payload = {"search": budget, "n_candidates": len(space),
+               "space": [c.to_json() for c in space],
+               "trace_cache": cache.stats(),
+               "fleet_compiles": fleet.compile_count(),
+               **doc}
+    if scen is not None:
+        payload["scenario_search"] = scen
+    if not args.no_save:
+        name = args.name or "search"
         path = save_bench(name, payload, directory=args.out_dir, cfg=cfg)
         print(f"\nwrote {path}")
     return 0

@@ -8,8 +8,8 @@ override and optional endurance-model knobs (`EnduranceSpec`, DESIGN.md
 grid divides this cell by in reports; "baseline" unless the grid says
 otherwise, e.g. the `beyond` grid normalizes `ips_lazy` against `coop`).
 Points whose knobs only differ in *traced* quantities (seed, cache_frac,
-idle threshold, waste_p, endurance weights/budgets) share one compiled
-scan; the policy's mechanism composition, mode, padded trace length and
+idle threshold, waste_p, cap_boost_frac, endurance weights/budgets) share
+one compiled scan; the policy's mechanism composition, mode, padded trace length and
 endurance *presence* (it changes the carry pytree) split compilation
 groups (DESIGN.md §4/§8/§9).
 """
@@ -43,6 +43,9 @@ class SweepPoint:
     cache_frac: float = 1.0        # scales SLC regions (Fig. 12b)
     idle_threshold_ms: Optional[float] = None
     waste_p: Optional[float] = None  # None -> per-trace calibration
+    cap_boost_frac: Optional[float] = None  # scales the adaptive
+    #                                allocation's cap_boost (traced knob;
+    #                                None keeps the composition default)
     # endurance-model knobs (DESIGN.md §9); None disables wear tracking
     # unless the policy's composition requires it (the runner then
     # attaches default knobs)
@@ -68,6 +71,8 @@ class SweepPoint:
             quals.append(f"cache={self.cache_frac:g}")
         if self.idle_threshold_ms is not None:
             quals.append(f"idle={self.idle_threshold_ms:g}")
+        if self.cap_boost_frac is not None:
+            quals.append(f"boost={self.cap_boost_frac:g}")
         if self.endurance is not None:
             quals.append(f"endur={self.endurance.tag}")
         base = f"{self.trace}/{self.mode}/{self.policy}"

@@ -18,7 +18,8 @@ import numpy as np
 
 __all__ = ["geomean", "normalize_to_baseline", "normalize_points",
            "policy_geomeans", "bootstrap_ci", "policy_geomeans_ci",
-           "endurance_summary", "sensitivity_deltas"]
+           "endurance_summary", "sensitivity_deltas",
+           "search_rounds_table", "search_front_table"]
 
 
 def geomean(values) -> float:
@@ -163,6 +164,33 @@ def sensitivity_deltas(results: Mapping, center: str = "ips",
     return {k: {m: geomean(v) for m, v in d.items()}
             | {"n": max(len(v) for v in d.values())}
             for k, d in agg.items()}
+
+
+def search_rounds_table(rounds) -> str:
+    """Successive-halving round summary (BENCH_search.json `rounds`):
+    survivor counts, batched-cell/group sizes, compile counts and
+    wall-clocks per round — the cost ledger of the search."""
+    lines = [f"{'round':>5} {'cands':>6}{'keep':>6}{'cells':>7}"
+             f"{'groups':>7}{'compiles':>9}{'wall_s':>8}  best"]
+    for r in rounds:
+        lines.append(
+            f"{r['round']:>5} {r['candidates']:>6}{r['survivors']:>6}"
+            f"{r['cells']:>7}{r['groups']:>7}{r['compiles']:>9}"
+            f"{r['wall_s']:>8.1f}  {r['best']} ({r['best_lat']:.3f})")
+    return "\n".join(lines)
+
+
+def search_front_table(front) -> str:
+    """Pareto-front table (BENCH_search.json `front`): each candidate's
+    objectives as ratios vs its *declared* baseline (lat/waf lower is
+    better, tbw higher)."""
+    lines = [f"{'candidate':<34}{'lat':>8}{'waf':>8}{'tbw':>8}{'n':>4}"]
+    for f in front:
+        tbw = f.get("tbw")
+        lines.append(f"{f['label']:<34}{f['lat']:>8.3f}{f['waf']:>8.3f}"
+                     f"{(f'{tbw:.3f}' if tbw is not None else 'n/a'):>8}"
+                     f"{f['n']:>4}")
+    return "\n".join(lines)
 
 
 def bootstrap_ci(values, *, n_boot: int = 1000, alpha: float = 0.05,

@@ -68,8 +68,8 @@ def _endurance_of(point: SweepPoint):
 
 def _cell_params(cfg: SSDConfig, point: SweepPoint, waste_p: float):
     """Per-point CellParams: calibrated waste_p unless pinned, cache_frac
-    scaling, idle override, endurance knobs — all traced, never a
-    recompile."""
+    scaling, idle override, cap_boost scaling, endurance knobs — all
+    traced, never a recompile."""
     import jax.numpy as jnp
     p = default_params(cfg, point.policy, waste_p,
                        endurance=_endurance_of(point))
@@ -81,6 +81,10 @@ def _cell_params(cfg: SSDConfig, point: SweepPoint, waste_p: float):
             cap_boost=jnp.int32(int(int(p.cap_boost) * point.cache_frac)))
     if point.idle_threshold_ms is not None:
         p = p._replace(idle_thr=jnp.float32(point.idle_threshold_ms))
+    if point.cap_boost_frac is not None:
+        p = p._replace(
+            cap_boost=jnp.int32(int(int(p.cap_boost)
+                                    * point.cap_boost_frac)))
     return p
 
 
@@ -89,7 +93,8 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
               progress=None,
               trace_cache: Optional[workloads.TraceCache] = None,
               timings: Optional[List[Dict]] = None,
-              max_pending: Optional[int] = None
+              max_pending: Optional[int] = None,
+              cell_bucket: Optional[int] = None
               ) -> Dict[SweepPoint, Dict[str, float]]:
     """Run every sweep point batched; returns {point: metrics}.
 
@@ -102,7 +107,14 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
     groups' dispatched buffers stay live before the runner drains the
     oldest (None — the default — dispatches every group before blocking;
     set it on memory-constrained hosts with very large grids, where
-    group-count x (C, T) op tensors would multiply peak host RAM)."""
+    group-count x (C, T) op tensors would multiply peak host RAM).
+    `cell_bucket` quantizes each group's padded cell count to a multiple
+    of the bucket (on top of the device-count multiple): the compiled
+    fleet is keyed on the stacked (C, T) shapes, so repeated sweeps whose
+    groups land in the same bucket reuse one compilation even when the
+    exact cell count drifts — the search engine (repro.search) relies on
+    this for compile-free knob-refinement rounds. Padded cells replay the
+    last real cell and are dropped from results either way."""
     import jax
 
     n_logical = _n_logical(cfg)
@@ -182,10 +194,11 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
         traces = [cell_trace(p) for p in pts]
         params = [_cell_params(cfg, p, cell_waste(p)) for p in pts]
         # pad the cell axis to a device-count multiple so shard_cells can
-        # lay it across the mesh; padded cells replay the last cell and are
-        # dropped below.
+        # lay it across the mesh — quantized further to `cell_bucket` for
+        # shape-stable recompile-free rounds; padded cells replay the last
+        # cell and are dropped below.
         n_cells = len(pts)
-        pad = (-n_cells) % n_dev
+        pad = (-n_cells) % fleet.cell_quantum(cell_bucket)
         traces += [traces[-1]] * pad
         params += [params[-1]] * pad
 

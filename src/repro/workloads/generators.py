@@ -23,6 +23,17 @@ Scenarios (all seeded, all deterministic):
   * tenant_mix   — multi-tenant interleave (`mix_traces`) of a hot
                    overwriter, a reader and a sequential streamer, each in
                    its own partition of the logical window.
+  * adv_ips_base — adversarial scenario found by the search engine
+                   (`repro.search.scenario.separation_search(ips,
+                   baseline)`, DESIGN.md §10): a write-saturated,
+                   idle-starved overwrite regime that flips the paper's
+                   headline daily ranking. Across the MSR suite the
+                   daily geomean lat ips/baseline is ~1.0-1.3 (ips pays
+                   reprogram latency, baseline reclaims in idle); here
+                   baseline's watermark reclamation has no idle to run
+                   in, conflicts with the write stream and collapses to
+                   the TLC-direct cliff, while IPS keeps converting in
+                   place — lat ips/baseline ~0.15.
 """
 from __future__ import annotations
 
@@ -32,10 +43,11 @@ from typing import Callable, Dict, Optional, Sequence
 import numpy as np
 
 from repro.workloads import ir
+from repro.workloads.synth import TraceStats
 
 __all__ = ["zipf_overwrite", "diurnal", "read_burst", "gc_pressure",
-           "tenant_mix", "mix_traces", "SCENARIOS", "SCENARIO_NAMES",
-           "VERSION"]
+           "tenant_mix", "adv_ips_base", "ADV_IPS_BASE_STATS",
+           "mix_traces", "SCENARIOS", "SCENARIO_NAMES", "VERSION"]
 
 # bump whenever any generator's sampling or default parameters change:
 # it is part of the content-addressed trace-cache recipe, so stale disk
@@ -211,6 +223,33 @@ def tenant_mix(total_logical_pages: int,
     return mix_traces([hot, reader, streamer], total_logical_pages)
 
 
+def adv_ips_base(total_logical_pages: int,
+                 capacity_pages: Optional[int] = None,
+                 seed: int = 0) -> ir.Trace:
+    """Search-found ips-beats-baseline regime (module docstring): the
+    baked result of `repro.search.scenario.separation_search("ips",
+    "baseline", seed=0)` against the MSR daily consensus, committed so
+    the ranking flip is a reproducible sweep/search cell rather than a
+    one-off finding."""
+    from repro.workloads.synth import synthesize_stats
+    req = synthesize_stats(ADV_IPS_BASE_STATS, total_logical_pages, seed,
+                           capacity_pages, label="adv_ips_base")
+    return ir.trace_from_requests(req, "daily", total_logical_pages,
+                                  f"gen:adv_ips_base/seed={seed}")
+
+
+# `separation_search("ips", "baseline", seed=0, iters=6, pop=10,
+# max_ops=PAD_OPS, label="adv_ips_base")` best stats: lat ips/baseline
+# 0.15 on the committed realization vs ~1.04 MSR daily geomean —
+# 99%-write stream at ~0.06 ms interarrival with a single ~124 ms idle
+# window over a 1.2%-of-capacity working set: baseline's watermark
+# reclamation runs against the writes, IPS converts in place
+ADV_IPS_BASE_STATS = TraceStats(
+    n_requests=30000, write_ratio=0.99, mean_req_pages=3.03,
+    seq_prob=0.415, working_set_frac=0.0125, skew=0.41,
+    interarrival_ms=0.057, idle_every=24800, idle_ms=124.0)
+
+
 # name -> builder(total_logical_pages, capacity_pages, seed) -> Trace
 SCENARIOS: Dict[str, Callable] = {
     "zipf_hot": zipf_overwrite,
@@ -218,6 +257,7 @@ SCENARIOS: Dict[str, Callable] = {
     "read_burst": read_burst,
     "gc_pressure": gc_pressure,
     "tenant_mix": tenant_mix,
+    "adv_ips_base": adv_ips_base,
 }
 
 SCENARIO_NAMES = tuple(SCENARIOS)

@@ -1,4 +1,5 @@
-"""On-disk trace parsers: MSR Cambridge CSV, generic CSV, fio iolog.
+"""On-disk trace parsers: MSR Cambridge CSV, generic CSV, fio iolog,
+blktrace text.
 
 `load_trace(path, mode=..., max_ops=...)` is the kv-emulator-style entry
 point (ROADMAP "trace realism" item): parse a real trace file into the
@@ -17,6 +18,13 @@ Formats (auto-sniffed from the first data line, or forced via `fmt=`):
               4-column `time_ms,lba,pages,R|W`.
   * fio     — fio iolog v2/v3 lines: `<file> <read|write> <offset> <len>`
               (v3 prefixes a timestamp-ms column).
+  * blktrace — `blkparse` text output:
+              `maj,min cpu seq timestamp pid ACTION RWBS sector + nsect
+              [process]` (timestamp in seconds, sectors of 512 bytes).
+              Each I/O appears once per lifecycle action; to avoid
+              double counting, only one action class is kept — queue
+              (`Q`) events when present, else dispatch (`D`), else
+              completion (`C`).
 
 Compression follows the optional-dependency pattern of `checkpoint/ckpt.py`:
 `.zst` uses zstandard when installed (informative ImportError otherwise),
@@ -26,6 +34,7 @@ from __future__ import annotations
 
 import io
 import os
+import re
 from typing import Dict, Iterable, Optional
 
 import numpy as np
@@ -84,9 +93,17 @@ def _is_float(tok: str) -> bool:
         return False
 
 
+_BLK_DEV = re.compile(r"^\d+,\d+$")     # blkparse device column: maj,min
+
+
 def sniff_format(first_line: str) -> str:
     """Guess the trace format from its first data line."""
     line = first_line.strip()
+    # blktrace before the comma-delimited formats: its only comma is the
+    # maj,min device column of a whitespace-separated line
+    parts = line.split()
+    if len(parts) >= 6 and _BLK_DEV.match(parts[0]):
+        return "blktrace"
     if "," in line:
         parts = [p.strip() for p in line.split(",")]
         if len(parts) >= 6 and parts[3].lower() in ("read", "write"):
@@ -193,7 +210,59 @@ def _parse_fio(lines: Iterable[str], rows: Dict) -> None:
         rows["is_write"].append(parts[i].lower() == "write")
 
 
-_PARSERS = {"msr": _parse_msr, "generic": _parse_generic, "fio": _parse_fio}
+_BLK_SECTOR_BYTES = 512
+# lifecycle action classes, most host-like first: a queue (Q) event exists
+# for every I/O an application issued; dispatch (D) / completion (C) only
+# cover what reached the device, so they are fallbacks for filtered logs
+_BLK_ACTION_PREF = ("Q", "D", "C")
+
+
+def _parse_blktrace(lines: Iterable[str], rows: Dict) -> None:
+    """`blkparse` text output. Keeps the most host-like action class
+    present (module docstring) so an I/O traced through its whole
+    lifecycle (Q..G..I..D..C) counts once. Memory stays ~1x the kept
+    class: once a higher-preference class appears, lower classes can
+    never win, so their events are skipped (and stale buffers freed)
+    rather than accumulated."""
+    rank = {a: i for i, a in enumerate(_BLK_ACTION_PREF)}
+    per_action = {a: {k: [] for k in rows} for a in _BLK_ACTION_PREF}
+    best = len(_BLK_ACTION_PREF)            # rank of best class seen
+    for line in lines:
+        parts = line.split()
+        # payload lines: maj,min cpu seq ts pid ACTION RWBS sector + nsect
+        if (len(parts) < 10 or not _BLK_DEV.match(parts[0])
+                or parts[8] != "+" or not _is_float(parts[3])
+                or not parts[7].isdigit() or not parts[9].isdigit()):
+            continue
+        action = parts[5]
+        r = rank.get(action)
+        if r is None or r > best:
+            continue
+        rwbs = parts[6].upper()
+        if "W" in rwbs:
+            w = True
+        elif "R" in rwbs and "A" not in rwbs:   # skip readahead
+            w = False
+        else:
+            continue                            # N / flush-only / discard
+        if r < best:                            # new winner: free the rest
+            best = r
+            per_action = {a: buf for a, buf in per_action.items()
+                          if rank[a] <= best}
+        out = per_action[action]
+        nsect = max(int(parts[9]), 1)
+        out["arrival_ms"].append(float(parts[3]) * 1e3)
+        out["lba"].append(int(parts[7]) * _BLK_SECTOR_BYTES // PAGE_BYTES)
+        out["pages"].append(
+            -(-(nsect * _BLK_SECTOR_BYTES) // PAGE_BYTES))
+        out["is_write"].append(w)
+    if best < len(_BLK_ACTION_PREF):
+        for k in rows:
+            rows[k].extend(per_action[_BLK_ACTION_PREF[best]][k])
+
+
+_PARSERS = {"msr": _parse_msr, "generic": _parse_generic, "fio": _parse_fio,
+            "blktrace": _parse_blktrace}
 
 
 def parse_requests(path: str, fmt: Optional[str] = None) -> Dict:

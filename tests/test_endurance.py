@@ -191,6 +191,55 @@ class TestReliabilityGate:
         assert eols["ips_raro"] == -1.0 or \
             eols["ips_raro"] > eols["ips"]       # gating delays end of life
 
+    def test_hysteresis_zero_matches_single_threshold_gate(self):
+        """`rp_hysteresis=0` (the default) is the PR 4 gate bit for bit:
+        the fallback condition degenerates to budget exhaustion."""
+        trace = _hammer_trace()
+        e0 = EnduranceSpec(rp_budget=2.0, cycle_budget=60.0, w_rp=4.0)
+        eh = EnduranceSpec(rp_budget=2.0, cycle_budget=60.0, w_rp=4.0,
+                           rp_hysteresis=0.0)
+        outs = []
+        for e in (e0, eh):
+            p = default_params(CFG, "ips_raro", endurance=e)
+            lat, st = run_trace(CFG, "ips_raro", trace, closed_loop=False,
+                                n_logical=60000, params=p)
+            outs.append((np.asarray(lat), np.asarray(st.counters)))
+        assert np.array_equal(outs[0][0], outs[1][0])
+        assert np.array_equal(outs[0][1], outs[1][1])
+
+    def test_hysteresis_pre_drains_inside_the_band(self):
+        """With `rp_hysteresis > 0` the migrate fallback starts while
+        conversion is still allowed: migration appears earlier/larger,
+        in-place conversion survives at least as long (no thrash into
+        the TLC-direct cliff at the boundary), and the wear cap holds."""
+        trace = _hammer_trace()
+        runs = {}
+        for h in (0.0, 1.0):
+            e = EnduranceSpec(rp_budget=2.0, cycle_budget=60.0, w_rp=4.0,
+                              rp_hysteresis=h)
+            p = default_params(CFG, "ips_raro", endurance=e)
+            lat, st = run_trace(CFG, "ips_raro", trace, closed_loop=False,
+                                n_logical=60000, params=p)
+            runs[h] = (np.asarray(st.counters), st.wear,
+                       summarize(lat, {"is_write": trace["is_write"]},
+                                 st, cell=p, cfg=CFG))
+        c0, _, s0 = runs[0.0]
+        ch, wh, sh = runs[1.0]
+        assert ch[CTR["mig_w"]] > c0[CTR["mig_w"]]      # band is live
+        # conversion stress still capped by the (unchanged) budget
+        rp_cycles = np.asarray(wh.pe_rp).sum(axis=1) / CFG.slc_cap_pages
+        assert rp_cycles.max() <= 2.0 + 1.0
+        # pre-draining must not regress the latency story materially
+        assert (float(sh["mean_write_latency_ms"])
+                <= 1.10 * float(s0["mean_write_latency_ms"]))
+
+    def test_hysteresis_spec_parse_and_tag(self):
+        e = EnduranceSpec.parse("rp_budget=2,rp_hysteresis=0.5")
+        assert e.rp_hysteresis == 0.5
+        assert e.tag.endswith(":h0.5")
+        # the default tag is unchanged -> SweepPoint keys stay stable
+        assert EnduranceSpec(rp_budget=2.0).tag == "rp2:w2.5:b30000"
+
     def test_flush_covers_gated_region(self):
         """tracked_region: the gated mechanism tracks its basic region,
         so the end-of-workload flush migrates the resident data."""

@@ -1,0 +1,254 @@
+"""Search-engine tests (repro.search, DESIGN.md §10).
+
+The load-bearing contracts:
+
+* the Pareto front is non-dominated and deterministic under a fixed seed;
+* successive halving never drops a candidate that beats a survivor on the
+  pruning metric (the ISSUE's dominance property, asserted on both
+  synthetic score sets and real tuner rounds);
+* knob-only rounds — same composition set, same workload budget, knob
+  values changed — report ZERO new fleet compilations (the traced-knob /
+  cell-bucket contract of the whole subsystem);
+* the committed adversarial scenario (`adv_ips_base`) reproduces its
+  ranking flip vs the MSR daily consensus through the ordinary sweep
+  path, not just inside the search that found it;
+* the CLI search writes a BENCH_search.json with a non-empty front and
+  per-round survivor/compile counts, and the sweep CLI fails fast when a
+  requested policy's declared baseline is excluded.
+"""
+import itertools
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs.ssd_paper import PAPER_SSD
+from repro.core.ssd import fleet
+from repro.core.ssd.policies.registry import baseline_of, get_spec
+from repro.core.ssd.policies.spec import iter_valid_specs, validate_spec
+from repro.search import (Candidate, build_space, evaluate_candidates,
+                          group_candidates, group_key, pareto_front, prune,
+                          register_space, separation_search,
+                          successive_halving)
+from repro.search.tune import PRUNE_METRIC, _dominates
+from repro.sweep.grid import SweepPoint
+from repro.sweep.runner import run_sweep
+
+CFG = PAPER_SSD.scaled(128)
+MAX_OPS = 2048                  # tuner smoke budget (compile-bound anyway)
+
+
+def _synthetic_scores(seed: int, n: int = 24):
+    """Deterministic synthetic score tables over distinct candidates."""
+    rng = np.random.default_rng(seed)
+    fracs = [round(0.25 * k, 2) for k in range(1, n + 1)]
+    return {
+        Candidate("ips", cache_frac=f): {
+            "lat": float(rng.uniform(0.5, 1.5)),
+            "waf": float(rng.uniform(0.5, 1.5)),
+            "tbw": float(rng.uniform(0.5, 2.0)), "n": 2}
+        for f in fracs}
+
+
+class TestSpace:
+    def test_candidates_resolve_and_are_unique(self):
+        for budget in ("smoke", "quick"):
+            cands = build_space(budget)
+            labels = [c.label for c in cands]
+            assert len(set(labels)) == len(labels)
+            for c in cands:
+                validate_spec(get_spec(c.policy))       # registered+valid
+                assert baseline_of(c.policy) != c.policy  # no reference
+
+    def test_register_space_covers_valid_frontier(self):
+        names = register_space(include_auto=True)
+        assert len(names) == len(iter_valid_specs())
+        specs = {get_spec(n) for n in names}
+        assert specs == set(iter_valid_specs())
+        # idempotent: a second call returns the same names
+        assert register_space(include_auto=True) == names
+
+    def test_knob_variants_share_group(self):
+        cands = [Candidate("ips", cache_frac=f) for f in (0.5, 1.0, 2.0)]
+        cands += [Candidate("ips", idle_threshold_ms=2.0)]
+        assert len(group_candidates(cands)) == 1
+        assert group_key(cands[0]) == group_key(cands[-1])
+
+    def test_point_carries_declared_baseline_and_knobs(self):
+        pt = Candidate("ips_lazy", cache_frac=0.5).point("hm_0", "daily")
+        assert pt.baseline == "coop"
+        assert pt.cache_frac == 0.5
+        assert pt.baseline_point().policy == "coop"
+        assert pt.baseline_point().cache_frac == 0.5
+
+
+class TestParetoFront:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_front_is_nondominated_and_complete(self, seed):
+        scores = _synthetic_scores(seed)
+        front = pareto_front(scores)
+        assert front                                   # never empty
+        members = {c for c, _ in front}
+        for c, s in front:
+            assert not any(_dominates(s2, s)
+                           for c2, s2 in scores.items() if c2 != c)
+        for c, s in scores.items():
+            if c not in members:
+                assert any(_dominates(s2, s)
+                           for c2, s2 in scores.items() if c2 != c)
+
+    def test_front_deterministic_under_insertion_order(self):
+        scores = _synthetic_scores(7)
+        shuffled = dict(reversed(list(scores.items())))
+        a = [(c.label, s["lat"]) for c, s in pareto_front(scores)]
+        b = [(c.label, s["lat"]) for c, s in pareto_front(shuffled)]
+        assert a == b
+        lats = [s["lat"] for _, s in pareto_front(scores)]
+        assert lats == sorted(lats)                    # lat-sorted output
+
+
+class TestPrune:
+    @pytest.mark.parametrize("seed", [0, 5, 9])
+    def test_never_drops_a_dominator_on_the_pruning_metric(self, seed):
+        scores = _synthetic_scores(seed)
+        keep = len(scores) // 3
+        survivors = set(prune(scores, keep))
+        assert len(survivors) == keep
+        for cand, s in scores.items():
+            if cand in survivors:
+                continue
+            for surv in survivors:
+                assert s[PRUNE_METRIC] >= scores[surv][PRUNE_METRIC], (
+                    f"pruned {cand.label} beats survivor {surv.label} "
+                    f"on {PRUNE_METRIC}")
+
+    def test_prune_deterministic_on_ties(self):
+        base = {"lat": 1.0, "waf": 1.0, "tbw": 1.0, "n": 1}
+        scores = {Candidate("ips", cache_frac=f): dict(base)
+                  for f in (0.5, 1.0, 2.0, 4.0)}
+        assert ([c.label for c in prune(scores, 2)]
+                == [c.label for c in prune(dict(
+                    reversed(list(scores.items()))), 2)])
+
+
+class TestTunerEndToEnd:
+    """Real fleet evaluations on a tiny budget (compile-bound)."""
+
+    CANDS = [Candidate("ips"), Candidate("ips", cache_frac=0.5),
+             Candidate("ips_agc"), Candidate("ips_agc", cache_frac=0.5)]
+    ROUNDS = [
+        {"traces": ("hm_0",), "modes": ("daily",), "max_ops": MAX_OPS},
+        {"traces": ("hm_0",), "modes": ("daily",), "max_ops": MAX_OPS},
+    ]
+
+    def test_halving_rounds_and_dominance_property(self):
+        res = successive_halving(CFG, self.CANDS, self.ROUNDS,
+                                 min_keep=2, cell_bucket=4)
+        assert [r["round"] for r in res.rounds] == [0, 1]
+        assert res.rounds[0]["candidates"] == 4
+        assert res.rounds[0]["survivors"] == 2
+        # the dominance property on the real round-0 scores
+        survivors = set(res.survivors)
+        for cand, s in res.round_scores[0].items():
+            if cand not in survivors:
+                for surv in survivors:
+                    assert (s[PRUNE_METRIC]
+                            >= res.round_scores[0][surv][PRUNE_METRIC])
+        # front: non-empty, non-dominated, subset of final survivors
+        assert res.front
+        for c, s in res.front:
+            assert c in survivors
+            assert not any(_dominates(s2, s)
+                           for c2, s2 in res.scores.items() if c2 != c)
+
+    def test_last_round_is_knob_only_zero_compiles(self):
+        """Round 1 re-evaluates the knob-pruned survivors on the same
+        workload budget: same compositions, same shapes -> the jit cache
+        must absorb it entirely."""
+        res = successive_halving(CFG, self.CANDS, self.ROUNDS,
+                                 min_keep=2, cell_bucket=4)
+        assert res.rounds[1]["compiles"] == 0
+        assert res.rounds[0]["compiles"] >= 0   # warm cache may be free
+
+    def test_knob_refinement_is_compile_free(self):
+        """Fresh knob values inside an already-compiled composition
+        group (same bucketed cell count, same trace shapes) cost zero
+        new compilations."""
+        kw = dict(traces=("hm_0",), modes=("daily",), max_ops=MAX_OPS,
+                  cell_bucket=4)
+        evaluate_candidates(
+            CFG, [Candidate("ips", cache_frac=f) for f in (1.0, 0.5)],
+            **kw)
+        before = fleet.compile_count()
+        scores, meta = evaluate_candidates(
+            CFG, [Candidate("ips", cache_frac=f) for f in (0.75, 0.25)],
+            **kw)
+        assert fleet.compile_count() == before
+        assert len(scores) == 2 and meta["cells"] > 0
+
+    def test_tuner_deterministic(self):
+        a = successive_halving(CFG, self.CANDS, self.ROUNDS,
+                               min_keep=2, cell_bucket=4, seed=0)
+        b = successive_halving(CFG, self.CANDS, self.ROUNDS,
+                               min_keep=2, cell_bucket=4, seed=0)
+        sa, sb = a.to_json(), b.to_json()
+        for r in (*sa["rounds"], *sb["rounds"]):
+            r.pop("wall_s")
+            r.pop("compiles")        # jit-cache warmth differs, shapes not
+        assert sa == sb
+
+
+class TestScenarioSearch:
+    def test_committed_adv_scenario_flips_via_sweep_path(self):
+        """The registered `adv_ips_base` generator reproduces the search's
+        ranking flip on the ordinary fleet path: ips beats baseline
+        decisively on this workload while the MSR daily consensus has
+        baseline ahead (BENCH_sweep_paper.json daily geomean ~1.0-1.3)."""
+        pts = [SweepPoint("adv_ips_base", "daily", p)
+               for p in ("baseline", "ips")]
+        res = run_sweep(CFG, pts)
+        ratio = (res[pts[1]]["mean_write_latency_ms"]
+                 / res[pts[0]]["mean_write_latency_ms"])
+        assert ratio < 0.5          # observed ~0.15; decisive flip
+
+    def test_separation_search_deterministic(self):
+        kw = dict(seed=3, iters=1, pop=2, max_ops=MAX_OPS)
+        a = separation_search(CFG, "ips", "baseline", **kw)
+        b = separation_search(CFG, "ips", "baseline", **kw)
+        assert a == b
+        assert a["history"] and "best_stats" in a
+
+
+class TestCliSearch:
+    def test_search_smoke_writes_artifact(self, tmp_path):
+        from repro.sweep.cli import main
+        rc = main(["--search", "smoke", "--max-ops", str(MAX_OPS),
+                   "--devices", "1", "--out-dir", str(tmp_path)])
+        assert rc == 0
+        doc = json.loads((tmp_path / "BENCH_search.json").read_text())
+        assert doc["front"], "Pareto front must be non-empty"
+        for f in doc["front"]:
+            assert {"label", "lat", "waf", "tbw"} <= set(f)
+        assert doc["rounds"]
+        for r in doc["rounds"]:
+            assert {"survivors", "compiles", "cells", "wall_s"} <= set(r)
+        assert doc["scenario_search"]["history"]
+        assert "fleet_compiles" in doc
+
+    def test_search_rejects_sweep_selectors(self, capsys):
+        from repro.sweep.cli import main
+        assert main(["--search", "smoke", "--grid", "quick"]) == 2
+        assert "--search" in capsys.readouterr().err
+
+    def test_custom_sweep_fails_fast_on_excluded_baseline(self, capsys):
+        from repro.sweep.cli import main
+        rc = main(["--traces", "hm_0", "--policies", "ips_lazy",
+                   "--modes", "daily"])
+        assert rc == 2
+        err = capsys.readouterr().err
+        assert "ips_lazy" in err and "coop" in err
+        # unknown policies still get the registry error, not this one
+        rc = main(["--traces", "hm_0", "--policies", "nope"])
+        assert rc == 2
+        assert "unknown --policies" in capsys.readouterr().err

@@ -250,8 +250,45 @@ class TestParsers:
         assert sniff_format("time_ms,lba,pages,op") == "generic"
         assert sniff_format("0.5,100,2,W") == "generic"
         assert sniff_format("/dev/sda write 4096 8192") == "fio"
+        assert sniff_format(
+            "  8,0    1    1   0.000000000  1021  Q   W 1716224 + 8 [x]"
+        ) == "blktrace"
         with pytest.raises(ValueError):
             sniff_format("???")
+
+    def test_blktrace_fixture(self):
+        """blkparse text (satellite): one request per I/O despite the full
+        Q..C lifecycle in the log; sectors (512 B) to 4 KB pages;
+        readahead and payload-free actions skipped."""
+        path = str(FIXTURE.parent / "sample_blktrace.txt")
+        req = parse_requests(path)
+        # 11 Q events carry payload; RA (readahead) + FN (flush) skipped
+        assert len(req["arrival_ms"]) == 9
+        assert int(req["is_write"].sum()) == 7
+        # first I/O: sector 1716224 -> byte 878706688 -> page 214528, 8
+        # sectors -> 1 page; timestamps come out in ms from trace start
+        assert req["lba"][0] == 1716224 * 512 // 4096
+        assert req["pages"][0] == 1
+        assert req["arrival_ms"][0] == 0.0
+        assert np.isclose(req["arrival_ms"][1], 1.200441)
+        # 48 sectors -> 6 pages
+        assert req["pages"][1] == 6
+        tr = load_trace(path, total_logical_pages=N_LOGICAL)
+        assert tr.n_reqs == 9 and tr.n_ops == int(req["pages"].sum())
+        assert wl.spec_kind(path) == "file"
+
+    def test_blktrace_action_fallback(self, tmp_path):
+        """Logs without Q events (e.g. `blkparse -a complete`) fall back
+        to the next lifecycle class instead of parsing nothing."""
+        p = tmp_path / "d.blktrace.txt"
+        p.write_text(
+            "  8,0 0 1 0.000000000 11 D   W 8192 + 8 [a]\n"
+            "  8,0 0 2 0.001000000  0 C   W 8192 + 8 [0]\n"
+            "  8,0 0 3 0.002000000 11 D   R 16384 + 16 [a]\n"
+            "  8,0 0 4 0.003000000  0 C   R 16384 + 16 [0]\n")
+        req = parse_requests(str(p), fmt="blktrace")
+        assert len(req["arrival_ms"]) == 2          # D chosen, C dropped
+        assert [int(w) for w in req["is_write"]] == [1, 0]
 
     def test_generic_csv_with_header(self, tmp_path):
         p = tmp_path / "t.csv"

@@ -55,4 +55,36 @@ EOF
 rm -rf "$search_tmp"
 
 echo
+echo "== smoke: telemetry engine (timeline + overhead gate, DESIGN.md §11) =="
+tl_tmp=$(mktemp -d)
+python -m repro.sweep.cli --grid quick --max-ops 8192 --timeline 512 \
+  --timeline-overhead-check --out-dir "$tl_tmp"
+python - "$tl_tmp" <<'EOF'
+import json, os, sys
+doc = json.load(open(os.path.join(sys.argv[1], "BENCH_timeline.json")))
+assert doc["n_cells"] > 0 and doc["window_ops"] == 512, doc["n_cells"]
+for key, cell in doc["cells"].items():
+    assert cell["n_windows"] > 0, key
+    for k in ("ops", "writes", "lat_mean_ms", "lat_p50_ms", "lat_p99_ms",
+              "occ_frac", "free_frac", "waf", "idle_ms", "t_end_ms",
+              "host_w", "mig_w", "erases"):
+        assert len(cell[k]) == cell["n_windows"], (key, k)
+    cliff = cell["cliff"]
+    assert {"detected", "window", "ratio", "steady_lat_ms",
+            "time_to_cliff_ops", "recovery_slope"} <= set(cliff), key
+    # NOTE: no cell is required to *have* a cliff here — 8192 truncated
+    # ops barely warm the cache; the full paper grid is where baseline's
+    # bursty cliff shows (and is asserted by the PR acceptance run)
+assert doc["spans"], "BENCH_timeline: empty span list"
+assert doc["meta"].get("git_sha"), "BENCH_timeline: missing git sha"
+ovh = doc["overhead"]
+assert ovh["ratio"] <= 1.25, \
+    f"telemetry overhead gate: ratio {ovh['ratio']} > 1.25x " \
+    f"(off {ovh['off_warm_s']}s -> on {ovh['on_warm_s']}s)"
+print(f"timeline artifact OK: {doc['n_cells']} cell(s), "
+      f"{doc['n_cliffs']} cliff(s), overhead ratio {ovh['ratio']}")
+EOF
+rm -rf "$tl_tmp"
+
+echo
 echo "ci_check: OK"

@@ -92,22 +92,38 @@ def shard_cells(tree, devices=None):
 
 
 def init_fleet_state(cfg: SSDConfig, n_logical: int, n_cells: int, *,
-                     endurance: bool = False) -> SimState:
-    """(C,)-stacked initial SimState (the donated fleet scan carry)."""
+                     endurance: bool = False, timeline=None) -> SimState:
+    """(C,)-stacked initial SimState (the donated fleet scan carry).
+    `timeline` — ops per telemetry window, or None — attaches the
+    per-cell in-scan probe (DESIGN.md §11)."""
     return jax.vmap(
-        lambda _: init_state(cfg, n_logical, endurance=endurance))(
+        lambda _: init_state(cfg, n_logical, endurance=endurance,
+                             timeline=timeline))(
         jnp.arange(n_cells))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "spec", "closed_loop"),
+@functools.partial(jax.jit, static_argnames=("cfg", "spec", "closed_loop",
+                                             "timeline_ops"),
                    donate_argnums=(2,))
 def _run_fleet(cfg: SSDConfig, spec, state0: SimState, ops: dict,
-               params: CellParams, *, closed_loop: bool):
+               params: CellParams, *, closed_loop: bool,
+               timeline_ops: int | None = None):
+    endurance = params.endurance is not None
+
     def one(cell_state, cell_ops, cell_params):
         step = make_step(cfg, spec, closed_loop=closed_loop,
                          params=cell_params)
-        final, latency = jax.lax.scan(step, cell_state, cell_ops)
-        return latency, final
+        if timeline_ops is None:
+            final, latency = jax.lax.scan(step, cell_state, cell_ops)
+            return latency, final
+        from repro.telemetry import probe
+        final, (latency, rows) = jax.lax.scan(step, cell_state, cell_ops)
+        wtl = probe.windowed(rows, latency, cell_ops["is_write"],
+                             cell_ops["arrival_ms"],
+                             window_ops=timeline_ops,
+                             t_len=cell_ops["lba"].shape[0],
+                             endurance=endurance)
+        return latency, final._replace(timeline=wtl)
 
     latency, final = jax.vmap(one)(state0, ops, params)
     return latency, final
@@ -137,19 +153,24 @@ def compile_count() -> int:
 
 
 def run_fleet(cfg: SSDConfig, policy, ops: dict, params: CellParams,
-              *, closed_loop: bool, n_logical: int):
+              *, closed_loop: bool, n_logical: int,
+              timeline_ops: int | None = None):
     """Simulate a whole (composition, mode) fleet in one compiled scan.
 
     ops: (C, T) stacked op tensors from `stack_ops`; params: (C,)-stacked
     CellParams; `policy` a registered name or PolicySpec. Returns
     (latency (C, T), final SimState with leading C). The freshly built
-    initial state is donated to the scan (see module docstring)."""
+    initial state is donated to the scan (see module docstring).
+    `timeline_ops` attaches the per-cell telemetry probe (DESIGN.md §11);
+    every cell windows identically over the shared padded length, so the
+    final state's `timeline` leaves stack along C like any other field."""
     spec = resolve_spec(policy)
     n_cells = ops["lba"].shape[0]
     state0 = shard_cells(init_fleet_state(
-        cfg, n_logical, n_cells, endurance=params.endurance is not None))
+        cfg, n_logical, n_cells, endurance=params.endurance is not None,
+        timeline=timeline_ops))
     return _run_fleet(cfg, spec, state0, ops, params,
-                      closed_loop=closed_loop)
+                      closed_loop=closed_loop, timeline_ops=timeline_ops)
 
 
 def flush_fleet(cfg: SSDConfig, states: SimState, policy) -> SimState:

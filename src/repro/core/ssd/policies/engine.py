@@ -40,6 +40,7 @@ from repro.core.ssd.policies.registry import resolve_spec
 from repro.core.ssd.policies.spec import (PolicySpec, requires_endurance,
                                           tracked_region)
 from repro.core.ssd.policies.state import CTR, CellParams, SimState
+from repro.telemetry import probe
 
 __all__ = ["StepCtx", "build_step", "state_fields_used"]
 
@@ -350,11 +351,12 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
             pe_tlc_new = ctx.pe_tlc_p + jnp.where(to_tlc, 1.0, 0.0)
             pe_trad_new = ctx.pe_trad_p + jnp.where(to_trad, 1.0, 0.0)
             ops_seen = wear.ops_seen + jnp.where(is_pad, 0.0, 1.0)
-            tripped = jnp.maximum(
+            max_cycles = jnp.maximum(
                 jnp.max(bucket_cycles(pe_slc_new, pe_rp_new, ctx.erase_p,
                                       endur, cap_basic)),
                 trad_cycles(pe_trad_new, ctx.erase_trad_p, endur,
-                            cap_trad)) >= endur.cycle_budget
+                            cap_trad))
+            tripped = max_cycles >= endur.cycle_budget
             wear_new = WearState(
                 pe_slc=wear.pe_slc.at[plane].set(pe_slc_new),
                 pe_rp=wear.pe_rp.at[plane].set(pe_rp_new),
@@ -388,6 +390,30 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
             idle_seen=state.idle_seen.at[plane].set(
                 jnp.where(is_pad, state.idle_seen[plane], idle_cum)),
         )
+
+        # ------------------------------------------------------------
+        # 3. telemetry probe (DESIGN.md §11) — observation only: feeds on
+        #    values the step already computed and writes nothing but its
+        #    own accumulators, so the op sequence above is unchanged.
+        #    With the probe on, the step emits (latency, row) through the
+        #    scan's output path; `probe.windowed` reduces the rows to
+        #    per-window series after the scan.
+        # ------------------------------------------------------------
+        if state.timeline is not None:
+            # a step only mutates the serviced plane's regions, so the
+            # device-wide resident-page count moves by the local delta
+            occ_delta = ((slc_used + trad_used)
+                         - (state.slc_used[plane]
+                            + state.trad_used[plane])).astype(jnp.float32)
+            cap_tot = ((cap_basic + cap_boost + cap_trad)
+                       .astype(jnp.float32) * p_total)
+            tl_new, tl_row = probe.accumulate(
+                state.timeline, is_pad=is_pad, counters=ctr,
+                occ_delta=occ_delta, cap_pages=cap_tot,
+                idle_claim=jnp.where(is_pad, 0.0,
+                                     idle_cum - state.idle_seen[plane]),
+                wear=max_cycles if use_endurance else None)
+            return new_state._replace(timeline=tl_new), (latency, tl_row)
         return new_state, latency
 
     return step

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.core.ssd.endurance.model import (EnduranceParams, WearState,
                                             as_params, init_wear)
 from repro.core.ssd.endurance.spec import EnduranceSpec
+from repro.telemetry.probe import TimelineState, init_timeline
 
 __all__ = ["CellParams", "SimState", "CTR", "init_state", "default_cell",
            "WATERMARK_NUM", "WATERMARK_DEN", "OVERRUN_PAGES", "ceil_div"]
@@ -70,6 +71,13 @@ class SimState(NamedTuple):
     #                            None unless CellParams.endurance is set —
     #                            jax treats None as an empty pytree, so
     #                            non-endurance carries keep the seed shape
+    timeline: TimelineState = None  # in-scan telemetry probe carry
+    #                            (DESIGN.md §11); None == statically
+    #                            absent, same contract as `wear` — the
+    #                            probe is observation-only, so enabling
+    #                            it never changes latencies or counters.
+    #                            run_trace/run_fleet swap in the reduced
+    #                            per-window WindowedTimeline post-scan
 
 
 CTR = {name: i for i, name in enumerate(
@@ -77,10 +85,14 @@ CTR = {name: i for i, name in enumerate(
      "mig_w", "erases", "agc_waste", "conflict_ms"])}
 
 
-def init_state(cfg, n_logical: int, *, endurance: bool = False) -> SimState:
+def init_state(cfg, n_logical: int, *, endurance: bool = False,
+               timeline=None) -> SimState:
+    """Fresh scan carry. `timeline` — ops per telemetry window, or
+    None — attaches the in-scan probe carry (DESIGN.md §11)."""
     p = cfg.num_planes
     return SimState(
         wear=init_wear(cfg) if endurance else None,
+        timeline=init_timeline(timeline) if timeline else None,
         busy=jnp.zeros(p, jnp.float32),
         slc_used=jnp.zeros(p, jnp.int32),
         rp_done=jnp.zeros(p, jnp.int32),

@@ -91,22 +91,37 @@ def as_ops(trace):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "closed_loop",
-                                             "n_logical"))
+                                             "n_logical", "timeline_ops"))
 def run_trace(cfg: SSDConfig, policy, trace, *, closed_loop: bool,
-              n_logical: int, waste_p=0.0, params: CellParams | None = None):
+              n_logical: int, waste_p=0.0, params: CellParams | None = None,
+              timeline_ops: int | None = None):
     """Simulate one padded trace. Returns (per-op latency, final SimState).
 
     `params` (or the shorthand `waste_p`) are traced per-cell scalars
     (CellParams) so all workloads — and all sweep settings of cache size /
     idle threshold — share one compiled scan per (composition, mode).
-    `policy` (static) is a registered name or a `PolicySpec`."""
+    `policy` (static) is a registered name or a `PolicySpec`.
+    `timeline_ops` (static: it fixes the window-count shape) attaches the
+    in-scan telemetry probe with that many ops per window — the final
+    state then carries `SimState.timeline` (DESIGN.md §11); None keeps
+    the seed carry structure."""
     if params is None:
         params = default_params(cfg, policy, waste_p)
     step = make_step(cfg, policy, closed_loop=closed_loop, params=params)
     state0 = init_state(cfg, n_logical,
-                        endurance=params.endurance is not None)
-    final, latency = jax.lax.scan(step, state0, as_ops(trace))
-    return latency, final
+                        endurance=params.endurance is not None,
+                        timeline=timeline_ops)
+    ops = as_ops(trace)
+    if timeline_ops is None:
+        final, latency = jax.lax.scan(step, state0, ops)
+        return latency, final
+    from repro.telemetry import probe
+    final, (latency, rows) = jax.lax.scan(step, state0, ops)
+    wtl = probe.windowed(rows, latency, ops["is_write"],
+                         ops["arrival_ms"], window_ops=timeline_ops,
+                         t_len=ops["lba"].shape[0],
+                         endurance=params.endurance is not None)
+    return latency, final._replace(timeline=wtl)
 
 
 def flush_cache(cfg: SSDConfig, state: SimState, policy="baseline"):

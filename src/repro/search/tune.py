@@ -27,11 +27,11 @@ deterministic per seed (synthesizer RNG streams are seed-keyed).
 from __future__ import annotations
 
 import math
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.search.space import Candidate
+from repro.telemetry.spans import span
 
 __all__ = ["SCHEDULES", "TuneResult", "evaluate_candidates", "prune",
            "pareto_front", "successive_halving", "default_score_endurance"]
@@ -228,13 +228,16 @@ def successive_halving(cfg, candidates: Sequence[Candidate],
     for rnd, stage in enumerate(schedule):
         n_in = len(survivors)
         compiles0 = fleet.compile_count()
-        t0 = time.perf_counter()
-        scores, meta = evaluate_candidates(
-            cfg, survivors, traces=stage["traces"], modes=stage["modes"],
-            seed=seed, max_ops=stage.get("max_ops"),
-            trace_cache=trace_cache, score_endurance=score_endurance,
-            cell_bucket=cell_bucket, progress=progress)
-        wall_s = time.perf_counter() - t0
+        with span("search.round", "search", round=rnd,
+                  candidates=n_in) as rec:
+            scores, meta = evaluate_candidates(
+                cfg, survivors, traces=stage["traces"],
+                modes=stage["modes"],
+                seed=seed, max_ops=stage.get("max_ops"),
+                trace_cache=trace_cache, score_endurance=score_endurance,
+                cell_bucket=cell_bucket, progress=progress)
+            rec["args"]["compiles"] = fleet.compile_count() - compiles0
+        wall_s = rec["dur_s"]
         round_scores.append(scores)
         if rnd < len(schedule) - 1:
             keep = min(n_in, max(min_keep,

@@ -116,6 +116,19 @@ def _parse(argv):
                     "(default: cpu count; 1 disables)")
     ap.add_argument("--no-trace-cache-disk", action="store_true",
                     help="keep the compiled-trace cache in memory only")
+    ap.add_argument("--timeline", nargs="?", const=1024, type=int,
+                    default=None, metavar="WINDOW_OPS",
+                    help="attach the in-scan telemetry probe (DESIGN.md "
+                    "§11): per-window latency/occupancy/WAF series + cliff "
+                    "detection per cell, written to "
+                    "BENCH_<name>_timeline.json (default window: 1024 ops)")
+    ap.add_argument("--chrome-trace", default=None, metavar="PATH",
+                    help="also write the run's span tree as a Chrome "
+                    "trace-event file (chrome://tracing / Perfetto)")
+    ap.add_argument("--timeline-overhead-check", action="store_true",
+                    help="re-run the sweep warm with telemetry off and on "
+                    "and record the wall-time ratio in the timeline "
+                    "artifact (CI gate; requires --timeline)")
     ap.add_argument("--bench", action="store_true",
                     help="also wall-clock fleet vs looped eval_cell")
     ap.add_argument("--name", default=None, help="benchmark artifact name "
@@ -180,6 +193,8 @@ def main(argv=None) -> int:
             ("--modes", args.modes != "bursty,daily"),
             ("--cache-fracs", args.cache_fracs != "1.0"),
             ("--bench", args.bench),
+            ("--timeline", args.timeline is not None),
+            ("--timeline-overhead-check", args.timeline_overhead_check),
             ("--seeds (search scores one seed)", len(seeds) > 1),
         ) if used]
         if conflicts:
@@ -299,21 +314,76 @@ def main(argv=None) -> int:
         from dataclasses import replace
         points = [replace(pt, endurance=endurance) for pt in points]
 
+    if args.timeline_overhead_check and not args.timeline:
+        print("error: --timeline-overhead-check requires --timeline",
+              file=sys.stderr)
+        return 2
+    if args.timeline is not None and args.timeline <= 0:
+        print("error: --timeline wants a positive window size (ops)",
+              file=sys.stderr)
+        return 2
+
+    import contextlib
+
+    from repro.core.ssd import fleet
+    from repro.telemetry import Tracer, chrome_trace, timeline_payload
+    from repro.telemetry import timeline as tmod
+    from repro.telemetry.spans import span
+
+    tracer = (Tracer() if (args.timeline or args.chrome_trace) else None)
+    timelines = {} if args.timeline else None
+    compiles0 = fleet.compile_count()
+
     cache = workloads.TraceCache(use_disk=not args.no_trace_cache_disk)
     print(f"sweep: {len(points)} cells on a 1/{args.scale} drive "
           f"({cfg.capacity_gb:.1f} GB, SLC cache "
           f"{cfg.slc_cap_pages * cfg.num_planes} pages)")
     group_timings = []
-    results = run_sweep(cfg, points, max_ops=args.max_ops,
-                        progress=lambda s: print(f"  {s}"),
-                        trace_cache=cache, timings=group_timings)
+    with (tracer.activate() if tracer else contextlib.nullcontext()):
+        results = run_sweep(cfg, points, max_ops=args.max_ops,
+                            progress=lambda s: print(f"  {s}"),
+                            trace_cache=cache, timings=group_timings,
+                            timeline_ops=args.timeline,
+                            timelines=timelines)
+        overhead = None
+        if args.timeline_overhead_check:
+            # warm-vs-warm: the main run above compiled the telemetry-on
+            # programs; one off-pass compiles the off-programs, then both
+            # modes are timed warm — INTERLEAVED off/on pairs, median of
+            # 3, because background load drifts on the scale of one
+            # sweep pass and sequential one-shot timings alias that
+            # drift straight into the ratio
+            run_sweep(cfg, points, max_ops=args.max_ops, trace_cache=cache)
+            offs, ons = [], []
+            for _ in range(3):
+                with span("overhead.off-warm", "bench") as rec_off:
+                    run_sweep(cfg, points, max_ops=args.max_ops,
+                              trace_cache=cache)
+                with span("overhead.on-warm", "bench") as rec_on:
+                    run_sweep(cfg, points, max_ops=args.max_ops,
+                              trace_cache=cache,
+                              timeline_ops=args.timeline)
+                offs.append(rec_off["dur_s"])
+                ons.append(rec_on["dur_s"])
+            off_med = sorted(offs)[1]
+            on_med = sorted(ons)[1]
+            overhead = {
+                "off_warm_s": round(off_med, 4),
+                "on_warm_s": round(on_med, 4),
+                "pairs": 3,
+                "ratio": round(on_med / max(off_med, 1e-9), 4)}
+            print(f"  timeline overhead: off {overhead['off_warm_s']:.2f}s "
+                  f"-> on {overhead['on_warm_s']:.2f}s warm, median of "
+                  f"{overhead['pairs']} (ratio {overhead['ratio']:.3f})")
     cstats = cache.stats()
     print(f"  trace cache: {cstats['hits']} hit(s), "
           f"{cstats['misses']} miss(es)")
     disp = sum(g["dispatch_s"] for g in group_timings)
     blk = sum(g["block_s"] for g in group_timings)
+    fleet_compiles = fleet.compile_count() - compiles0
     print(f"  async dispatch: {len(group_timings)} group(s), "
-          f"{disp:.2f}s dispatching, {blk:.2f}s blocked on results")
+          f"{disp:.2f}s dispatching, {blk:.2f}s blocked on results, "
+          f"{fleet_compiles} fleet compile(s)")
 
     _print_table(results)
 
@@ -322,6 +392,7 @@ def main(argv=None) -> int:
                "max_ops": args.max_ops, "scale": args.scale,
                "trace_cache": cstats,
                "group_timings": group_timings,
+               "fleet_compiles": fleet_compiles,
                "results": results,
                "geomeans": {f"{m}/{p}": v for (m, p), v in
                             policy_geomeans(results).items()}}
@@ -349,11 +420,45 @@ def main(argv=None) -> int:
               f"{bench['max_rel_diff']:.2e})")
         payload["fleet_vs_loop"] = {k: v for k, v in bench.items()
                                     if k != "results"}
+    if args.timeline:
+        cells = {pt.key: tmod.series(tl)
+                 for pt, tl in sorted(timelines.items(),
+                                      key=lambda kv: kv[0].key)}
+        _print_cliff_table(cells)
+        tl_doc = timeline_payload(
+            cells, window_ops=args.timeline, tracer=tracer,
+            extra={"grid": args.grid or "custom", "max_ops": args.max_ops,
+                   "scale": args.scale, "fleet_compiles": fleet_compiles,
+                   **({"overhead": overhead} if overhead else {})})
+        if not args.no_save:
+            tl_name = (f"{args.name}_timeline" if args.name
+                       else "timeline")
+            tl_path = save_bench(tl_name, tl_doc, directory=args.out_dir,
+                                 cfg=cfg)
+            print(f"wrote {tl_path}")
+    if args.chrome_trace:
+        print(f"wrote {chrome_trace(tracer.to_json(), args.chrome_trace)}")
     if not args.no_save:
         name = args.name or f"sweep_{args.grid or 'custom'}"
         path = save_bench(name, payload, directory=args.out_dir, cfg=cfg)
         print(f"\nwrote {path}")
     return 0
+
+
+def _print_cliff_table(cells) -> None:
+    print("\n=== timeline: performance-cliff detection (DESIGN.md §11) ===")
+    rows = [(k, s["cliff"]) for k, s in cells.items()
+            if s["cliff"]["detected"]]
+    if rows:
+        print(f"{'cell':<40}{'window':>7}{'ratio':>8}{'steady':>9}"
+              f"{'t_ops':>9}{'recov':>8}")
+        for key, c in rows:
+            recov = ("" if c["recovery_slope"] is None
+                     else f"{c['recovery_slope']:>8.3f}")
+            print(f"{key:<40}{c['window']:>7}{c['ratio']:>8.2f}"
+                  f"{c['steady_lat_ms']:>9.3f}"
+                  f"{c['time_to_cliff_ops']:>9}{recov}")
+    print(f"  cliffs: {len(rows)}/{len(cells)} cell(s)")
 
 
 def _run_search(args, cfg, seed: int) -> int:
@@ -389,11 +494,18 @@ def _run_search(args, cfg, seed: int) -> int:
           f"{len(group_candidates(space))} composition group(s), "
           f"{len(rounds)} round(s) on a 1/{args.scale} drive")
     cache = workloads.TraceCache(use_disk=not args.no_trace_cache_disk)
-    tune = successive_halving(
-        cfg, space, rounds, seed=seed, keep_frac=sched["keep_frac"],
-        min_keep=sched["min_keep"], cell_bucket=sched["cell_bucket"],
-        trace_cache=cache, progress=lambda s: print(f"  {s}"))
+    import contextlib
+
+    from repro.telemetry import Tracer, chrome_trace
+    tracer = Tracer() if args.chrome_trace else None
+    with (tracer.activate() if tracer else contextlib.nullcontext()):
+        tune = successive_halving(
+            cfg, space, rounds, seed=seed, keep_frac=sched["keep_frac"],
+            min_keep=sched["min_keep"], cell_bucket=sched["cell_bucket"],
+            trace_cache=cache, progress=lambda s: print(f"  {s}"))
     doc = tune.to_json()
+    if args.chrome_trace:
+        print(f"wrote {chrome_trace(tracer.to_json(), args.chrome_trace)}")
     print("\n=== search rounds (survivors / compiles per round) ===")
     print(search_rounds_table(tune.rounds))
     print("\n=== Pareto front: lat/waf/tbw vs declared baselines ===")

@@ -29,7 +29,6 @@ engine-built step with the same traced params.
 """
 from __future__ import annotations
 
-import time
 from collections import defaultdict
 from typing import Dict, Iterable, List, Optional, Sequence
 
@@ -47,6 +46,7 @@ from repro.core.ssd.endurance.spec import EnduranceSpec
 from repro.core.ssd.policies import get_spec, requires_endurance
 from repro.core.ssd.sim import default_params
 from repro.sweep.grid import SweepPoint
+from repro.telemetry.spans import span
 
 __all__ = ["run_sweep", "run_matrix", "bench_fleet_vs_loop"]
 
@@ -94,7 +94,9 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
               trace_cache: Optional[workloads.TraceCache] = None,
               timings: Optional[List[Dict]] = None,
               max_pending: Optional[int] = None,
-              cell_bucket: Optional[int] = None
+              cell_bucket: Optional[int] = None,
+              timeline_ops: Optional[int] = None,
+              timelines: Optional[Dict] = None
               ) -> Dict[SweepPoint, Dict[str, float]]:
     """Run every sweep point batched; returns {point: metrics}.
 
@@ -114,7 +116,15 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
     groups land in the same bucket reuse one compilation even when the
     exact cell count drifts — the search engine (repro.search) relies on
     this for compile-free knob-refinement rounds. Padded cells replay the
-    last real cell and are dropped from results either way."""
+    last real cell and are dropped from results either way.
+    `timeline_ops` attaches the in-scan telemetry probe (DESIGN.md §11)
+    to every fleet with that window size; pass a dict as `timelines` to
+    receive each point's raw per-window accumulators ({point: numpy
+    timeline dict}, feed to `telemetry.timeline.series`). Per-group
+    wall-clocks are measured through `telemetry.spans` — install a Tracer
+    to collect the sweep's span tree; `timings` keeps working without
+    one. Each timings row also carries `compiles`: how many fresh fleet
+    compilations that group's dispatch triggered."""
     import jax
 
     n_logical = _n_logical(cfg)
@@ -168,9 +178,15 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
     results: Dict[SweepPoint, Dict[str, float]] = {}
 
     def drain(grp) -> None:
-        t0 = time.perf_counter()
-        summ = {k: np.asarray(v) for k, v in grp["summ"].items()}
-        block_s = time.perf_counter() - t0
+        with span("sweep.block", "sweep", group=grp["names"],
+                  mode=grp["mode"]) as rec:
+            summ = {k: np.asarray(v) for k, v in grp["summ"].items()}
+            if timelines is not None and grp["tl"] is not None:
+                from repro.telemetry import timeline as tmod
+                tl_np = tmod.timeline_to_numpy(grp["tl"])
+                for i, pt in enumerate(grp["pts"]):
+                    timelines[pt] = tmod.cell_timeline(tl_np, i)
+        block_s = rec["dur_s"]
         for i, pt in enumerate(grp["pts"]):
             out = {k: float(v[i]) for k, v in summ.items()}
             out["n_ops"] = grp["n_ops"][i]
@@ -182,7 +198,8 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
                 "cells": len(grp["pts"]), "pad": grp["pad"],
                 "t_len": grp["t_len"],
                 "dispatch_s": round(grp["dispatch_s"], 4),
-                "block_s": round(block_s, 4)})
+                "block_s": round(block_s, 4),
+                "compiles": grp["compiles"]})
 
     # ---- phase 1: dispatch every group (async — results are futures) ----
     pending = []
@@ -207,21 +224,26 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
             progress(f"fleet {names}/{mode}: {n_cells} cells"
                      f"{f' (+{pad} pad)' if pad else ''} x {_t_len} ops"
                      f" on {n_dev} device(s)")
-        t0 = time.perf_counter()
-        ops = fleet.shard_cells(fleet.stack_ops(traces))
-        stacked = fleet.shard_cells(fleet.stack_params(params))
-        latency, states = fleet.run_fleet(
-            cfg, spec, ops, stacked,
-            closed_loop=(mode == "bursty"), n_logical=n_logical)
-        if mode == "daily":
-            states = fleet.flush_fleet(cfg, states, spec)
-        summ = fleet.summarize_fleet(latency, ops["is_write"], states,
-                                     params=stacked, cfg=cfg)
-        dispatch_s = time.perf_counter() - t0
+        c0 = fleet.compile_count()
+        with span("sweep.dispatch", "sweep", group=names, mode=mode,
+                  cells=n_cells, t_len=_t_len) as rec:
+            ops = fleet.shard_cells(fleet.stack_ops(traces))
+            stacked = fleet.shard_cells(fleet.stack_params(params))
+            latency, states = fleet.run_fleet(
+                cfg, spec, ops, stacked,
+                closed_loop=(mode == "bursty"), n_logical=n_logical,
+                timeline_ops=timeline_ops)
+            if mode == "daily":
+                states = fleet.flush_fleet(cfg, states, spec)
+            summ = fleet.summarize_fleet(latency, ops["is_write"], states,
+                                         params=stacked, cfg=cfg)
+            rec["args"]["compiles"] = fleet.compile_count() - c0
         pending.append({"pts": pts, "n_ops": [t["n_ops"] for t in traces],
                         "summ": summ, "names": names, "mode": mode,
                         "spec": spec, "t_len": _t_len, "pad": pad,
-                        "dispatch_s": dispatch_s})
+                        "dispatch_s": rec["dur_s"],
+                        "compiles": rec["args"]["compiles"],
+                        "tl": states.timeline})
 
     # ---- phase 2: block on each group's results, oldest first ----
     for grp in pending:
@@ -260,21 +282,21 @@ def bench_fleet_vs_loop(cfg: SSDConfig, *,
     # memory-only cache: the published speedup must be hermetic, not a
     # function of whatever the disk cache happens to hold from prior runs
     cache = workloads.TraceCache(use_disk=False)
-    t0 = time.perf_counter()
-    fleet_res = run_matrix(cfg, policies=policies, modes=modes, names=names,
-                           trace_cache=cache)
-    fleet_s = time.perf_counter() - t0
+    with span("bench.fleet", "bench") as rec:
+        fleet_res = run_matrix(cfg, policies=policies, modes=modes,
+                               names=names, trace_cache=cache)
+    fleet_s = rec["dur_s"]
 
-    t0 = time.perf_counter()
-    loop_res = {}
-    for mode in modes:
-        for name in names:
-            for policy in policies:
-                if progress:
-                    progress(f"loop {name}/{mode}/{policy}")
-                loop_res[f"{name}/{mode}/{policy}"] = eval_cell(
-                    cfg, name, policy, mode)
-    loop_s = time.perf_counter() - t0
+    with span("bench.loop", "bench") as rec:
+        loop_res = {}
+        for mode in modes:
+            for name in names:
+                for policy in policies:
+                    if progress:
+                        progress(f"loop {name}/{mode}/{policy}")
+                    loop_res[f"{name}/{mode}/{policy}"] = eval_cell(
+                        cfg, name, policy, mode)
+    loop_s = rec["dur_s"]
 
     max_rel = 0.0
     for key, ref in loop_res.items():

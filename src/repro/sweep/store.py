@@ -10,6 +10,8 @@ from __future__ import annotations
 import json
 import os
 import platform
+import subprocess
+import tempfile
 import time
 from typing import Dict, Optional
 
@@ -18,11 +20,26 @@ __all__ = ["save_bench", "load_bench", "list_benches"]
 SCHEMA_VERSION = 1
 
 
+def _git_sha() -> Optional[str]:
+    """Best-effort commit SHA of the working tree (None outside a repo /
+    without git) — ties every BENCH artifact to the code that produced it."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
 def _run_meta() -> Dict:
     import jax
     return {
         "schema_version": SCHEMA_VERSION,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "git_sha": _git_sha(),
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
@@ -53,9 +70,23 @@ def save_bench(name: str, payload: Dict, *, directory: str = ".",
                               for k, v in payload["results"].items()}
     doc.update(payload)
     path = os.path.join(directory, f"BENCH_{name}.json")
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=1, sort_keys=True)
-        f.write("\n")
+    os.makedirs(directory, exist_ok=True)
+    # atomic: concurrent writers (parallel sweeps / CI shards targeting the
+    # same directory) each land a complete document — last writer wins,
+    # no interleaved/truncated JSON
+    fd, tmp = tempfile.mkstemp(dir=directory, prefix=f".BENCH_{name}.",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
     return path
 
 

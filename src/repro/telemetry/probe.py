@@ -1,0 +1,194 @@
+"""In-scan probe engine: windowed telemetry for the simulator's
+`lax.scan` (DESIGN.md §11).
+
+`TimelineState` rides the scan carry as an optional trailing `SimState`
+field — exactly the endurance `wear` pattern: `None` means *statically
+absent* (jax treats None as an empty pytree), so telemetry-off carries
+keep the seed pytree structure and the golden bit-identity contract is
+untouched. Telemetry-on is observation-only by construction: the probe
+reads values the step already computed (latency, counter vector,
+occupancy deltas, idle budgets, wear cycles) and writes only into its own
+accumulators, so enabling it never changes latencies, counters or state
+(asserted in tests/test_telemetry.py).
+
+Cost model — the probe must stay cheap inside a per-op scan step, so it
+never scatters into per-window arrays from inside the scan (a dynamic
+window-indexed scatter per op costs ~25-40% of the whole step on CPU).
+Instead it splits the work:
+
+* in-scan: one running accumulator in the carry (`occ_pages` — cache
+  residency is the only series that genuinely needs sequential
+  integration) plus a narrow per-op row — occupancy fraction, idle
+  claim, and the step's own cumulative counter vector — emitted through
+  the scan's *output* path (a contiguous store, the same mechanism that
+  already emits per-op latency);
+* post-scan, same jit: `windowed(...)` recovers per-window counter
+  deltas by differencing the cumulative counter columns at window
+  boundaries (telescoping — summing the windows reproduces the final
+  totals *exactly*), takes boundary snapshots for the monotone wear
+  series, and derives everything else — ops/writes/latency sums,
+  last-arrival times, the write-latency histogram — from the latency
+  output and op inputs the scan sees anyway, as vectorized window
+  reductions.
+
+Windowing is positional — window = `op_index // window_ops` over the
+*padded* trace — so it is jit-stable (static shapes: `n_windows` derives
+from the padded length) and vmap/fleet-safe (every cell of a stacked
+fleet windows identically; trailing pad ops contribute nothing).
+`window_ops` itself stays a traced scalar: only the window *count* (a
+shape) keys compilation.
+
+The windowed product (`WindowedTimeline`) replaces the carry probe in
+`SimState.timeline` once the scan returns; host-side analysis
+(`telemetry.timeline`) consumes it as plain numpy.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TimelineState", "WindowedTimeline", "LAT_EDGES_MS",
+           "N_LAT_BUCKETS", "init_timeline", "accumulate", "windowed",
+           "n_windows", "ROW_OCC", "ROW_IDLE", "ROW_WEAR"]
+
+# static histogram bucket edges (ms), quarter-decade-ish log spacing from
+# below the cheapest write (SLC program 0.5 ms) to far past any realistic
+# queueing delay; bucket b covers [edges[b-1], edges[b])
+LAT_EDGES_MS = np.array([0.25 * 2.0 ** (k / 2.0) for k in range(28)],
+                        dtype=np.float32)          # 0.25 .. ~2896 ms
+N_LAT_BUCKETS = LAT_EDGES_MS.size + 1
+
+# emitted-row head layout: occupancy fraction, idle claim, then — only
+# under endurance tracking — the serviced plane's wear cycles; the
+# step's C counter totals travel alongside as a second, untouched leaf
+ROW_OCC, ROW_IDLE, ROW_WEAR = 0, 1, 2
+
+
+class TimelineState(NamedTuple):
+    """The probe's scan carry: the one accumulator that genuinely needs
+    sequential integration (everything per-window is recovered post-scan
+    by `windowed`). All leaves traced scalars — no per-window arrays
+    ride the carry."""
+    window_ops: jnp.ndarray    # () i32 — ops per window (traced)
+    occ_pages: jnp.ndarray     # () f32 — running pages resident in the
+    #                            SLC cache (basic + traditional regions)
+
+
+class WindowedTimeline(NamedTuple):
+    """Per-window series, built by `windowed` after the scan. Shapes —
+    (W,) / (W, B) / (W, C) — are static, fixed by (padded length,
+    window_ops)."""
+    window_ops: jnp.ndarray    # () i32 — ops per window
+    ops: jnp.ndarray           # (W,) f32 — non-pad ops per window
+    writes: jnp.ndarray        # (W,) f32 — host writes per window
+    lat_sum: jnp.ndarray       # (W,) f32 — sum of write latencies (ms)
+    lat_hist: jnp.ndarray      # (W, B) f32 — write-latency histogram
+    occ_sum: jnp.ndarray       # (W,) f32 — sum of cache-occupancy fracs
+    idle_ms: jnp.ndarray       # (W,) f32 — idle budget claimed
+    t_last: jnp.ndarray        # (W,) f32 — last arrival time seen (ms)
+    ctr: jnp.ndarray           # (W, C) f32 — per-window counter deltas
+    wear_peak: jnp.ndarray = None  # (W,) f32 — peak effective cycles on
+    #                            the serviced plane; None (statically
+    #                            absent) unless endurance tracking is on
+
+
+def n_windows(t_len: int, window_ops: int) -> int:
+    """Static window count for a padded trace length."""
+    if window_ops <= 0:
+        raise ValueError(f"window_ops must be positive, got {window_ops}")
+    return max(1, math.ceil(t_len / window_ops))
+
+
+def init_timeline(window_ops: int) -> TimelineState:
+    """Fresh probe carry for `window_ops`-sized windows."""
+    return TimelineState(
+        window_ops=jnp.int32(window_ops),
+        occ_pages=jnp.float32(0.0),
+    )
+
+
+def accumulate(tl: TimelineState, *, is_pad, counters, occ_delta,
+               cap_pages, idle_claim,
+               wear=None) -> Tuple[TimelineState, jnp.ndarray]:
+    """One op's contribution: returns (updated carry, emitted row).
+
+    Called by the engine's shared step section with values the step
+    already computed — observation only, nothing feeds back into the
+    simulation. The row travels through the scan's output path;
+    `windowed` turns the stacked rows into per-window series.
+
+    is_pad: pad predicate; counters: the step's NEW counter vector
+    (cumulative by nature — windows come from boundary differences); it
+    rides the emitted row as its own pytree leaf, untouched, so it
+    costs the scan no arithmetic at all. occ_delta: this step's change
+    in cache-resident pages on the serviced plane (the only plane a
+    step mutates); cap_pages: total cache capacity in pages (basic +
+    boost + traditional, all planes); idle_claim: device idle budget
+    the serviced plane consumed; wear: the serviced plane's effective
+    P/E cycles (monotone — pass exactly when endurance tracking is on;
+    it appends a head column)."""
+    occ_pages = tl.occ_pages + occ_delta
+    occ_frac = occ_pages / jnp.maximum(cap_pages, 1.0)
+    cols = [jnp.where(is_pad, 0.0, occ_frac),
+            jnp.maximum(idle_claim, 0.0)]
+    if wear is not None:
+        cols.append(wear)
+    new_tl = TimelineState(window_ops=tl.window_ops, occ_pages=occ_pages)
+    return new_tl, (jnp.stack(cols), counters)
+
+
+def windowed(rows, latency: jnp.ndarray, is_write: jnp.ndarray,
+             arrival: jnp.ndarray, *, window_ops: int, t_len: int,
+             endurance: bool = False) -> WindowedTimeline:
+    """Stacked per-op rows — the (head (T, 2|3), counters (T, C)) pair
+    the probe emits — -> per-window series (post-scan, same jit;
+    vmap-safe for fleet cells).
+
+    Counter series come from differencing the cumulative counter leaf at
+    window boundaries — telescoping, so summing the per-window deltas
+    reproduces the final totals exactly. The wear series takes the
+    boundary snapshot (plane cycles are monotone). Everything else —
+    ops/writes/latency sums, last arrivals, the latency histogram — is a
+    vectorized window reduction over the scan's latency output and the
+    op input arrays (`is_write`, `arrival`). All arguments after the
+    arrays are static (`window_ops` fixes the reduction shapes — it is
+    a static argument of run_trace/_run_fleet already)."""
+    head, ctr_rows = rows
+    wo = int(window_ops)
+    W = n_windows(t_len, wo)
+    pad = W * wo - t_len
+
+    def _win(x, red="sum"):
+        x = jnp.pad(x, (0, pad)).reshape(W, wo)
+        return x.sum(axis=1) if red == "sum" else x.max(axis=1)
+
+    live = (is_write >= 0).astype(jnp.float32)      # pads are < 0
+    wf = (is_write == 1).astype(jnp.float32)
+
+    bound = jnp.minimum((jnp.arange(W, dtype=jnp.int32) + 1) * wo - 1,
+                        t_len - 1)
+    snap = ctr_rows[bound]                          # (W, C)
+    prev = jnp.concatenate([jnp.zeros((1, ctr_rows.shape[1]),
+                                      ctr_rows.dtype), snap[:-1]])
+
+    bucket = jnp.searchsorted(jnp.asarray(LAT_EDGES_MS), latency,
+                              side="right").astype(jnp.int32)
+    win = jnp.arange(t_len, dtype=jnp.int32) // wo
+    hist = jnp.zeros(W * N_LAT_BUCKETS, jnp.float32).at[
+        win * N_LAT_BUCKETS + bucket].add(wf).reshape(W, N_LAT_BUCKETS)
+
+    return WindowedTimeline(
+        window_ops=jnp.int32(wo),
+        ops=_win(live),
+        writes=_win(wf),
+        lat_sum=_win(wf * latency),
+        lat_hist=hist,
+        occ_sum=_win(head[:, ROW_OCC]),
+        idle_ms=_win(head[:, ROW_IDLE]),
+        t_last=_win(live * arrival, "max"),
+        ctr=snap - prev,
+        wear_peak=head[bound, ROW_WEAR] if endurance else None,
+    )

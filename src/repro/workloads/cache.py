@@ -255,16 +255,21 @@ class TraceCache:
     def get_or_build(self, recipe: Mapping,
                      builder: Callable[[], Dict]) -> Dict:
         """Memoized compiled op dict for `recipe`; `builder` runs on miss."""
+        from repro.telemetry.spans import event, span
         key = self.key(recipe)
         if key in self._mem:
             self.hits += 1
+            event("trace.cache-hit", "workload", level="mem", key=key)
             return self._mem[key]
         ops = self._load_disk(key) if self.use_disk else None
         if ops is not None:
             self.hits += 1
+            event("trace.cache-hit", "workload", level="disk", key=key)
         else:
             self.misses += 1
-            ops = builder()
+            with span("trace.build", "workload", key=key,
+                      spec=str(recipe.get("spec", ""))):
+                ops = builder()
             if self.use_disk:
                 self._store_disk(key, ops)
         self._mem[key] = ops

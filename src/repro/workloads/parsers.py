@@ -311,9 +311,12 @@ def load_trace(path: str, mode: str = "daily",
     Addresses are taken mod `total_logical_pages` (the simulator's
     compressed logical window); `mode="bursty"` applies the paper's
     bursty rewrite; `max_ops` truncates after page expansion."""
-    req = parse_requests(path, fmt)
-    tr = ir.trace_from_requests(req, mode, total_logical_pages,
-                                f"file:{os.path.basename(path)}")
+    from repro.telemetry.spans import span
+    with span("trace.parse", "workload",
+              file=os.path.basename(path), mode=mode):
+        req = parse_requests(path, fmt)
+        tr = ir.trace_from_requests(req, mode, total_logical_pages,
+                                    f"file:{os.path.basename(path)}")
     if max_ops is not None:
         tr = tr.truncate(max_ops)
     return tr

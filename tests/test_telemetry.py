@@ -1,0 +1,262 @@
+"""Telemetry engine tests (DESIGN.md §11).
+
+The load-bearing contract: the in-scan probe is OBSERVATION ONLY —
+enabling `timeline_ops` must leave every latency, counter, and state
+field bit-identical to a telemetry-off run, for all paper policies in
+both replay modes, single-cell and fleet-batched. On top of that, the
+windowed series must conserve: per-window counter deltas sum exactly to
+the final counters, windowed write counts match the trace, and the
+latency histogram holds every write. Cliff detection, percentile
+recovery, span tracing, and the atomic BENCH store ride along as pure
+host-side units.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs.ssd_paper import PAPER_SSD
+from repro.core.ssd import fleet
+from repro.core.ssd.driver import _agc_waste_p
+from repro.core.ssd.sim import default_params, run_trace
+from repro.core.ssd.workloads import make_trace, stack_traces, truncate_trace
+from repro.telemetry import (Tracer, active_tracer, cell_timeline,
+                             detect_cliff, event, percentile, series, span,
+                             timeline_to_numpy)
+from repro.telemetry.probe import LAT_EDGES_MS, n_windows
+
+CFG = PAPER_SSD.scaled(128)
+N_LOGICAL = min(CFG.total_pages, 1 << 16)
+MAX_OPS = 8192
+WINDOW = 512
+POLICIES = ["baseline", "ips", "coop", "ips_agc"]
+
+
+def _trace(mode, name="hm_0"):
+    return truncate_trace(
+        make_trace(name, N_LOGICAL, mode=mode,
+                   capacity_pages=CFG.total_pages), MAX_OPS)
+
+
+@pytest.fixture(scope="module", params=["bursty", "daily"])
+def mode(request):
+    return request.param
+
+
+class TestProbeBitIdentity:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_off_vs_on_identical(self, mode, policy):
+        """Telemetry on == telemetry off, bit for bit, on every output
+        the simulation produces (the probe only APPENDS the timeline)."""
+        tr = _trace(mode)
+        cl = mode == "bursty"
+        lat0, st0 = run_trace(CFG, policy, tr, closed_loop=cl,
+                              n_logical=N_LOGICAL)
+        lat1, st1 = run_trace(CFG, policy, tr, closed_loop=cl,
+                              n_logical=N_LOGICAL, timeline_ops=WINDOW)
+        assert np.array_equal(np.asarray(lat0), np.asarray(lat1))
+        assert st0.timeline is None and st1.timeline is not None
+        for field in st0._fields:
+            if field == "timeline":
+                continue
+            v0 = getattr(st0, field)
+            if v0 is None:
+                assert getattr(st1, field) is None
+                continue
+            assert np.array_equal(np.asarray(v0),
+                                  np.asarray(getattr(st1, field))), field
+
+
+class TestWindowConservation:
+    def test_counters_and_histogram_conserve(self, mode):
+        """Per-window counter deltas telescope exactly to the final
+        counters; windowed op/write counts match the trace; the latency
+        histogram holds one entry per write; windowed latency sums add
+        up to the scan's own latency output."""
+        tr = _trace(mode)
+        lat, st = run_trace(CFG, "baseline", tr,
+                            closed_loop=(mode == "bursty"),
+                            n_logical=N_LOGICAL, timeline_ops=WINDOW)
+        tl = st.timeline
+        is_w = np.asarray(tr["is_write"])
+        assert np.array_equal(
+            np.asarray(tl.ctr).sum(axis=0).astype(np.float32),
+            np.asarray(st.counters))
+        assert np.asarray(tl.ops).sum() == (is_w >= 0).sum()
+        assert np.asarray(tl.writes).sum() == (is_w == 1).sum()
+        assert np.asarray(tl.lat_hist).sum() == (is_w == 1).sum()
+        wlat = np.where(is_w == 1, np.asarray(lat), 0.0)
+        assert np.isclose(np.asarray(tl.lat_sum).sum(), wlat.sum(),
+                          rtol=1e-5)
+
+    def test_fleet_cells_match_single_cell(self, mode):
+        """Every fleet cell's timeline == the single-cell run's, leaf
+        for leaf (windowing is positional, so stacking is transparent)."""
+        names = ("hm_0", "hm_1")
+        _, traces = stack_traces(names, N_LOGICAL, mode=mode,
+                                 capacity_pages=CFG.total_pages,
+                                 max_ops=MAX_OPS)
+        waste = [_agc_waste_p(n) for n in names]
+        params = fleet.stack_params(
+            [default_params(CFG, "ips", w) for w in waste])
+        cl = mode == "bursty"
+        lat_f, st_f = fleet.run_fleet(CFG, "ips", fleet.stack_ops(traces),
+                                      params, closed_loop=cl,
+                                      n_logical=N_LOGICAL,
+                                      timeline_ops=WINDOW)
+        tl_np = timeline_to_numpy(st_f.timeline)
+        for i, (tr, w) in enumerate(zip(traces, waste)):
+            lat_r, st_r = run_trace(CFG, "ips", tr, closed_loop=cl,
+                                    n_logical=N_LOGICAL, waste_p=w,
+                                    timeline_ops=WINDOW)
+            assert np.array_equal(np.asarray(lat_f[i]), np.asarray(lat_r))
+            ref = timeline_to_numpy(st_r.timeline)
+            cell = cell_timeline(tl_np, i)
+            for k in ref:
+                if k == "window_ops":
+                    assert int(cell[k]) == int(ref[k])
+                    continue
+                assert np.array_equal(cell[k], ref[k]), k
+
+    def test_window_count_shape(self):
+        tr = _trace("bursty")
+        t_len = int(np.asarray(tr["lba"]).shape[0])
+        _, st = run_trace(CFG, "baseline", tr, closed_loop=True,
+                          n_logical=N_LOGICAL, timeline_ops=WINDOW)
+        assert np.asarray(st.timeline.ops).shape == \
+            (n_windows(t_len, WINDOW),)
+
+
+class TestSeries:
+    def test_series_schema_and_percentiles(self):
+        tr = _trace("bursty")
+        _, st = run_trace(CFG, "baseline", tr, closed_loop=True,
+                          n_logical=N_LOGICAL, timeline_ops=WINDOW)
+        s = series(timeline_to_numpy(st.timeline))
+        for k in ("window_ops", "n_windows", "ops", "writes",
+                  "lat_mean_ms", "lat_p50_ms", "lat_p99_ms", "occ_frac",
+                  "free_frac", "waf", "idle_ms", "t_end_ms", "host_w",
+                  "slc_w", "tlc_w", "rp_w", "mig_w", "erases", "cliff"):
+            assert k in s, k
+        assert s["n_windows"] == len(s["ops"]) > 0
+        # percentiles bracket the mean where defined
+        for p50, p99, mean in zip(s["lat_p50_ms"], s["lat_p99_ms"],
+                                  s["lat_mean_ms"]):
+            if mean is not None:
+                assert p50 <= p99
+        # occupancy is a fraction
+        occ = [v for v in s["occ_frac"] if v is not None]
+        assert occ and all(0.0 <= v <= 1.0 for v in occ)
+
+    def test_percentile_recovers_point_mass(self):
+        """A histogram with all mass in one bucket returns a value inside
+        that bucket for every quantile."""
+        hist = np.zeros((1, LAT_EDGES_MS.size + 1))
+        hist[0, 4] = 100.0                  # [edges[3], edges[4])
+        for q in (0.1, 0.5, 0.99):
+            v = percentile(hist, LAT_EDGES_MS, q)[0]
+            assert LAT_EDGES_MS[3] <= v <= LAT_EDGES_MS[4]
+        assert np.isnan(percentile(np.zeros((1, hist.shape[1])),
+                                   LAT_EDGES_MS, 0.5)[0])
+
+
+class TestCliffDetection:
+    def _series(self, steady, cliff_at, ratio, n=40, sustain_n=10):
+        lat = np.full(n, steady)
+        lat[cliff_at:cliff_at + sustain_n] = steady * ratio
+        return lat, np.full(n, 100.0)
+
+    def test_detects_sustained_jump(self):
+        lat, w = self._series(0.6, 20, 3.0)
+        c = detect_cliff(lat, w, window_ops=512)
+        assert c["detected"] and c["window"] == 20
+        assert c["ratio"] == pytest.approx(3.0, rel=0.05)
+        assert c["time_to_cliff_ops"] == 20 * 512
+
+    def test_ignores_single_window_spike(self):
+        lat, w = self._series(0.6, 20, 3.0, sustain_n=1)
+        assert not detect_cliff(lat, w)["detected"]
+
+    def test_flat_series_has_no_cliff(self):
+        lat, w = self._series(0.6, 0, 1.0)
+        c = detect_cliff(lat, w)
+        assert not c["detected"]
+        assert c["steady_lat_ms"] == pytest.approx(0.6)
+
+    def test_early_cliff_does_not_inflate_steady(self):
+        """A cliff in the earliest windows must not drag the steady
+        reference up with it (steady is clamped by the p25 of all
+        windows)."""
+        lat = np.full(40, 0.6)
+        lat[2:8] = 2.4
+        c = detect_cliff(lat, np.full(40, 100.0))
+        assert c["detected"] and c["window"] == 2
+        assert c["steady_lat_ms"] == pytest.approx(0.6)
+
+    def test_recovery_slope_sign(self):
+        lat = np.full(40, 0.6)
+        lat[10:] = np.linspace(3.0, 1.3, 30) * 0.6
+        c = detect_cliff(lat, np.full(40, 100.0))
+        assert c["detected"] and c["recovery_slope"] < 0
+
+
+class TestSpans:
+    def test_span_nesting_and_totals(self):
+        tr = Tracer()
+        with tr.activate():
+            assert active_tracer() is tr
+            with span("outer", "test", k=1):
+                with span("inner", "test"):
+                    pass
+            event("marker", "test", note="x")
+        assert active_tracer() is None
+        spans = tr.to_json()
+        names = [s["name"] for s in spans]
+        assert names == ["outer", "inner", "marker"]  # opened in order
+        outer = spans[names.index("outer")]
+        inner = spans[names.index("inner")]
+        assert inner["depth"] == outer["depth"] + 1
+        assert inner["parent"] == names.index("outer")
+        assert inner["dur_s"] <= outer["dur_s"]
+        assert tr.totals()["outer"]["count"] == 1
+
+    def test_span_without_tracer_still_times(self):
+        """Module-level span() must yield a record with dur_s filled even
+        when no tracer is active (callers read rec["dur_s"])."""
+        with span("orphan", "test") as rec:
+            pass
+        assert rec["dur_s"] >= 0.0
+
+
+class TestStoreAtomicity:
+    def test_save_bench_atomic_and_concurrent(self, tmp_path):
+        """Concurrent writers to one BENCH path: the survivor must be a
+        complete, parseable document (temp + atomic rename, no torn
+        JSON), and no temp droppings remain."""
+        from repro.sweep.store import load_bench, save_bench
+        payload = {"results": {f"k{i}": {"v": i} for i in range(200)}}
+        errs = []
+
+        def write(n):
+            try:
+                save_bench("atomic", {**payload, "writer": n},
+                           directory=str(tmp_path))
+            except Exception as e:      # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=write, args=(n,))
+                   for n in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        doc = load_bench(str(tmp_path / "BENCH_atomic.json"))
+        assert doc["writer"] in range(8)
+        assert len(doc["results"]) == 200
+        assert doc["meta"]["schema_version"] >= 1
+        assert "git_sha" in doc["meta"]
+        leftovers = [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+        assert leftovers == []

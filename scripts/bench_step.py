@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Single-cell step-engine throughput benchmark (DESIGN.md §12).
+
+Times the three step-engine paths warm over the daily MSR traces, one
+cell at a time (the configuration where the per-op scan's O(n_logical)
+residency traffic dominates):
+
+  per_op     — the seed-identical per-op `lax.scan` (`sim.run_trace`)
+  compressed — event-compressed segment scan (`sim.run_compressed`)
+  packed     — the same plus the int16-packed carry
+
+Ops/s always credits the ORIGINAL padded length T, so pad-tail trimming
+shows up as throughput rather than as shrunk work, and the speedup
+column is directly the wall-clock ratio on identical (bit-identical —
+tests/test_compress.py) simulations.
+
+Writes BENCH_step_throughput.json (schema checked by
+`sweep.store.check_step_throughput`; also the CI gate's input —
+scripts/ci_check.sh runs a truncated version with --min-speedup 3).
+
+Usage:
+  PYTHONPATH=src python scripts/bench_step.py                 # full, 11 traces
+  PYTHONPATH=src python scripts/bench_step.py \
+      --traces hm_0,proj_0 --max-ops 32768 --min-speedup 3    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _time_warm(fn, reps: int) -> float:
+    fn()                                   # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--traces", default=None,
+                    help="comma-separated MSR trace names (default: all)")
+    ap.add_argument("--policy", default="ips_agc")
+    ap.add_argument("--mode", default="daily", choices=("daily", "bursty"))
+    ap.add_argument("--max-ops", type=int, default=None,
+                    help="truncate traces (CI smoke)")
+    ap.add_argument("--scale", type=int, default=128)
+    ap.add_argument("--reps", type=int, default=1,
+                    help="timed repetitions after warmup")
+    ap.add_argument("--out-dir", default=".")
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail unless compressed geomean speedup >= this")
+    args = ap.parse_args(argv)
+
+    import repro.workloads as wl
+    from repro.configs.ssd_paper import PAPER_SSD
+    from repro.core.ssd import sim
+    from repro.core.ssd.policies.state import can_pack, default_cell
+    from repro.core.ssd.policies.registry import resolve_spec
+    from repro.sweep.report import geomean
+    from repro.sweep.runner import _n_logical
+    from repro.sweep.store import check_step_throughput, save_bench
+    from repro.workloads.compress import compress_ops
+
+    cfg = PAPER_SSD.scaled(args.scale)
+    n_logical, capacity = _n_logical(cfg), cfg.total_pages
+    closed = args.mode == "bursty"
+    names = (args.traces.split(",") if args.traces
+             else list(wl.TRACE_NAMES))
+    params = default_cell(cfg, resolve_spec(args.policy))
+
+    traces = {}
+    for name in names:
+        ops = wl.build_ops(name, n_logical, mode=args.mode,
+                           capacity_pages=capacity)
+        if args.max_ops:
+            ops = wl.truncate_trace(ops, args.max_ops)
+        t_len = int(ops["arrival_ms"].shape[0])
+        comp = compress_ops(ops)
+
+        def per_op():
+            lat, st = sim.run_trace(cfg, args.policy, ops,
+                                    closed_loop=closed,
+                                    n_logical=n_logical, params=params)
+            lat.block_until_ready()
+
+        def compressed(packed=False):
+            lat, st = sim.run_compressed(cfg, args.policy, comp,
+                                         closed_loop=closed,
+                                         n_logical=n_logical,
+                                         params=params, packed=packed)
+            lat.block_until_ready()
+
+        pack_ok = can_pack(cfg, n_logical, params)
+        row = {"t_len": t_len, "t_trim": comp.t_trim, "fill": comp.fill,
+               "n_pad": comp.n_pad}
+        for label, fn in (("per_op", per_op),
+                          ("compressed", compressed),
+                          ("packed", (lambda: compressed(True)) if pack_ok
+                           else compressed)):
+            warm = _time_warm(fn, args.reps)
+            row[label] = {"warm_s": round(warm, 4),
+                          "ops_per_s": round(t_len / warm, 1)}
+        row["speedup_compressed"] = round(
+            row["compressed"]["ops_per_s"] / row["per_op"]["ops_per_s"], 2)
+        row["speedup_packed"] = round(
+            row["packed"]["ops_per_s"] / row["per_op"]["ops_per_s"], 2)
+        traces[name] = row
+        print(f"{name:>8}: T={t_len} trim={comp.t_trim} "
+              f"per_op {row['per_op']['ops_per_s'] / 1e6:.3f} -> "
+              f"compressed {row['compressed']['ops_per_s'] / 1e6:.3f} "
+              f"({row['speedup_compressed']:.2f}x) -> packed "
+              f"{row['packed']['ops_per_s'] / 1e6:.3f} Mops/s "
+              f"({row['speedup_packed']:.2f}x)")
+
+    doc = {
+        "policy": args.policy, "mode": args.mode,
+        "max_ops": args.max_ops, "scale": args.scale, "reps": args.reps,
+        "traces": traces,
+        "geomean_speedup": {
+            "compressed": round(geomean(
+                r["speedup_compressed"] for r in traces.values()), 2),
+            "packed": round(geomean(
+                r["speedup_packed"] for r in traces.values()), 2)},
+    }
+    gm = doc["geomean_speedup"]
+    print(f"geomean speedup: compressed {gm['compressed']:.2f}x, "
+          f"packed {gm['packed']:.2f}x")
+    if not args.no_save:
+        path = save_bench("step_throughput", doc, directory=args.out_dir,
+                          cfg=cfg)
+        print(f"saved {path}")
+        check_step_throughput(__import__("json").load(open(path)),
+                              min_speedup=args.min_speedup)
+    elif args.min_speedup:
+        assert gm["compressed"] >= args.min_speedup, (
+            f"compressed geomean speedup {gm['compressed']:.2f}x < "
+            f"{args.min_speedup:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,6 +38,28 @@ echo "== zero-wear bit-identity vs the golden monolith =="
 python -m pytest -q tests/test_endurance.py -k "ZeroWearIdentity"
 
 echo
+echo "== step engine: kernel interpret=True equivalence (DESIGN.md §12) =="
+python -m pytest -q tests/test_compress.py -k "FusedKernel"
+
+echo
+echo "== step engine: throughput smoke (compressed >= 3x per-op) =="
+step_tmp=$(mktemp -d)
+python scripts/bench_step.py --traces hm_0,proj_0 --max-ops 32768 \
+  --min-speedup 3 --out-dir "$step_tmp"
+rm -rf "$step_tmp"
+
+echo
+echo "== step engine: committed BENCH_step_throughput.json schema =="
+python - <<'EOF'
+from repro.sweep.store import check_step_throughput, load_bench
+doc = check_step_throughput(load_bench("BENCH_step_throughput.json"),
+                            min_speedup=3.0)
+gm = doc["geomean_speedup"]
+print(f"step throughput artifact OK: compressed {gm['compressed']}x, "
+      f"packed {gm['packed']}x over {len(doc['traces'])} trace(s)")
+EOF
+
+echo
 echo "== smoke: search engine (tiny budget, 2 rounds, DESIGN.md §10) =="
 search_tmp=$(mktemp -d)
 python -m repro.sweep.cli --search smoke --max-ops 2048 \

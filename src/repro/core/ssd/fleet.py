@@ -30,6 +30,8 @@ implementation.
 from __future__ import annotations
 
 import functools
+import math
+import warnings
 from typing import Sequence
 
 import jax
@@ -38,8 +40,12 @@ import numpy as np
 
 from repro.core.ssd.config import SSDConfig
 from repro.core.ssd.policies import resolve_spec, tracked_region
+from repro.core.ssd.policies.engine import _build_core, reduced_of
 from repro.core.ssd.sim import (CellParams, SimState, flush_cache,
-                                init_state, make_step, summarize)
+                                init_state, make_step, replay_pads,
+                                summarize)
+from repro.telemetry import spans
+from repro.workloads.compress import TRIM_QUANTUM
 
 __all__ = ["stack_params", "stack_ops", "shard_cells", "init_fleet_state",
            "run_fleet", "flush_fleet", "summarize_fleet", "compile_count",
@@ -84,6 +90,15 @@ def shard_cells(tree, devices=None):
         return tree
     n_cells = leaves[0].shape[0]
     if n_cells % n_dev != 0:
+        # the silent path here cost real debugging time: a fleet that
+        # falls back to one device looks merely "slow" — surface it
+        spans.event("fleet.shard_skipped", "fleet", n_cells=n_cells,
+                    n_devices=n_dev, idle_devices=n_dev - 1)
+        warnings.warn(
+            f"shard_cells: {n_cells} cells do not divide {n_dev} devices"
+            f" — running unsharded, {n_dev - 1} device(s) idle (pad the"
+            " cell axis to a cell_quantum() multiple to shard)",
+            RuntimeWarning, stacklevel=2)
         return tree
     mesh = jax.sharding.Mesh(np.array(devices), ("cells",))
     sharding = jax.sharding.NamedSharding(
@@ -92,13 +107,18 @@ def shard_cells(tree, devices=None):
 
 
 def init_fleet_state(cfg: SSDConfig, n_logical: int, n_cells: int, *,
-                     endurance: bool = False, timeline=None) -> SimState:
+                     endurance: bool = False, timeline=None,
+                     packed: bool = False) -> SimState:
     """(C,)-stacked initial SimState (the donated fleet scan carry).
     `timeline` — ops per telemetry window, or None — attaches the
-    per-cell in-scan probe (DESIGN.md §11)."""
+    per-cell in-scan probe (DESIGN.md §11). `packed` carries the integer
+    plane fields int16 (gate on `policies.state.can_pack`; results are
+    bit-identical, the donated carry just shrinks — DESIGN.md §12).
+    The carry dtypes key `_run_fleet`'s jit, so packing needs no static
+    flag of its own."""
     return jax.vmap(
         lambda _: init_state(cfg, n_logical, endurance=endurance,
-                             timeline=timeline))(
+                             timeline=timeline, packed=packed))(
         jnp.arange(n_cells))
 
 
@@ -137,24 +157,69 @@ def cell_quantum(cell_bucket: int | None = None) -> int:
     engine's compile-free knob-refinement contract). Callers pad to a
     multiple of this, replaying the last real cell, and drop the pad from
     results (sweep.runner / search.scenario)."""
-    import math
     n_dev = len(jax.devices())
     return math.lcm(cell_bucket, n_dev) if cell_bucket else n_dev
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "spec", "closed_loop",
+                                             "n_pad"),
+                   donate_argnums=(2,))
+def _run_fleet_trim(cfg: SSDConfig, spec, state0: SimState, ops: dict,
+                    params: CellParams, pad_t, *, closed_loop: bool,
+                    n_pad: int):
+    """The trimmed fleet scan: `ops` hold only the (C, T_trim) prefix;
+    the `n_pad` identical tail pads every cell shares are re-applied to
+    their exact fixed point by `sim.replay_pads` (vmapped — cells
+    converge independently, the batched while_loop holds finished cells
+    in place). Latency for the tail is literal zeros, appended by the
+    caller outside the jit."""
+    def one(cell_state, cell_ops, cell_params, cell_pad_t):
+        step = make_step(cfg, spec, closed_loop=closed_loop,
+                         params=cell_params)
+        final, latency = jax.lax.scan(step, cell_state, cell_ops)
+        core = _build_core(cfg, spec, closed_loop=closed_loop,
+                           params=cell_params)
+        red = replay_pads(core, reduced_of(final), final.loc[0],
+                          final.loc_ep[0], cell_pad_t, n_pad)
+        final = final._replace(
+            busy=red.busy, slc_used=red.slc_used, rp_done=red.rp_done,
+            trad_used=red.trad_used, valid_mig=red.valid_mig,
+            epoch=red.epoch, counters=red.counters, prev_t=red.prev_t,
+            idle_cum=red.idle_cum, idle_seen=red.idle_seen)
+        return latency, final
+
+    return jax.vmap(one)(state0, ops, params, pad_t)
+
+
 def compile_count() -> int:
-    """Fleet-scan compilations so far in this process: the size of the
-    `_run_fleet` jit cache, which is keyed on (cfg, composition, mode) and
-    the stacked (C, T) array shapes. Traced-knob variation (CellParams
-    values, endurance weights/budgets) never grows it. The search engine
-    (repro.search) records per-round deltas of this in BENCH_search.json
-    and asserts knob-only rounds add zero."""
-    return _run_fleet._cache_size()
+    """Fleet-scan compilations so far in this process: the sizes of the
+    `_run_fleet` and `_run_fleet_trim` jit caches, keyed on (cfg,
+    composition, mode) and the stacked (C, T) array shapes — including
+    the carry dtypes, so packed and unpacked fleets compile separately.
+    Traced-knob variation (CellParams values, endurance weights/budgets)
+    never grows it. The search engine (repro.search) records per-round
+    deltas of this in BENCH_search.json and asserts knob-only rounds add
+    zero."""
+    return _run_fleet._cache_size() + _run_fleet_trim._cache_size()
+
+
+def _trim_len(is_write: np.ndarray, quantum: int = TRIM_QUANTUM) -> int:
+    """Shared scannable prefix of a stacked (C, T) fleet: the largest
+    per-cell live count, rounded up to `quantum` so drifting live counts
+    share compiled shapes. Beyond it every cell holds only its identical
+    tail pads (`ir.pad_ops` appends pads tail-only)."""
+    live = is_write >= 0
+    t_len = is_write.shape[1]
+    any_live = live.any(axis=1)
+    last = t_len - np.argmax(live[:, ::-1], axis=1)
+    n_live = int(np.max(np.where(any_live, last, 0), initial=1))
+    return min(-(-n_live // quantum) * quantum, t_len)
 
 
 def run_fleet(cfg: SSDConfig, policy, ops: dict, params: CellParams,
               *, closed_loop: bool, n_logical: int,
-              timeline_ops: int | None = None):
+              timeline_ops: int | None = None, trim_pads: bool = False,
+              packed: bool = False):
     """Simulate a whole (composition, mode) fleet in one compiled scan.
 
     ops: (C, T) stacked op tensors from `stack_ops`; params: (C,)-stacked
@@ -163,12 +228,37 @@ def run_fleet(cfg: SSDConfig, policy, ops: dict, params: CellParams,
     initial state is donated to the scan (see module docstring).
     `timeline_ops` attaches the per-cell telemetry probe (DESIGN.md §11);
     every cell windows identically over the shared padded length, so the
-    final state's `timeline` leaves stack along C like any other field."""
+    final state's `timeline` leaves stack along C like any other field.
+
+    Raw-speed knobs (DESIGN.md §12), both default-off so existing callers
+    — notably the search engine's compile-count contract — see no change:
+    `trim_pads` scans only the shared live prefix and replays the all-pad
+    tail to its exact fixed point (skipped automatically for telemetry
+    runs, whose positional windows are defined over the full padded
+    length, and for endurance runs, where tail reclamation keeps erasing
+    into the wear state); `packed` shrinks the donated carry to int16
+    plane fields (gate on `policies.state.can_pack`). Results are
+    bit-identical either way (tests/test_compress.py)."""
     spec = resolve_spec(policy)
     n_cells = ops["lba"].shape[0]
+    endurance = params.endurance is not None
+    if trim_pads and timeline_ops is None and not endurance:
+        is_w = np.asarray(ops["is_write"])
+        t_len = is_w.shape[1]
+        t_trim = _trim_len(is_w)
+        if t_trim < t_len:
+            state0 = shard_cells(init_fleet_state(
+                cfg, n_logical, n_cells, packed=packed))
+            ops_trim = {k: v[:, :t_trim] for k, v in ops.items()}
+            pad_t = jnp.asarray(ops["arrival_ms"][:, t_trim], jnp.float32)
+            latency, final = _run_fleet_trim(
+                cfg, spec, state0, ops_trim, params, pad_t,
+                closed_loop=closed_loop, n_pad=t_len - t_trim)
+            latency = jnp.pad(latency, ((0, 0), (0, t_len - t_trim)))
+            return latency, final
     state0 = shard_cells(init_fleet_state(
-        cfg, n_logical, n_cells, endurance=params.endurance is not None,
-        timeline=timeline_ops))
+        cfg, n_logical, n_cells, endurance=endurance,
+        timeline=timeline_ops, packed=packed))
     return _run_fleet(cfg, spec, state0, ops, params,
                       closed_loop=closed_loop, timeline_ops=timeline_ops)
 

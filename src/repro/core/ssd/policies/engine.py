@@ -23,12 +23,43 @@ additionally account P/E events into `SimState.wear`, reads pay the
 retention penalty, and the gated mechanism's reliability gate becomes
 live. Without it the assembled step is exactly the seed computation.
 
+Step-engine split (DESIGN.md §12): the whole per-op computation lives in
+one `_build_core` closure operating on a *reduced* carry (`Reduced`: the
+(P,) plane arrays, counters and idle scalars — everything except the
+O(n_logical) residency maps) with the op's residency entries handed in
+pre-gathered. Two executors share it:
+
+* `build_step` — the seed-identical per-op scan step: gather
+  `loc[lba]`/`loc_ep[lba]`, run the core, scatter the results back into
+  the full `SimState`. Endurance and the telemetry probe ride here.
+* `build_segment_step` — the compressed-segment executor
+  (`workloads.compress`): an outer scan over K-op segments whose
+  residency gathers/scatters are *vectorized per segment* (the host-side
+  segmenter guarantees no lane reads or overwrites a residency entry an
+  earlier lane in the same segment wrote), with the core applied lane by
+  lane on the reduced carry only. Masked filler lanes (`live=False`)
+  write every result back unchanged, so arbitrary segment padding is a
+  provable no-op.
+
+Both executors run the same core arithmetic in the same order on the same
+values — bit-identity between them is by construction, and enforced by
+tests/test_compress.py over every paper composition.
+
+The carry's integer plane fields may arrive packed (int16,
+`state.packed_state_dtype`): the core upcasts to int32 at the plane
+gather and casts back at the scatter, so packed and unpacked carries are
+arithmetic-identical (integer ops are exact; the int16 epoch wraps with
+the same mod-2^16 congruence `loc_ep` already uses).
+
 Bit-identity contract: for the four paper compositions the assembled step
 executes the monolith's op sequence verbatim — tests/test_policies.py
 checks every latency, counter and state field against the vendored golden.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import jax
 import jax.numpy as jnp
 
 from repro.core.ssd.endurance.model import (WearState, bucket_cycles,
@@ -42,7 +73,8 @@ from repro.core.ssd.policies.spec import (PolicySpec, requires_endurance,
 from repro.core.ssd.policies.state import CTR, CellParams, SimState
 from repro.telemetry import probe
 
-__all__ = ["StepCtx", "build_step", "state_fields_used"]
+__all__ = ["StepCtx", "Reduced", "build_step", "build_segment_step",
+           "reduced_of", "state_fields_used"]
 
 
 class StepCtx:
@@ -75,6 +107,38 @@ class StepCtx:
     )
 
 
+class Reduced(NamedTuple):
+    """The step core's carry: `SimState` minus the O(n_logical) residency
+    maps (and the optional wear/timeline extensions). This is everything
+    the per-op recurrence actually threads sequentially — the segment
+    executor scans *only* this, which is what makes hoisting the
+    residency traffic out of the sequential loop possible."""
+    busy: jnp.ndarray          # (P,) f32
+    slc_used: jnp.ndarray      # (P,) i32|i16
+    rp_done: jnp.ndarray       # (P,) i32|i16
+    trad_used: jnp.ndarray     # (P,) i32|i16
+    valid_mig: jnp.ndarray     # (P,) i32|i16
+    epoch: jnp.ndarray         # (P,) i32|i16
+    counters: jnp.ndarray      # (10,) f32
+    prev_t: jnp.ndarray        # () f32
+    idle_cum: jnp.ndarray      # () f32
+    idle_seen: jnp.ndarray     # (P,) f32
+
+
+class CoreOut(NamedTuple):
+    """Per-op core results beyond the reduced carry: the residency values
+    to scatter, the emitted latency, and the observation-only extras the
+    telemetry probe consumes (dead code — XLA DCE — when unused)."""
+    latency: jnp.ndarray       # () f32 — 0 for pads
+    loc_val: jnp.ndarray       # () i8  — residency value for op's lba
+    loc_ep_val: jnp.ndarray    # () i16 — epoch stamp for op's lba
+    wear: WearState            # updated wear, or None
+    occ_delta: jnp.ndarray     # () f32 — cache-resident page delta
+    idle_claim: jnp.ndarray    # () f32 — idle budget claimed
+    max_cycles: jnp.ndarray    # () f32 — plane cycles (endurance), or None
+    ctr: jnp.ndarray           # (10,) f32 — the step's new counter vector
+
+
 def state_fields_used(spec: PolicySpec):
     """Union of SimState fields the composition's fragments touch, plus
     the fields the engine's shared service/bookkeeping section reads or
@@ -102,13 +166,17 @@ def state_fields_used(spec: PolicySpec):
     return frozenset(fields)
 
 
-def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
-    """Returns the scan step specialized to (composition, mode).
+def _build_core(cfg, spec: PolicySpec, *, closed_loop: bool,
+                params: CellParams):
+    """The whole per-op computation as a function of the reduced carry.
 
-    `policy` is a registered name or a raw PolicySpec; per-cell knobs
-    (cache capacities, boost, idle threshold, waste_p) come from `params`
-    as traced scalars."""
-    spec = resolve_spec(policy)
+    Returns `core(red, op, old, old_ep, wear=None, live=None) ->
+    (Reduced, CoreOut)`. `old`/`old_ep` are the op's residency entries,
+    pre-gathered by the executor (raw dtypes). `wear` is the full
+    WearState when endurance tracking is on. `live` — None for a
+    statically real op, or a traced bool lane mask: a dead lane
+    (`live == False`) writes every carry leaf and residency value back
+    unchanged, making segment padding a provable no-op."""
     t_ = cfg.timing
     p_total = cfg.num_planes
     alloc = ALLOCATIONS[spec.allocation]
@@ -121,9 +189,6 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
     run_agc = spec.idle == "agc"
     pressure = spec.trigger == "watermark"
     tracked = tracked_region(spec)
-    # endurance tracking (DESIGN.md §9) is a static property of the cell:
-    # params.endurance present selects the wear-instrumented step, absent
-    # keeps the seed-identical one (the pytree structure is the jit key)
     use_endurance = params.endurance is not None
     endur = params.endurance
     if requires_endurance(spec) and not use_endurance:
@@ -145,20 +210,33 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
     c_trad_rp = t_.slc_read_ms + t_.reprogram_ms    # trad SLC -> IPS region
     idle_thr = params.idle_thr
 
-    def step(state: SimState, op):
+    def core(red: Reduced, op, old_raw, old_ep, wear: WearState = None,
+             live=None):
+        # live-masking helper: a dead lane keeps the previous value. With
+        # live=None (per-op path) no masking code is emitted at all.
+        if live is None:
+            def sel(new, prev):
+                return new
+        else:
+            def sel(new, prev):
+                return jnp.where(live, new, prev)
+
         t, lba, kind = op["arrival_ms"], op["lba"], op["is_write"]
         plane = lba % p_total
+        # integer plane state may be carried packed (int16) — compute in
+        # int32 (exact for both widths) and cast back at the scatter
+        dt_i = red.slc_used.dtype
 
         ctx = StepCtx()
         ctx.is_pad = kind < 0
         ctx.is_write = kind == 1
-        busy_p = state.busy[plane]
-        ctx.ctr = state.counters
-        ctx.slc_used = state.slc_used[plane]
-        ctx.rp_done = state.rp_done[plane]
-        ctx.trad_used = state.trad_used[plane]
-        ctx.valid_mig = state.valid_mig[plane]
-        ctx.epoch_p = state.epoch[plane]
+        busy_p = red.busy[plane]
+        ctx.ctr = red.counters
+        ctx.slc_used = red.slc_used[plane].astype(jnp.int32)
+        ctx.rp_done = red.rp_done[plane].astype(jnp.int32)
+        ctx.trad_used = red.trad_used[plane].astype(jnp.int32)
+        ctx.valid_mig = red.valid_mig[plane].astype(jnp.int32)
+        ctx.epoch_p = red.epoch[plane].astype(jnp.int32)
         ctx.conflict = jnp.float32(0.0)
         ctx.cap_basic, ctx.cap_trad = cap_basic, cap_trad
         ctx.cap_boost, ctx.waste_p = cap_boost, waste_p
@@ -166,7 +244,6 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
         ctx.erase_ms, ctx.ppb_slc = t_.erase_ms, ppb_slc
         ctx.track_wear = use_endurance
         if use_endurance:
-            wear = state.wear
             ctx.n_buckets = n_buckets
             ctx.pe_slc_p = wear.pe_slc[plane]
             ctx.pe_rp_p = wear.pe_rp[plane]
@@ -200,13 +277,14 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
         # * Which fragments consume it — and whether they may overrun into
         #   the arriving write — is the mechanism composition's business
         #   (see module docstring for the canonical order).
-        idle_cum = state.idle_cum
+        idle_cum = red.idle_cum
+        idle_seen_p = red.idle_seen[plane]
         if not closed_loop:
-            gap = jnp.maximum(t - state.prev_t, 0.0)
+            gap = jnp.maximum(t - red.prev_t, 0.0)
             idle_cum = idle_cum + jnp.where((gap > idle_thr) & ~ctx.is_pad,
                                             gap, 0.0)
             ctx.dev_budget = jnp.where(ctx.is_pad, 0.0,
-                                       idle_cum - state.idle_seen[plane])
+                                       idle_cum - idle_seen_p)
             ctx.full_gap = jnp.where(ctx.is_pad, 0.0,
                                      jnp.maximum(t - busy_p, 0.0))
 
@@ -238,12 +316,11 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
             wait = jnp.maximum(busy_p - t, 0.0)
             start = t + wait + conflict
 
-        old = state.loc[lba].astype(jnp.int32)          # single read of loc
-        old_ep = state.loc_ep[lba]                      # ... and of loc_ep
+        old = old_raw.astype(jnp.int32)
         old_clip = jnp.clip(old, 0, p_total - 1)
         # epoch may have been bumped this step (erase) for the local plane
         epoch_eff = jnp.where(old_clip == plane, epoch_p,
-                              state.epoch[old_clip])
+                              red.epoch[old_clip].astype(jnp.int32))
         old_ok = (old >= 0) & (old_ep == epoch_eff.astype(jnp.int16))
 
         # write destination: allocation decides region placement, the
@@ -358,37 +435,106 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
                             cap_trad))
             tripped = max_cycles >= endur.cycle_budget
             wear_new = WearState(
-                pe_slc=wear.pe_slc.at[plane].set(pe_slc_new),
-                pe_rp=wear.pe_rp.at[plane].set(pe_rp_new),
-                pe_tlc=wear.pe_tlc.at[plane].set(pe_tlc_new),
-                erase=wear.erase.at[plane].set(ctx.erase_p),
-                pe_trad=wear.pe_trad.at[plane].set(pe_trad_new),
+                pe_slc=wear.pe_slc.at[plane].set(
+                    sel(pe_slc_new, wear.pe_slc[plane])),
+                pe_rp=wear.pe_rp.at[plane].set(
+                    sel(pe_rp_new, wear.pe_rp[plane])),
+                pe_tlc=wear.pe_tlc.at[plane].set(
+                    sel(pe_tlc_new, wear.pe_tlc[plane])),
+                erase=wear.erase.at[plane].set(
+                    sel(ctx.erase_p, wear.erase[plane])),
+                pe_trad=wear.pe_trad.at[plane].set(
+                    sel(pe_trad_new, wear.pe_trad[plane])),
                 erase_trad=wear.erase_trad.at[plane].set(
-                    ctx.erase_trad_p),
-                ops_seen=ops_seen,
-                eol_op=jnp.where((wear.eol_op < 0) & tripped & ~is_pad,
-                                 ops_seen, wear.eol_op),
+                    sel(ctx.erase_trad_p, wear.erase_trad[plane])),
+                ops_seen=sel(ops_seen, wear.ops_seen),
+                eol_op=sel(jnp.where((wear.eol_op < 0) & tripped & ~is_pad,
+                                     ops_seen, wear.eol_op), wear.eol_op),
             )
         else:
             wear_new = None
+            max_cycles = None
 
+        # observation-only extras for the telemetry probe (DESIGN.md §11):
+        # dead code under XLA DCE whenever the executor drops them
+        occ_delta = ((slc_used + trad_used)
+                     - (red.slc_used[plane].astype(jnp.int32)
+                        + red.trad_used[plane].astype(jnp.int32))
+                     ).astype(jnp.float32)
+        idle_claim = jnp.where(is_pad, 0.0, idle_cum - idle_seen_p)
+
+        new_red = Reduced(
+            busy=red.busy.at[plane].set(
+                sel(jnp.where(is_pad, busy_p, busy_new), busy_p)),
+            slc_used=red.slc_used.at[plane].set(
+                sel(slc_used, ctx.slc_used).astype(dt_i)),
+            rp_done=red.rp_done.at[plane].set(
+                sel(rp_done, ctx.rp_done).astype(dt_i)),
+            trad_used=red.trad_used.at[plane].set(
+                sel(trad_used, ctx.trad_used).astype(dt_i)),
+            valid_mig=red.valid_mig.at[plane].set(
+                sel(valid_mig, ctx.valid_mig).astype(dt_i))
+            .at[old_clip].add(-sel(valid_dec, 0).astype(dt_i))
+            .at[plane].add(sel(jnp.where(track_new, 1, 0), 0)
+                           .astype(dt_i)),
+            epoch=red.epoch.at[plane].set(sel(epoch_p, ctx.epoch_p)
+                                          .astype(dt_i)),
+            counters=sel(ctr, red.counters),
+            prev_t=sel(jnp.where(is_pad, red.prev_t, t), red.prev_t),
+            idle_cum=sel(idle_cum, red.idle_cum),
+            idle_seen=red.idle_seen.at[plane].set(
+                sel(jnp.where(is_pad, idle_seen_p, idle_cum),
+                    idle_seen_p)),
+        )
+        out = CoreOut(
+            latency=sel(latency, jnp.float32(0.0)),
+            loc_val=sel(loc_val, old_raw),
+            loc_ep_val=sel(loc_ep_val, old_ep),
+            wear=wear_new, occ_delta=occ_delta, idle_claim=idle_claim,
+            max_cycles=max_cycles, ctr=ctr)
+        return new_red, out
+
+    return core
+
+
+def reduced_of(state: SimState) -> Reduced:
+    """The reduced carry view of a SimState (shared leaves, no copy)."""
+    return Reduced(busy=state.busy, slc_used=state.slc_used,
+                   rp_done=state.rp_done, trad_used=state.trad_used,
+                   valid_mig=state.valid_mig, epoch=state.epoch,
+                   counters=state.counters, prev_t=state.prev_t,
+                   idle_cum=state.idle_cum, idle_seen=state.idle_seen)
+
+
+def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
+    """Returns the scan step specialized to (composition, mode).
+
+    `policy` is a registered name or a raw PolicySpec; per-cell knobs
+    (cache capacities, boost, idle threshold, waste_p) come from `params`
+    as traced scalars."""
+    spec = resolve_spec(policy)
+    core = _build_core(cfg, spec, closed_loop=closed_loop, params=params)
+    p_total = cfg.num_planes
+    use_endurance = params.endurance is not None
+    cap_basic = params.cap_basic
+    cap_trad = params.cap_trad
+    cap_boost = (jnp.int32(0) if params.cap_boost is None
+                 else params.cap_boost)
+
+    def step(state: SimState, op):
+        lba = op["lba"]
+        red, out = core(reduced_of(state), op,
+                        state.loc[lba], state.loc_ep[lba],
+                        wear=state.wear)
         new_state = SimState(
-            wear=wear_new,
-            busy=state.busy.at[plane].set(busy_new),
-            slc_used=state.slc_used.at[plane].set(slc_used),
-            rp_done=state.rp_done.at[plane].set(rp_done),
-            trad_used=state.trad_used.at[plane].set(trad_used),
-            valid_mig=state.valid_mig.at[plane].set(valid_mig)
-            .at[old_clip].add(-valid_dec)
-            .at[plane].add(jnp.where(track_new, 1, 0).astype(jnp.int32)),
-            epoch=state.epoch.at[plane].set(epoch_p),
-            loc=state.loc.at[lba].set(loc_val),
-            loc_ep=state.loc_ep.at[lba].set(loc_ep_val),
-            counters=ctr,
-            prev_t=jnp.where(is_pad, state.prev_t, t),
-            idle_cum=idle_cum,
-            idle_seen=state.idle_seen.at[plane].set(
-                jnp.where(is_pad, state.idle_seen[plane], idle_cum)),
+            wear=out.wear,
+            busy=red.busy, slc_used=red.slc_used, rp_done=red.rp_done,
+            trad_used=red.trad_used, valid_mig=red.valid_mig,
+            epoch=red.epoch,
+            loc=state.loc.at[lba].set(out.loc_val),
+            loc_ep=state.loc_ep.at[lba].set(out.loc_ep_val),
+            counters=red.counters, prev_t=red.prev_t,
+            idle_cum=red.idle_cum, idle_seen=red.idle_seen,
         )
 
         # ------------------------------------------------------------
@@ -400,20 +546,87 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
         #    per-window series after the scan.
         # ------------------------------------------------------------
         if state.timeline is not None:
-            # a step only mutates the serviced plane's regions, so the
-            # device-wide resident-page count moves by the local delta
-            occ_delta = ((slc_used + trad_used)
-                         - (state.slc_used[plane]
-                            + state.trad_used[plane])).astype(jnp.float32)
+            is_pad = op["is_write"] < 0
             cap_tot = ((cap_basic + cap_boost + cap_trad)
                        .astype(jnp.float32) * p_total)
             tl_new, tl_row = probe.accumulate(
-                state.timeline, is_pad=is_pad, counters=ctr,
-                occ_delta=occ_delta, cap_pages=cap_tot,
-                idle_claim=jnp.where(is_pad, 0.0,
-                                     idle_cum - state.idle_seen[plane]),
-                wear=max_cycles if use_endurance else None)
-            return new_state._replace(timeline=tl_new), (latency, tl_row)
-        return new_state, latency
+                state.timeline, is_pad=is_pad, counters=out.ctr,
+                occ_delta=out.occ_delta, cap_pages=cap_tot,
+                idle_claim=out.idle_claim,
+                wear=out.max_cycles if use_endurance else None)
+            return new_state._replace(timeline=tl_new), (out.latency,
+                                                         tl_row)
+        return new_state, out.latency
 
     return step
+
+
+def build_segment_step(cfg, policy, *, closed_loop: bool,
+                       params: CellParams):
+    """The compressed-segment executor's outer-scan step (DESIGN.md §12).
+
+    Carry: `(Reduced, loc, loc_ep)`. Input: one segment — K consecutive
+    trace ops as `(K,)` lane arrays from `workloads.compress`:
+    `arrival_ms`/`lba`/`is_write` plus the host-resolved hazard plan
+    (`src`: lane index whose residency *output* this lane must consume
+    instead of the segment-start gather, -1 when the gather is current;
+    `scat_lba`: the lane's lba if it is the segment's final access of
+    that lba, else an out-of-range sentinel).
+
+    The O(n_logical) residency traffic — the measured single-cell
+    bottleneck — is hoisted out of the sequential recurrence: one
+    vectorized gather per segment, the core lane by lane on the reduced
+    carry only (intra-segment dependencies resolved through a (K,)
+    forwarding buffer per `src`), one vectorized scatter per segment
+    (duplicate-free by the `scat_lba` plan, so scatter order cannot
+    matter). Every value each lane consumes equals what the per-op step
+    would have gathered after its predecessor's scatter — bit-identity
+    with `build_step` is by construction. Returns per-lane latencies (K,)
+    in trace order.
+
+    Endurance and the telemetry probe are per-op-path concerns: callers
+    (sim.run_compressed / sweep.runner) fall back to `build_step` for
+    those carries."""
+    spec = resolve_spec(policy)
+    if params.endurance is not None:
+        raise ValueError("segment executor does not carry wear state; "
+                         "run endurance cells through the per-op step")
+    core = _build_core(cfg, spec, closed_loop=closed_loop, params=params)
+
+    def seg_step(carry, seg):
+        red, loc, loc_ep = carry
+        lba_k = seg["lba"]                       # (K,) i32
+        k = lba_k.shape[0]
+        old_k = loc[lba_k]                       # (K,) i8 — one gather
+        old_ep_k = loc_ep[lba_k]                 # (K,) i16
+
+        def lane(acc, x):
+            red_c, buf_loc, buf_ep = acc
+            use_buf = x["src"] >= 0
+            s = jnp.clip(x["src"], 0, k - 1)
+            old = jnp.where(use_buf, buf_loc[s], x["old"])
+            old_ep = jnp.where(use_buf, buf_ep[s], x["old_ep"])
+            red_n, out = core(
+                red_c,
+                {"arrival_ms": x["arrival_ms"], "lba": x["lba"],
+                 "is_write": x["is_write"]},
+                old, old_ep)
+            buf_loc = buf_loc.at[x["lane"]].set(out.loc_val)
+            buf_ep = buf_ep.at[x["lane"]].set(out.loc_ep_val)
+            return (red_n, buf_loc, buf_ep), (out.latency, out.loc_val,
+                                              out.loc_ep_val)
+
+        (red, _, _), (lat_k, locv_k, epv_k) = jax.lax.scan(
+            lane,
+            (red, jnp.zeros(k, jnp.int8), jnp.zeros(k, jnp.int16)),
+            {"arrival_ms": seg["arrival_ms"], "lba": lba_k,
+             "is_write": seg["is_write"], "src": seg["src"],
+             "old": old_k, "old_ep": old_ep_k,
+             "lane": jnp.arange(k, dtype=jnp.int32)})
+        # one duplicate-free scatter: only each lba's final lane carries
+        # its real lba here; superseded lanes hold the sentinel and drop
+        loc = loc.at[seg["scat_lba"]].set(locv_k, mode="drop")
+        loc_ep = loc_ep.at[seg["scat_lba"]].set(epv_k, mode="drop")
+        return (red, loc, loc_ep), lat_k
+
+    return seg_step

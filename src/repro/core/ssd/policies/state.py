@@ -23,7 +23,8 @@ from repro.core.ssd.endurance.spec import EnduranceSpec
 from repro.telemetry.probe import TimelineState, init_timeline
 
 __all__ = ["CellParams", "SimState", "CTR", "init_state", "default_cell",
-           "WATERMARK_NUM", "WATERMARK_DEN", "OVERRUN_PAGES", "ceil_div"]
+           "can_pack", "WATERMARK_NUM", "WATERMARK_DEN", "OVERRUN_PAGES",
+           "ceil_div"]
 
 # block-granularity reclamation model: pressure watermark + per-op overrun
 WATERMARK_NUM, WATERMARK_DEN = 7, 8
@@ -54,12 +55,20 @@ class CellParams(NamedTuple):
 
 
 class SimState(NamedTuple):
+    # The five integer plane fields carry i32, or i16 when the state is
+    # *packed* (init_state(packed=True), gated by `can_pack`): the engine
+    # computes every plane update in i32 and casts back at the scatter,
+    # so packed runs are arithmetic-identical — integers are exact in
+    # both widths below the i16 bound, and `epoch` (the one unbounded
+    # counter) wraps mod 2^16 exactly congruent with the i16 `loc_ep`
+    # stamps it is compared against. Packing shrinks the donated fleet
+    # carry so more cells fit per device (DESIGN.md §12).
     busy: jnp.ndarray          # (P,) f32 — plane free time
-    slc_used: jnp.ndarray      # (P,) i32 — pages in current basic/IPS region
-    rp_done: jnp.ndarray       # (P,) i32 — reprogram writes into that region
-    trad_used: jnp.ndarray     # (P,) i32 — dual-alloc traditional pages
-    valid_mig: jnp.ndarray     # (P,) i32 — valid pages in migratable region
-    epoch: jnp.ndarray         # (P,) i32
+    slc_used: jnp.ndarray      # (P,) i32|i16 — pages in current basic/IPS region
+    rp_done: jnp.ndarray       # (P,) i32|i16 — reprogram writes into that region
+    trad_used: jnp.ndarray     # (P,) i32|i16 — dual-alloc traditional pages
+    valid_mig: jnp.ndarray     # (P,) i32|i16 — valid pages in migratable region
+    epoch: jnp.ndarray         # (P,) i32|i16
     loc: jnp.ndarray           # (N,) i8 — plane holding lba in cache, or -1
     loc_ep: jnp.ndarray        # (N,) i16 — epoch at write (wraps; collisions
     #                            astronomically unlikely within a trace)
@@ -85,20 +94,43 @@ CTR = {name: i for i, name in enumerate(
      "mig_w", "erases", "agc_waste", "conflict_ms"])}
 
 
+INT16_MAX = 32767
+
+
+def can_pack(cfg, n_logical: int, params: CellParams) -> bool:
+    """True when every integer plane field provably fits int16, so
+    `init_state(packed=True)` is exact (host-side check on concrete
+    caps). Bounds: `slc_used <= cap_basic + cap_boost` (allocation cap),
+    `rp_done <= 2 * slc_used` (two reprograms per SLC page),
+    `trad_used <= cap_trad`, and `valid_mig <= ceil(n_logical / P)` (an
+    lba's cached copy always lives on plane `lba % P`, so a plane can
+    hold at most that many valid entries). `epoch` needs no bound — it
+    wraps congruent with the int16 `loc_ep` stamps."""
+    cap_basic = int(params.cap_basic)
+    cap_trad = int(params.cap_trad)
+    cap_boost = 0 if params.cap_boost is None else int(params.cap_boost)
+    bound = max(2 * (cap_basic + cap_boost), cap_trad,
+                ceil_div(n_logical, cfg.num_planes))
+    return bound <= INT16_MAX
+
+
 def init_state(cfg, n_logical: int, *, endurance: bool = False,
-               timeline=None) -> SimState:
+               timeline=None, packed: bool = False) -> SimState:
     """Fresh scan carry. `timeline` — ops per telemetry window, or
-    None — attaches the in-scan probe carry (DESIGN.md §11)."""
+    None — attaches the in-scan probe carry (DESIGN.md §11). `packed`
+    carries the integer plane fields as int16 (caller gates on
+    `can_pack`); results are bit-identical either way."""
     p = cfg.num_planes
+    dt_i = jnp.int16 if packed else jnp.int32
     return SimState(
         wear=init_wear(cfg) if endurance else None,
         timeline=init_timeline(timeline) if timeline else None,
         busy=jnp.zeros(p, jnp.float32),
-        slc_used=jnp.zeros(p, jnp.int32),
-        rp_done=jnp.zeros(p, jnp.int32),
-        trad_used=jnp.zeros(p, jnp.int32),
-        valid_mig=jnp.zeros(p, jnp.int32),
-        epoch=jnp.zeros(p, jnp.int32),
+        slc_used=jnp.zeros(p, dt_i),
+        rp_done=jnp.zeros(p, dt_i),
+        trad_used=jnp.zeros(p, dt_i),
+        valid_mig=jnp.zeros(p, dt_i),
+        epoch=jnp.zeros(p, dt_i),
         loc=jnp.full(n_logical, -1, jnp.int8),
         loc_ep=jnp.zeros(n_logical, jnp.int16),
         counters=jnp.zeros(len(CTR), jnp.float32),

@@ -37,6 +37,7 @@ arrival times (daily scenario, queueing + idle work modeled).
 from __future__ import annotations
 
 import functools
+import operator
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +46,9 @@ from repro.core.ssd.config import SSDConfig
 from repro.core.ssd.policies import (PAPER_POLICIES, build_step,
                                      default_cell, resolve_spec,
                                      tracked_region)
+from repro.core.ssd.policies.engine import (Reduced, _build_core,
+                                            build_segment_step,
+                                            reduced_of)
 # re-exported for backward compatibility: these lived here pre-policy-engine
 from repro.core.ssd.policies.state import (CTR, OVERRUN_PAGES,  # noqa: F401
                                            WATERMARK_DEN, WATERMARK_NUM,
@@ -91,10 +95,11 @@ def as_ops(trace):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "closed_loop",
-                                             "n_logical", "timeline_ops"))
+                                             "n_logical", "timeline_ops",
+                                             "packed"))
 def run_trace(cfg: SSDConfig, policy, trace, *, closed_loop: bool,
               n_logical: int, waste_p=0.0, params: CellParams | None = None,
-              timeline_ops: int | None = None):
+              timeline_ops: int | None = None, packed: bool = False):
     """Simulate one padded trace. Returns (per-op latency, final SimState).
 
     `params` (or the shorthand `waste_p`) are traced per-cell scalars
@@ -104,13 +109,15 @@ def run_trace(cfg: SSDConfig, policy, trace, *, closed_loop: bool,
     `timeline_ops` (static: it fixes the window-count shape) attaches the
     in-scan telemetry probe with that many ops per window — the final
     state then carries `SimState.timeline` (DESIGN.md §11); None keeps
-    the seed carry structure."""
+    the seed carry structure. `packed` (static) carries the integer
+    plane fields as int16 — bit-identical results when
+    `policies.state.can_pack` holds (DESIGN.md §12)."""
     if params is None:
         params = default_params(cfg, policy, waste_p)
     step = make_step(cfg, policy, closed_loop=closed_loop, params=params)
     state0 = init_state(cfg, n_logical,
                         endurance=params.endurance is not None,
-                        timeline=timeline_ops)
+                        timeline=timeline_ops, packed=packed)
     ops = as_ops(trace)
     if timeline_ops is None:
         final, latency = jax.lax.scan(step, state0, ops)
@@ -122,6 +129,105 @@ def run_trace(cfg: SSDConfig, policy, trace, *, closed_loop: bool,
                          t_len=ops["lba"].shape[0],
                          endurance=params.endurance is not None)
     return latency, final._replace(timeline=wtl)
+
+
+def _tree_equal(a, b):
+    """Traced exact-equality of two identically-shaped pytrees."""
+    return functools.reduce(
+        operator.and_,
+        [jnp.array_equal(x, y) for x, y in zip(jax.tree.leaves(a),
+                                               jax.tree.leaves(b))])
+
+
+def replay_pads(core, red: Reduced, old0, ep0, pad_t, n_pad: int):
+    """Apply the trimmed all-pad tail to convergence (DESIGN.md §12).
+
+    The tail ops are *identical* (constant arrival `pad_t`, lba 0,
+    is_write -1 — the `ir.pad_ops` contract), and the step is a
+    deterministic function of (state, op), so once one application
+    leaves the reduced state unchanged every remaining application
+    would too: the loop may stop early at that exact fixed point and
+    still equal scanning all `n_pad` pads. Pads never change `loc` /
+    `loc_ep` *values* (they write the old entry back) and emit latency
+    exactly 0.0, so only the reduced carry needs replaying and the
+    trimmed latency tail is literal zeros. (Pads are not no-ops before
+    the fixed point: migrate-mechanism overrun reclamation keeps
+    draining above-watermark planes a batch per op.)
+
+    Vmap-safe: under `vmap` the `while_loop` runs until every cell's
+    predicate clears, with converged cells held at their fixed point by
+    the batching rule's select — harmless extra iterations, identical
+    results. `n_pad` is the shared static bound; `pad_t` may be a
+    per-cell traced scalar."""
+    op = {"arrival_ms": jnp.asarray(pad_t, jnp.float32),
+          "lba": jnp.int32(0), "is_write": jnp.int32(-1)}
+
+    def cond(c):
+        i, _, changed = c
+        return (i < n_pad) & changed
+
+    def body(c):
+        i, red_c, _ = c
+        red_n, _ = core(red_c, op, old0, ep0)
+        return i + 1, red_n, ~_tree_equal(red_n, red_c)
+
+    _, red, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), red, jnp.bool_(n_pad > 0)))
+    return red
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy",
+                                             "closed_loop", "n_logical",
+                                             "t_len", "n_pad", "packed"))
+def _run_segments(cfg: SSDConfig, policy, segs, pad_t, *,
+                  closed_loop: bool, n_logical: int, t_len: int,
+                  n_pad: int, packed: bool, params: CellParams):
+    spec = resolve_spec(policy)
+    seg_step = build_segment_step(cfg, spec, closed_loop=closed_loop,
+                                  params=params)
+    state0 = init_state(cfg, n_logical, packed=packed)
+    (red, loc, loc_ep), lat = jax.lax.scan(
+        seg_step, (reduced_of(state0), state0.loc, state0.loc_ep), segs)
+    latency = jnp.concatenate(
+        [lat.reshape(-1), jnp.zeros(n_pad, jnp.float32)])
+    if n_pad:
+        core = _build_core(cfg, spec, closed_loop=closed_loop,
+                           params=params)
+        red = replay_pads(core, red, loc[0], loc_ep[0], pad_t, n_pad)
+    state = SimState(busy=red.busy, slc_used=red.slc_used,
+                     rp_done=red.rp_done, trad_used=red.trad_used,
+                     valid_mig=red.valid_mig, epoch=red.epoch,
+                     loc=loc, loc_ep=loc_ep, counters=red.counters,
+                     prev_t=red.prev_t, idle_cum=red.idle_cum,
+                     idle_seen=red.idle_seen)
+    return latency, state
+
+
+def run_compressed(cfg: SSDConfig, policy, comp, *, closed_loop: bool,
+                   n_logical: int, waste_p=0.0,
+                   params: CellParams | None = None,
+                   packed: bool = False):
+    """Simulate one compressed trace (`workloads.compress.compress_ops`)
+    through the segment executor. Returns (per-op latency over the
+    original padded length, final SimState) — bit-identical to
+    `run_trace` on the uncompressed trace, leaf for leaf (the packing
+    flag changes carry dtypes, never values; gate it on
+    `policies.state.can_pack`).
+
+    Endurance and telemetry runs have no compressed path — use
+    `run_trace` (the engine's segment executor rejects wear state, and
+    probe windows are defined positionally over the uncompressed
+    stream)."""
+    if params is None:
+        params = default_params(cfg, policy, waste_p)
+    if params.endurance is not None:
+        raise ValueError("no compressed path for endurance runs; "
+                         "use run_trace")
+    segs = {k: jnp.asarray(v) for k, v in comp.segs.items()}
+    return _run_segments(cfg, policy, segs, jnp.float32(comp.pad_t),
+                         closed_loop=closed_loop, n_logical=n_logical,
+                         t_len=comp.t_len, n_pad=comp.n_pad,
+                         packed=packed, params=params)
 
 
 def flush_cache(cfg: SSDConfig, state: SimState, policy="baseline"):

@@ -1,0 +1,11 @@
+"""Fused SSD step kernel: one kernel launch executes a whole chunk of
+the compressed-segment scan (DESIGN.md §12).
+
+Package layout follows `ssd_scan` / `ips_repack`:
+  kernel.py — the Pallas TPU kernel (`interpret=True` runs everywhere)
+  ref.py    — pure-jnp oracle: the engine's own segment executor
+  ops.py    — public entry with backend dispatch
+"""
+from repro.kernels.ssd_step.ops import run_segments_fused
+
+__all__ = ["run_segments_fused"]

@@ -1,0 +1,24 @@
+"""Reference implementation: the engine's segment executor, verbatim.
+
+The oracle for the fused kernel is not a re-derivation — it IS the
+production jnp path (`policies.engine.build_segment_step` under
+`lax.scan`), so kernel-vs-ref equivalence directly certifies the kernel
+against what `sim.run_compressed` runs, and the per-op golden tests
+certify that in turn against the seed monolith."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.ssd.policies.engine import build_segment_step, reduced_of
+
+__all__ = ["run_segments_ref"]
+
+
+def run_segments_ref(cfg, policy, segs, state0, *, closed_loop, params):
+    """Scan `segs` ((S, K) lane arrays) from `state0`. Returns
+    (latency (S, K), final (Reduced, loc, loc_ep))."""
+    seg_step = build_segment_step(cfg, policy, closed_loop=closed_loop,
+                                  params=params)
+    carry, lat = jax.lax.scan(
+        seg_step, (reduced_of(state0), state0.loc, state0.loc_ep), segs)
+    return lat, carry

@@ -157,7 +157,8 @@ def main(argv=None) -> int:
     from repro.configs.ssd_paper import PAPER_SSD
     from repro.sweep.grid import expand_grid, named_grid
     from repro.sweep.report import (endurance_summary, policy_geomeans,
-                                    policy_geomeans_ci, sensitivity_deltas)
+                                    policy_geomeans_ci, sensitivity_deltas,
+                                    throughput_table)
     from repro.sweep.runner import bench_fleet_vs_loop, run_sweep
     from repro.sweep.store import save_bench
 
@@ -384,6 +385,19 @@ def main(argv=None) -> int:
     print(f"  async dispatch: {len(group_timings)} group(s), "
           f"{disp:.2f}s dispatching, {blk:.2f}s blocked on results, "
           f"{fleet_compiles} fleet compile(s)")
+    tot_ops = sum((g["cells"] + g["pad"]) * g["t_len"]
+                  for g in group_timings)
+    tot_cells = sum(g["cells"] + g["pad"] for g in group_timings)
+    throughput = {
+        "ops_per_s": round(tot_ops / max(disp + blk, 1e-9), 1),
+        "cells_per_s": round(tot_cells / max(disp + blk, 1e-9), 4),
+        "by_group": {f"{g['composition']}/{g['mode']}": {
+            "ops_per_s": g["ops_per_s"], "cells_per_s": g["cells_per_s"],
+            "t_scan": g["t_scan"], "packed": g["packed"]}
+            for g in group_timings}}
+    print(f"  throughput: {throughput['ops_per_s'] / 1e6:.3f} Mops/s, "
+          f"{throughput['cells_per_s']:.2f} cells/s")
+    print(throughput_table(group_timings))
 
     _print_table(results)
 
@@ -392,6 +406,7 @@ def main(argv=None) -> int:
                "max_ops": args.max_ops, "scale": args.scale,
                "trace_cache": cstats,
                "group_timings": group_timings,
+               "throughput": throughput,
                "fleet_compiles": fleet_compiles,
                "results": results,
                "geomeans": {f"{m}/{p}": v for (m, p), v in

@@ -19,7 +19,8 @@ import numpy as np
 __all__ = ["geomean", "normalize_to_baseline", "normalize_points",
            "policy_geomeans", "bootstrap_ci", "policy_geomeans_ci",
            "endurance_summary", "sensitivity_deltas",
-           "search_rounds_table", "search_front_table"]
+           "search_rounds_table", "search_front_table",
+           "throughput_table"]
 
 
 def geomean(values) -> float:
@@ -190,6 +191,24 @@ def search_front_table(front) -> str:
         lines.append(f"{f['label']:<34}{f['lat']:>8.3f}{f['waf']:>8.3f}"
                      f"{(f'{tbw:.3f}' if tbw is not None else 'n/a'):>8}"
                      f"{f['n']:>4}")
+    return "\n".join(lines)
+
+
+def throughput_table(group_timings) -> str:
+    """Per-(composition, mode) step-engine throughput (BENCH sweep
+    `group_timings` rows carrying the DESIGN.md §12 columns): scanned vs
+    padded length (pad-tail trimming), packed carry flag, and raw rates.
+    Ops/s credits the full padded length — the rate a per-op scan would
+    have had to sustain for the same wall-clock — so trimming shows up as
+    throughput, not as shrunk work."""
+    lines = [f"{'group':<22}{'cells':>6}{'t_len':>9}{'t_scan':>9}"
+             f"{'packed':>7}{'Mops/s':>8}{'cells/s':>9}"]
+    for g in group_timings:
+        lines.append(
+            f"{g['composition'] + '/' + g['mode']:<22}{g['cells']:>6}"
+            f"{g['t_len']:>9}{g['t_scan']:>9}"
+            f"{str(bool(g['packed'])):>7}{g['ops_per_s'] / 1e6:>8.3f}"
+            f"{g['cells_per_s']:>9.2f}")
     return "\n".join(lines)
 
 

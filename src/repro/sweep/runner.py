@@ -44,6 +44,7 @@ from repro.core.ssd.driver import (LOGICAL_SPACE_CAP, _agc_waste_p,
                                    agc_waste_from_stats)
 from repro.core.ssd.endurance.spec import EnduranceSpec
 from repro.core.ssd.policies import get_spec, requires_endurance
+from repro.core.ssd.policies.state import can_pack
 from repro.core.ssd.sim import default_params
 from repro.sweep.grid import SweepPoint
 from repro.telemetry.spans import span
@@ -96,7 +97,9 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
               max_pending: Optional[int] = None,
               cell_bucket: Optional[int] = None,
               timeline_ops: Optional[int] = None,
-              timelines: Optional[Dict] = None
+              timelines: Optional[Dict] = None,
+              trim_pads: bool = True,
+              packed: bool | str = "auto"
               ) -> Dict[SweepPoint, Dict[str, float]]:
     """Run every sweep point batched; returns {point: metrics}.
 
@@ -124,7 +127,17 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
     wall-clocks are measured through `telemetry.spans` — install a Tracer
     to collect the sweep's span tree; `timings` keeps working without
     one. Each timings row also carries `compiles`: how many fresh fleet
-    compilations that group's dispatch triggered."""
+    compilations that group's dispatch triggered, plus the group's
+    throughput (`ops_per_s` over the padded length, `cells_per_s`) and
+    which raw-speed knobs applied (`t_scan`, `packed`).
+
+    Raw-speed defaults (DESIGN.md §12): `trim_pads=True` scans only each
+    group's shared live prefix and replays the identical all-pad tail to
+    its exact fixed point (endurance and telemetry groups automatically
+    take the full path); `packed="auto"` carries int16 plane fields
+    whenever every cell's caps provably fit (`policies.state.can_pack`),
+    `True`/`False` force it. Results are bit-identical either way —
+    committed BENCH geomeans are the regression gate."""
     import jax
 
     n_logical = _n_logical(cfg)
@@ -192,13 +205,21 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
             out["n_ops"] = grp["n_ops"][i]
             results[pt] = out
         if timings is not None:
+            wall = max(grp["dispatch_s"] + block_s, 1e-9)
+            n_cells_all = len(grp["pts"]) + grp["pad"]
             timings.append({
                 "policies": grp["names"], "mode": grp["mode"],
                 "composition": grp["spec"].composition,
                 "cells": len(grp["pts"]), "pad": grp["pad"],
-                "t_len": grp["t_len"],
+                "t_len": grp["t_len"], "t_scan": grp["t_scan"],
+                "packed": grp["packed"],
                 "dispatch_s": round(grp["dispatch_s"], 4),
                 "block_s": round(block_s, 4),
+                # ops/s credits the full padded length each cell covers
+                # (the compressed path does the same work in less wall),
+                # so the trajectory is comparable across PRs and knobs
+                "ops_per_s": round(n_cells_all * grp["t_len"] / wall, 1),
+                "cells_per_s": round(n_cells_all / wall, 4),
                 "compiles": grp["compiles"]})
 
     # ---- phase 1: dispatch every group (async — results are futures) ----
@@ -220,6 +241,11 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
         params += [params[-1]] * pad
 
         names = ",".join(sorted({p.policy for p in pts}))
+        # packing decision is per group (it keys the compiled carry):
+        # every cell's caps must provably fit int16
+        pack_grp = (packed if isinstance(packed, bool)
+                    else all(can_pack(cfg, n_logical, p) for p in params))
+        trim_grp = (trim_pads and timeline_ops is None and not _endur)
         if progress:
             progress(f"fleet {names}/{mode}: {n_cells} cells"
                      f"{f' (+{pad} pad)' if pad else ''} x {_t_len} ops"
@@ -229,10 +255,13 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
                   cells=n_cells, t_len=_t_len) as rec:
             ops = fleet.shard_cells(fleet.stack_ops(traces))
             stacked = fleet.shard_cells(fleet.stack_params(params))
+            t_scan = (fleet._trim_len(np.asarray(ops["is_write"]))
+                      if trim_grp else _t_len)
             latency, states = fleet.run_fleet(
                 cfg, spec, ops, stacked,
                 closed_loop=(mode == "bursty"), n_logical=n_logical,
-                timeline_ops=timeline_ops)
+                timeline_ops=timeline_ops, trim_pads=trim_grp,
+                packed=pack_grp)
             if mode == "daily":
                 states = fleet.flush_fleet(cfg, states, spec)
             summ = fleet.summarize_fleet(latency, ops["is_write"], states,
@@ -241,6 +270,7 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
         pending.append({"pts": pts, "n_ops": [t["n_ops"] for t in traces],
                         "summ": summ, "names": names, "mode": mode,
                         "spec": spec, "t_len": _t_len, "pad": pad,
+                        "t_scan": t_scan, "packed": pack_grp,
                         "dispatch_s": rec["dur_s"],
                         "compiles": rec["args"]["compiles"],
                         "tl": states.timeline})

@@ -15,7 +15,8 @@ import tempfile
 import time
 from typing import Dict, Optional
 
-__all__ = ["save_bench", "load_bench", "list_benches"]
+__all__ = ["save_bench", "load_bench", "list_benches",
+           "check_step_throughput"]
 
 SCHEMA_VERSION = 1
 
@@ -88,6 +89,32 @@ def save_bench(name: str, payload: Dict, *, directory: str = ".",
             pass
         raise
     return path
+
+
+def check_step_throughput(doc: Dict, *, min_speedup: float = 0.0) -> Dict:
+    """Validate a BENCH_step_throughput.json document
+    (scripts/bench_step.py) and return it. Raises AssertionError on a
+    malformed artifact; `min_speedup` additionally gates the geomean
+    compressed-vs-per-op speedup (the CI throughput floor)."""
+    assert doc.get("meta", {}).get("git_sha") is not None or \
+        "git_sha" in doc.get("meta", {}), "missing meta"
+    assert doc.get("policy") and doc.get("mode"), "missing policy/mode"
+    traces = doc.get("traces")
+    assert traces, "no per-trace rows"
+    for name, row in traces.items():
+        assert {"t_len", "t_trim", "fill"} <= set(row), (name, row.keys())
+        for path in ("per_op", "compressed", "packed"):
+            r = row[path]
+            assert r["warm_s"] > 0 and r["ops_per_s"] > 0, (name, path, r)
+        assert row["speedup_compressed"] > 0, name
+        assert row["speedup_packed"] > 0, name
+    gm = doc.get("geomean_speedup", {})
+    assert {"compressed", "packed"} <= set(gm), gm
+    if min_speedup:
+        assert gm["compressed"] >= min_speedup, (
+            f"step throughput gate: compressed geomean speedup "
+            f"{gm['compressed']:.2f}x < required {min_speedup:.2f}x")
+    return doc
 
 
 def load_bench(path: str) -> Dict:

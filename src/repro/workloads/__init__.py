@@ -29,6 +29,7 @@ from typing import Dict, Optional, Sequence
 
 from repro.workloads import ir
 from repro.workloads.cache import TraceCache, file_digest
+from repro.workloads.compress import CompressedOps, compress_ops
 from repro.workloads.generators import (SCENARIO_NAMES, SCENARIOS,
                                         mix_traces)
 from repro.workloads.ir import PAD_OPS, Trace
@@ -40,6 +41,7 @@ from repro.workloads.synth import (TRACE_NAMES, TRACES, TraceStats,
 __all__ = [
     "PAD_OPS", "Trace", "TraceStats", "TRACES", "TRACE_NAMES",
     "SCENARIOS", "SCENARIO_NAMES", "TraceCache",
+    "CompressedOps", "compress_ops",
     "spec_kind", "known_specs", "build_trace", "build_ops", "trace_recipe",
     "stack_traces", "truncate_trace",
     "make_trace", "synth_trace", "synthesize", "load_trace", "mix_traces",

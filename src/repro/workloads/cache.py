@@ -114,6 +114,7 @@ class TraceCache:
         self.misses = 0
         self.evictions = 0
         self._mem: Dict[str, Dict] = {}
+        self._comp: Dict[str, object] = {}
         self._tmp_reaped = False    # uncapped: one orphan sweep per process
 
     @staticmethod
@@ -275,8 +276,26 @@ class TraceCache:
         self._mem[key] = ops
         return ops
 
+    def compressed(self, ops: Mapping, *, key: Optional[str] = None):
+        """In-process memo of the segment-compressed form of a compiled
+        trace (`workloads.compress.compress_ops` — DESIGN.md §12).
+
+        Compression is policy-independent, so one compressed bundle
+        serves every (composition, mode) a sweep runs over the trace.
+        Keyed by the trace's recipe key when the caller knows it (the
+        compiled tensors are immutable once built); falls back to the op
+        dict's object identity, which is exactly the lifetime of the
+        in-memory `get_or_build` entry it came from. Memory-only: the
+        transform is a few ms per trace, not worth disk format churn."""
+        from repro.workloads.compress import compress_ops
+        k = key if key is not None else f"id:{id(ops['lba'])}"
+        if k not in self._comp:
+            self._comp[k] = compress_ops(ops)
+        return self._comp[k]
+
     def stats(self) -> Dict:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
+                "compressed": len(self._comp),
                 "max_mb": self.max_mb,
                 "dir": self.root if self.use_disk else None}

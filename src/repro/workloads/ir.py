@@ -237,7 +237,14 @@ def concat(a: Trace, b: Trace, gap_ms: float = 0.0) -> Trace:
 def pad_ops(ops: Dict) -> Dict:
     """Pad unpadded op arrays to a PAD_OPS multiple with padding no-ops
     (is_write = -1). Bit-identical to the padding half of the seed
-    `_to_ops`."""
+    `_to_ops`.
+
+    Contract (load-bearing for `workloads.compress` and the fleet's
+    pad-tail trimming, DESIGN.md §12): pads are appended at the tail
+    ONLY, and every pad op is *identical* — constant arrival (the last
+    real arrival), lba 0, is_write -1, req_id -1. `repad_ops` extends
+    with the same fill. Identical tail ops are what make the trimmed
+    tail replayable to an exact fixed point instead of scanned."""
     o = int(ops["n_ops"])
     arrival = np.asarray(ops["arrival_ms"], np.float32)
     target = max(PAD_OPS, ((o + PAD_OPS - 1) // PAD_OPS) * PAD_OPS)

@@ -168,6 +168,12 @@ def make_trace(name: str, total_logical_pages: int, mode: str = "daily",
                seed: int = 0, capacity_pages: int | None = None,
                repeat: int = 1) -> Dict:
     """Compiled (padded) op tensors for one named MSR-like workload —
-    the seed `workloads.make_trace`, now IR-backed."""
+    the seed `workloads.make_trace`, now IR-backed.
+
+    Padding goes through `ir.pad_ops`, whose identical-tail contract is
+    load-bearing for the step engine's pad-tail trimming and fixed-point
+    replay (DESIGN.md §12): for the 11 daily MSR traces the tail is
+    25–75% of the padded length, which is most of the measured
+    compressed-path speedup (`BENCH_step_throughput.json`)."""
     return synth_trace(name, total_logical_pages, mode, seed,
                        capacity_pages, repeat).compile()

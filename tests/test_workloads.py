@@ -466,7 +466,8 @@ class TestTraceCache:
         b = c.get_or_build(recipe, build)
         assert len(calls) == 1 and a is b
         assert c.stats() == {"hits": 1, "misses": 1, "evictions": 0,
-                             "max_mb": None, "dir": str(tmp_path)}
+                             "compressed": 0, "max_mb": None,
+                             "dir": str(tmp_path)}
         # second process (fresh memory): served from disk, bit-identical
         c2 = TraceCache(root=str(tmp_path))
         d = c2.get_or_build(recipe, build)

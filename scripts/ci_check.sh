@@ -109,4 +109,48 @@ EOF
 rm -rf "$tl_tmp"
 
 echo
+echo "== segment telemetry: bit-identity vs the per-op probe (DESIGN.md §13) =="
+python -m pytest -q tests/test_telemetry.py -k "SegmentWindows"
+
+echo
+echo "== perf history: ledger smoke + injected-regression gate (DESIGN.md §13) =="
+hist_tmp=$(mktemp -d)
+python - "$hist_tmp" <<'EOF'
+import sys
+from repro.telemetry import history
+
+d = sys.argv[1]
+for ops in (1000.0, 1040.0, 980.0):
+    history.append_record("sweep", "ci:smoke", directory=d, ops_per_s=ops,
+                          geomeans={"hm_0/wa_paper": 1.5}, git_sha="ci")
+assert history._main(["--path", d, "--check"]) == 0, \
+    "history gate: steady series flagged as regression"
+# injected 2x slowdown must be caught
+history.append_record("sweep", "ci:smoke", directory=d, ops_per_s=500.0,
+                      geomeans={"hm_0/wa_paper": 1.5}, git_sha="ci")
+assert history._main(["--path", d, "--check"]) == 1, \
+    "history gate: injected 2x slowdown NOT caught"
+fails = history.check_regression(history.load_history(d)["records"])
+assert fails and "throughput" in fails[0], fails
+print(f"history gate OK: injected 2x slowdown caught ({fails[0]})")
+EOF
+rm -rf "$hist_tmp"
+
+echo
+echo "== committed BENCH_history.json passes the regression check =="
+python -m repro.telemetry.history --check
+
+echo
+echo "== segment telemetry: compressed-path overhead <= 1.3x (full traces) =="
+ovh_tmp=$(mktemp -d)
+# full-length, long-trim traces: the probe's cost is fixed per pass, so
+# the ratio only settles below the gate when the off-pass is long enough
+# to amortize it (a 32k smoke measures ~1.6x from the constant assembly
+# cost alone, and short-trim traces like prxy_0 flake the same way)
+python scripts/bench_step.py --traces proj_0,src1_2 \
+  --timeline-overhead-check --max-timeline-overhead 1.3 \
+  --out-dir "$ovh_tmp" --no-history
+rm -rf "$ovh_tmp"
+
+echo
 echo "ci_check: OK"

@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import functools
 import math
-import warnings
 from typing import Sequence
 
 import jax
@@ -43,13 +42,26 @@ from repro.core.ssd.policies import resolve_spec, tracked_region
 from repro.core.ssd.policies.engine import _build_core, reduced_of
 from repro.core.ssd.sim import (CellParams, SimState, flush_cache,
                                 init_state, make_step, replay_pads,
-                                summarize)
+                                replay_pads_windowed, summarize)
 from repro.telemetry import spans
 from repro.workloads.compress import TRIM_QUANTUM
 
 __all__ = ["stack_params", "stack_ops", "shard_cells", "init_fleet_state",
            "run_fleet", "flush_fleet", "summarize_fleet", "compile_count",
-           "cell_quantum"]
+           "cell_quantum", "shard_skip_count"]
+
+# cumulative count of shard_cells calls that fell back to one device
+# because the cell axis did not divide the mesh — a structured signal
+# (surfaced in BENCH run metadata and history records) instead of a
+# transient stderr warning that scrolls away in long sweeps
+_SHARD_SKIPS = 0
+
+
+def shard_skip_count() -> int:
+    """How many fleets ran unsharded this process (cell axis did not
+    divide the device count). Nonzero means idle devices: pad the cell
+    axis to a `cell_quantum()` multiple."""
+    return _SHARD_SKIPS
 
 
 def stack_params(params: Sequence[CellParams]) -> CellParams:
@@ -91,14 +103,12 @@ def shard_cells(tree, devices=None):
     n_cells = leaves[0].shape[0]
     if n_cells % n_dev != 0:
         # the silent path here cost real debugging time: a fleet that
-        # falls back to one device looks merely "slow" — surface it
+        # falls back to one device looks merely "slow" — count it
+        # (shard_skip_count feeds BENCH metadata + history records)
+        global _SHARD_SKIPS
+        _SHARD_SKIPS += 1
         spans.event("fleet.shard_skipped", "fleet", n_cells=n_cells,
                     n_devices=n_dev, idle_devices=n_dev - 1)
-        warnings.warn(
-            f"shard_cells: {n_cells} cells do not divide {n_dev} devices"
-            f" — running unsharded, {n_dev - 1} device(s) idle (pad the"
-            " cell axis to a cell_quantum() multiple to shard)",
-            RuntimeWarning, stacklevel=2)
         return tree
     mesh = jax.sharding.Mesh(np.array(devices), ("cells",))
     sharding = jax.sharding.NamedSharding(
@@ -162,30 +172,63 @@ def cell_quantum(cell_bucket: int | None = None) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "spec", "closed_loop",
-                                             "n_pad"),
+                                             "n_pad", "timeline_ops"),
                    donate_argnums=(2,))
 def _run_fleet_trim(cfg: SSDConfig, spec, state0: SimState, ops: dict,
                     params: CellParams, pad_t, *, closed_loop: bool,
-                    n_pad: int):
+                    n_pad: int, timeline_ops: int | None = None):
     """The trimmed fleet scan: `ops` hold only the (C, T_trim) prefix;
     the `n_pad` identical tail pads every cell shares are re-applied to
     their exact fixed point by `sim.replay_pads` (vmapped — cells
     converge independently, the batched while_loop holds finished cells
     in place). Latency for the tail is literal zeros, appended by the
-    caller outside the jit."""
+    caller outside the jit.
+
+    `timeline_ops` (static) keeps telemetry on the trimmed fast path
+    (DESIGN.md §13): the probe rows cover the scanned prefix, the
+    replayed tail snapshots counters at the remaining window boundaries
+    (`sim.replay_pads_windowed`), and `probe.windowed_prefix` assembles
+    the same per-window series the full-length scan produces —
+    bit-identical window for window. Positional windows need no lane
+    alignment here (per-op rows exist over the prefix), so any window
+    size works."""
     def one(cell_state, cell_ops, cell_params, cell_pad_t):
         step = make_step(cfg, spec, closed_loop=closed_loop,
                          params=cell_params)
-        final, latency = jax.lax.scan(step, cell_state, cell_ops)
         core = _build_core(cfg, spec, closed_loop=closed_loop,
                            params=cell_params)
-        red = replay_pads(core, reduced_of(final), final.loc[0],
-                          final.loc_ep[0], cell_pad_t, n_pad)
+        if timeline_ops is None:
+            final, latency = jax.lax.scan(step, cell_state, cell_ops)
+            red = replay_pads(core, reduced_of(final), final.loc[0],
+                              final.loc_ep[0], cell_pad_t, n_pad)
+            wtl = None
+        else:
+            from repro.telemetry import probe
+            t_scan = cell_ops["lba"].shape[0]
+            t_len = t_scan + n_pad
+            final, (latency, (head, ctr_rows)) = jax.lax.scan(
+                step, cell_state, cell_ops)
+            _, counts = probe.tail_windows(t_len, t_scan, timeline_ops)
+            red, tail_ctr = replay_pads_windowed(
+                core, reduced_of(final), final.loc[0], final.loc_ep[0],
+                cell_pad_t, counts)
+            # rebuild the full-length op arrays from the pad contract
+            # (latency 0.0, is_write -1, arrival = pad_t)
+            wtl = probe.windowed_prefix(
+                head, ctr_rows, tail_ctr,
+                jnp.concatenate([latency, jnp.zeros(n_pad, jnp.float32)]),
+                jnp.concatenate([cell_ops["is_write"],
+                                 jnp.full((n_pad,), -1, jnp.int32)]),
+                jnp.concatenate([cell_ops["arrival_ms"],
+                                 jnp.full((n_pad,), cell_pad_t,
+                                          jnp.float32)]),
+                window_ops=timeline_ops, t_len=t_len, t_scan=t_scan)
         final = final._replace(
             busy=red.busy, slc_used=red.slc_used, rp_done=red.rp_done,
             trad_used=red.trad_used, valid_mig=red.valid_mig,
             epoch=red.epoch, counters=red.counters, prev_t=red.prev_t,
-            idle_cum=red.idle_cum, idle_seen=red.idle_seen)
+            idle_cum=red.idle_cum, idle_seen=red.idle_seen,
+            timeline=wtl)
         return latency, final
 
     return jax.vmap(one)(state0, ops, params, pad_t)
@@ -233,27 +276,29 @@ def run_fleet(cfg: SSDConfig, policy, ops: dict, params: CellParams,
     Raw-speed knobs (DESIGN.md §12), both default-off so existing callers
     — notably the search engine's compile-count contract — see no change:
     `trim_pads` scans only the shared live prefix and replays the all-pad
-    tail to its exact fixed point (skipped automatically for telemetry
-    runs, whose positional windows are defined over the full padded
-    length, and for endurance runs, where tail reclamation keeps erasing
-    into the wear state); `packed` shrinks the donated carry to int16
-    plane fields (gate on `policies.state.can_pack`). Results are
+    tail to its exact fixed point — telemetry runs stay on it too (the
+    tail replay snapshots counters at the remaining window boundaries,
+    DESIGN.md §13); only endurance runs skip it (tail reclamation keeps
+    erasing into the wear state); `packed` shrinks the donated carry to
+    int16 plane fields (gate on `policies.state.can_pack`). Results are
     bit-identical either way (tests/test_compress.py)."""
     spec = resolve_spec(policy)
     n_cells = ops["lba"].shape[0]
     endurance = params.endurance is not None
-    if trim_pads and timeline_ops is None and not endurance:
+    if trim_pads and not endurance:
         is_w = np.asarray(ops["is_write"])
         t_len = is_w.shape[1]
         t_trim = _trim_len(is_w)
         if t_trim < t_len:
             state0 = shard_cells(init_fleet_state(
-                cfg, n_logical, n_cells, packed=packed))
+                cfg, n_logical, n_cells, timeline=timeline_ops,
+                packed=packed))
             ops_trim = {k: v[:, :t_trim] for k, v in ops.items()}
             pad_t = jnp.asarray(ops["arrival_ms"][:, t_trim], jnp.float32)
             latency, final = _run_fleet_trim(
                 cfg, spec, state0, ops_trim, params, pad_t,
-                closed_loop=closed_loop, n_pad=t_len - t_trim)
+                closed_loop=closed_loop, n_pad=t_len - t_trim,
+                timeline_ops=timeline_ops)
             latency = jnp.pad(latency, ((0, 0), (0, t_len - t_trim)))
             return latency, final
     state0 = shard_cells(init_fleet_state(

@@ -562,7 +562,7 @@ def build_step(cfg, policy, *, closed_loop: bool, params: CellParams):
 
 
 def build_segment_step(cfg, policy, *, closed_loop: bool,
-                       params: CellParams):
+                       params: CellParams, emit_probe: bool = False):
     """The compressed-segment executor's outer-scan step (DESIGN.md §12).
 
     Carry: `(Reduced, loc, loc_ep)`. Input: one segment — K consecutive
@@ -584,9 +584,15 @@ def build_segment_step(cfg, policy, *, closed_loop: bool,
     with `build_step` is by construction. Returns per-lane latencies (K,)
     in trace order.
 
-    Endurance and the telemetry probe are per-op-path concerns: callers
-    (sim.run_compressed / sweep.runner) fall back to `build_step` for
-    those carries."""
+    Endurance stays a per-op-path concern (the segment executor rejects
+    wear carries), but the telemetry probe has a segment-aware form
+    (DESIGN.md §13): with `emit_probe` (static) each lane additionally
+    emits the core's observation-only `occ_delta`/`idle_claim` scalars
+    and the outer step emits the post-segment cumulative counter vector
+    — per-segment boundary snapshots `probe.windowed_segments`
+    re-expands into the per-op path's exact window series. Off, the
+    emitted pytree (and hence the compiled program) is byte-identical
+    to PR 8."""
     spec = resolve_spec(policy)
     if params.endurance is not None:
         raise ValueError("segment executor does not carry wear state; "
@@ -613,20 +619,27 @@ def build_segment_step(cfg, policy, *, closed_loop: bool,
                 old, old_ep)
             buf_loc = buf_loc.at[x["lane"]].set(out.loc_val)
             buf_ep = buf_ep.at[x["lane"]].set(out.loc_ep_val)
-            return (red_n, buf_loc, buf_ep), (out.latency, out.loc_val,
-                                              out.loc_ep_val)
+            emit = (out.latency, out.loc_val, out.loc_ep_val)
+            if emit_probe:
+                emit += (out.occ_delta, out.idle_claim)
+            return (red_n, buf_loc, buf_ep), emit
 
-        (red, _, _), (lat_k, locv_k, epv_k) = jax.lax.scan(
+        (red, _, _), lane_out = jax.lax.scan(
             lane,
             (red, jnp.zeros(k, jnp.int8), jnp.zeros(k, jnp.int16)),
             {"arrival_ms": seg["arrival_ms"], "lba": lba_k,
              "is_write": seg["is_write"], "src": seg["src"],
              "old": old_k, "old_ep": old_ep_k,
              "lane": jnp.arange(k, dtype=jnp.int32)})
+        lat_k, locv_k, epv_k = lane_out[:3]
         # one duplicate-free scatter: only each lba's final lane carries
         # its real lba here; superseded lanes hold the sentinel and drop
         loc = loc.at[seg["scat_lba"]].set(locv_k, mode="drop")
         loc_ep = loc_ep.at[seg["scat_lba"]].set(epv_k, mode="drop")
+        if emit_probe:
+            occ_k, idle_k = lane_out[3:]
+            return (red, loc, loc_ep), (lat_k, occ_k, idle_k,
+                                        red.counters)
         return (red, loc, loc_ep), lat_k
 
     return seg_step

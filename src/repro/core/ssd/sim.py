@@ -176,37 +176,115 @@ def replay_pads(core, red: Reduced, old0, ep0, pad_t, n_pad: int):
     return red
 
 
+def replay_pads_windowed(core, red: Reduced, old0, ep0, pad_t, counts):
+    """`replay_pads` that additionally snapshots the cumulative counter
+    vector at telemetry-window boundaries inside the tail (DESIGN.md
+    §13). `counts` (static ints, from `probe.tail_windows`) partitions
+    the tail: after applying the first counts[0] pads the first
+    boundary's counters are read, and so on. Returns (final Reduced,
+    (len(counts), C) snapshots).
+
+    Exactness: each window's bounded `while_loop` stops early at the
+    fixed point, where further pad applications are the identity — so
+    every snapshot equals the counters a full per-op scan would have
+    reached at that op index, and the final carry equals `replay_pads`'s.
+    The convergence flag rides the outer scan carry, so once a cell
+    converges the remaining windows cost one predicate each."""
+    op = {"arrival_ms": jnp.asarray(pad_t, jnp.float32),
+          "lba": jnp.int32(0), "is_write": jnp.int32(-1)}
+
+    def window(carry, cnt):
+        red_c, changed = carry
+
+        def cond(c):
+            i, _, ch = c
+            return (i < cnt) & ch
+
+        def body(c):
+            i, r, _ = c
+            r2, _ = core(r, op, old0, ep0)
+            return i + 1, r2, ~_tree_equal(r2, r)
+
+        _, red_n, ch = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), red_c, changed))
+        return (red_n, ch), red_n.counters
+
+    (red, _), snaps = jax.lax.scan(
+        window, (red, jnp.bool_(True)),
+        jnp.asarray(list(counts), jnp.int32))
+    return red, snaps
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "policy",
                                              "closed_loop", "n_logical",
-                                             "t_len", "n_pad", "packed"))
+                                             "t_len", "n_pad", "packed",
+                                             "timeline_ops"))
 def _run_segments(cfg: SSDConfig, policy, segs, pad_t, *,
                   closed_loop: bool, n_logical: int, t_len: int,
-                  n_pad: int, packed: bool, params: CellParams):
+                  n_pad: int, packed: bool, params: CellParams,
+                  timeline_ops: int | None = None):
     spec = resolve_spec(policy)
+    emit = timeline_ops is not None
     seg_step = build_segment_step(cfg, spec, closed_loop=closed_loop,
-                                  params=params)
+                                  params=params, emit_probe=emit)
     state0 = init_state(cfg, n_logical, packed=packed)
-    (red, loc, loc_ep), lat = jax.lax.scan(
+    (red, loc, loc_ep), out = jax.lax.scan(
         seg_step, (reduced_of(state0), state0.loc, state0.loc_ep), segs)
+    lat = out[0] if emit else out
     latency = jnp.concatenate(
         [lat.reshape(-1), jnp.zeros(n_pad, jnp.float32)])
+    core = None
     if n_pad:
         core = _build_core(cfg, spec, closed_loop=closed_loop,
                            params=params)
+    wtl = tail_ctr = None
+    if emit:
+        from repro.telemetry import probe
+        _, occ_d, idle_c, seg_ctr = out
+        t_scan = t_len - n_pad
+        if n_pad:
+            _, counts = probe.tail_windows(t_len, t_scan, timeline_ops)
+            red, tail_ctr = replay_pads_windowed(
+                core, red, loc[0], loc_ep[0], pad_t, counts)
+        # reconstruct the per-op head columns from the lane outputs: the
+        # occupancy integral is a prefix sum of integer-valued f32
+        # deltas — exact under any association, so cumsum equals the
+        # per-op path's sequential accumulation bit for bit
+        p_total = cfg.num_planes
+        cap_boost = (jnp.int32(0) if params.cap_boost is None
+                     else params.cap_boost)
+        cap_tot = ((params.cap_basic + cap_boost + params.cap_trad)
+                   .astype(jnp.float32) * p_total)
+        is_write_scan = segs["is_write"].reshape(-1)
+        occ_frac = (jnp.cumsum(occ_d.reshape(-1))
+                    / jnp.maximum(cap_tot, 1.0))
+        occ_col = jnp.where(is_write_scan < 0, 0.0, occ_frac)
+        idle_col = jnp.maximum(idle_c.reshape(-1), 0.0)
+        is_write = jnp.concatenate(
+            [is_write_scan, jnp.full((n_pad,), -1, jnp.int32)])
+        arrival = jnp.concatenate(
+            [segs["arrival_ms"].reshape(-1),
+             jnp.full((n_pad,), jnp.asarray(pad_t, jnp.float32))])
+        wtl = probe.windowed_segments(
+            occ_col, idle_col, seg_ctr, tail_ctr, latency, is_write,
+            arrival, window_ops=timeline_ops, t_len=t_len,
+            t_scan=t_scan, seg_lanes=segs["lba"].shape[1])
+    elif n_pad:
         red = replay_pads(core, red, loc[0], loc_ep[0], pad_t, n_pad)
     state = SimState(busy=red.busy, slc_used=red.slc_used,
                      rp_done=red.rp_done, trad_used=red.trad_used,
                      valid_mig=red.valid_mig, epoch=red.epoch,
                      loc=loc, loc_ep=loc_ep, counters=red.counters,
                      prev_t=red.prev_t, idle_cum=red.idle_cum,
-                     idle_seen=red.idle_seen)
+                     idle_seen=red.idle_seen, timeline=wtl)
     return latency, state
 
 
 def run_compressed(cfg: SSDConfig, policy, comp, *, closed_loop: bool,
                    n_logical: int, waste_p=0.0,
                    params: CellParams | None = None,
-                   packed: bool = False):
+                   packed: bool = False,
+                   timeline_ops: int | None = None):
     """Simulate one compressed trace (`workloads.compress.compress_ops`)
     through the segment executor. Returns (per-op latency over the
     original padded length, final SimState) — bit-identical to
@@ -214,20 +292,34 @@ def run_compressed(cfg: SSDConfig, policy, comp, *, closed_loop: bool,
     flag changes carry dtypes, never values; gate it on
     `policies.state.can_pack`).
 
-    Endurance and telemetry runs have no compressed path — use
-    `run_trace` (the engine's segment executor rejects wear state, and
-    probe windows are defined positionally over the uncompressed
-    stream)."""
+    `timeline_ops` attaches the segment-aware probe (DESIGN.md §13):
+    the scan emits per-lane occupancy deltas / idle claims plus one
+    counter snapshot per segment, and `probe.windowed_segments`
+    re-expands them into the same `WindowedTimeline` the per-op path
+    produces — bit-identical window for window. Requires
+    `timeline_ops % SEG_LANES == 0` (window boundaries must land on
+    segment ends); `None` keeps the PR 8 telemetry-off scan unchanged.
+
+    Endurance runs have no compressed path — use `run_trace` (the
+    engine's segment executor rejects wear state)."""
     if params is None:
         params = default_params(cfg, policy, waste_p)
     if params.endurance is not None:
         raise ValueError("no compressed path for endurance runs; "
                          "use run_trace")
+    if timeline_ops is not None:
+        lanes = next(iter(comp.segs.values())).shape[1]
+        if int(timeline_ops) % lanes:
+            raise ValueError(
+                f"segment telemetry needs window_ops % {lanes} == 0; "
+                f"got {timeline_ops}")
     segs = {k: jnp.asarray(v) for k, v in comp.segs.items()}
     return _run_segments(cfg, policy, segs, jnp.float32(comp.pad_t),
                          closed_loop=closed_loop, n_logical=n_logical,
                          t_len=comp.t_len, n_pad=comp.n_pad,
-                         packed=packed, params=params)
+                         packed=packed, params=params,
+                         timeline_ops=(None if timeline_ops is None
+                                       else int(timeline_ops)))
 
 
 def flush_cache(cfg: SSDConfig, state: SimState, policy="baseline"):

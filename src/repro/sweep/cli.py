@@ -129,6 +129,18 @@ def _parse(argv):
                     help="re-run the sweep warm with telemetry off and on "
                     "and record the wall-time ratio in the timeline "
                     "artifact (CI gate; requires --timeline)")
+    ap.add_argument("--history-check", action="store_true",
+                    help="after appending this run to BENCH_history.json, "
+                    "fail (exit 1) on >20%% throughput drop or any "
+                    "geomean-fidelity drift vs the trailing same-config "
+                    "baseline (repro.telemetry.history)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the BENCH_history.json append (one-off "
+                    "experiments that should not seed a baseline)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace of the "
+                    "sweep into DIR (TensorBoard/Perfetto-openable; "
+                    "degrades to a no-op without a profiler backend)")
     ap.add_argument("--bench", action="store_true",
                     help="also wall-clock fleet vs looped eval_cell")
     ap.add_argument("--name", default=None, help="benchmark artifact name "
@@ -340,12 +352,15 @@ def main(argv=None) -> int:
           f"({cfg.capacity_gb:.1f} GB, SLC cache "
           f"{cfg.slc_cap_pages * cfg.num_planes} pages)")
     group_timings = []
+    from repro.telemetry import profiling
     with (tracer.activate() if tracer else contextlib.nullcontext()):
-        results = run_sweep(cfg, points, max_ops=args.max_ops,
-                            progress=lambda s: print(f"  {s}"),
-                            trace_cache=cache, timings=group_timings,
-                            timeline_ops=args.timeline,
-                            timelines=timelines)
+        with profiling.profile(args.profile):
+            results = run_sweep(cfg, points, max_ops=args.max_ops,
+                                progress=lambda s: print(f"  {s}"),
+                                trace_cache=cache, timings=group_timings,
+                                timeline_ops=args.timeline,
+                                timelines=timelines)
+            profiling.emit_device_events("sweep.done")
         overhead = None
         if args.timeline_overhead_check:
             # warm-vs-warm: the main run above compiled the telemetry-on
@@ -393,7 +408,8 @@ def main(argv=None) -> int:
         "cells_per_s": round(tot_cells / max(disp + blk, 1e-9), 4),
         "by_group": {f"{g['composition']}/{g['mode']}": {
             "ops_per_s": g["ops_per_s"], "cells_per_s": g["cells_per_s"],
-            "t_scan": g["t_scan"], "packed": g["packed"]}
+            "t_scan": g["t_scan"], "packed": g["packed"],
+            "exec_path": g["exec_path"]}
             for g in group_timings}}
     print(f"  throughput: {throughput['ops_per_s'] / 1e6:.3f} Mops/s, "
           f"{throughput['cells_per_s']:.2f} cells/s")
@@ -408,6 +424,7 @@ def main(argv=None) -> int:
                "group_timings": group_timings,
                "throughput": throughput,
                "fleet_compiles": fleet_compiles,
+               "shard_skipped": fleet.shard_skip_count(),
                "results": results,
                "geomeans": {f"{m}/{p}": v for (m, p), v in
                             policy_geomeans(results).items()}}
@@ -444,6 +461,9 @@ def main(argv=None) -> int:
             cells, window_ops=args.timeline, tracer=tracer,
             extra={"grid": args.grid or "custom", "max_ops": args.max_ops,
                    "scale": args.scale, "fleet_compiles": fleet_compiles,
+                   "shard_skipped": fleet.shard_skip_count(),
+                   "exec_paths": {f"{g['composition']}/{g['mode']}":
+                                  g["exec_path"] for g in group_timings},
                    **({"overhead": overhead} if overhead else {})})
         if not args.no_save:
             tl_name = (f"{args.name}_timeline" if args.name
@@ -457,6 +477,36 @@ def main(argv=None) -> int:
         name = args.name or f"sweep_{args.grid or 'custom'}"
         path = save_bench(name, payload, directory=args.out_dir, cfg=cfg)
         print(f"\nwrote {path}")
+    from repro.telemetry import history
+    if not args.no_save and not args.no_history:
+        # fidelity geomeans flattened to scalars: the history gate treats
+        # any drift as a regression (they are bit-identity-backed)
+        flat_gm = {f"{k}/{metric}": v[metric]
+                   for k, v in payload["geomeans"].items()
+                   for metric in ("mean_write_latency_ms", "wa_paper")
+                   if metric in v}
+        rec = history.append_record(
+            "sweep", f"{args.grid or 'custom'}:scale={args.scale}"
+                     f":max_ops={args.max_ops}:seeds={len(seeds)}",
+            directory=args.out_dir,
+            ops_per_s=throughput["ops_per_s"],
+            cells_per_s=throughput["cells_per_s"],
+            geomeans=flat_gm, compiles=fleet_compiles,
+            shard_skipped=fleet.shard_skip_count(),
+            meta={"n_cells": len(points),
+                  "timeline": args.timeline,
+                  "exec_paths": sorted({g["exec_path"]
+                                        for g in group_timings})})
+        print(f"history: appended {rec['kind']}:{rec['config']} "
+              f"@ {str(rec['git_sha'])[:12]}")
+    if args.history_check:
+        failures = history.check_regression(
+            history.load_history(args.out_dir)["records"])
+        if failures:
+            for line in failures:
+                print(f"REGRESSION {line}", file=sys.stderr)
+            return 1
+        print("history: no regression vs trailing baseline")
     return 0
 
 
@@ -546,6 +596,7 @@ def _run_search(args, cfg, seed: int) -> int:
                "space": [c.to_json() for c in space],
                "trace_cache": cache.stats(),
                "fleet_compiles": fleet.compile_count(),
+               "shard_skipped": fleet.shard_skip_count(),
                **doc}
     if scen is not None:
         payload["scenario_search"] = scen
@@ -553,6 +604,21 @@ def _run_search(args, cfg, seed: int) -> int:
         name = args.name or "search"
         path = save_bench(name, payload, directory=args.out_dir, cfg=cfg)
         print(f"\nwrote {path}")
+        if not args.no_history:
+            from repro.telemetry import history
+            total_cells = sum(r.get("cells", 0) for r in doc["rounds"])
+            wall = sum(r.get("wall_s", 0.0) for r in doc["rounds"])
+            rec = history.append_record(
+                "search", f"{budget}:scale={args.scale}"
+                          f":max_ops={args.max_ops}",
+                directory=args.out_dir,
+                cells_per_s=(total_cells / wall if wall else None),
+                compiles=fleet.compile_count(),
+                shard_skipped=fleet.shard_skip_count(),
+                meta={"n_candidates": len(space),
+                      "front_size": len(doc["front"])})
+            print(f"history: appended {rec['kind']}:{rec['config']} "
+                  f"@ {str(rec['git_sha'])[:12]}")
     return 0
 
 

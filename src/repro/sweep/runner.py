@@ -133,8 +133,11 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
 
     Raw-speed defaults (DESIGN.md §12): `trim_pads=True` scans only each
     group's shared live prefix and replays the identical all-pad tail to
-    its exact fixed point (endurance and telemetry groups automatically
-    take the full path); `packed="auto"` carries int16 plane fields
+    its exact fixed point — telemetry groups stay on it (segment-aware
+    windows, DESIGN.md §13); endurance groups automatically take the
+    full path (a one-line warning marks the fallback when a timeline was
+    requested, and each timings row records which `exec_path` ran);
+    `packed="auto"` carries int16 plane fields
     whenever every cell's caps provably fit (`policies.state.can_pack`),
     `True`/`False` force it. Results are bit-identical either way —
     committed BENCH geomeans are the regression gate."""
@@ -212,7 +215,7 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
                 "composition": grp["spec"].composition,
                 "cells": len(grp["pts"]), "pad": grp["pad"],
                 "t_len": grp["t_len"], "t_scan": grp["t_scan"],
-                "packed": grp["packed"],
+                "packed": grp["packed"], "exec_path": grp["exec_path"],
                 "dispatch_s": round(grp["dispatch_s"], 4),
                 "block_s": round(block_s, 4),
                 # ops/s credits the full padded length each cell covers
@@ -245,7 +248,16 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
         # every cell's caps must provably fit int16
         pack_grp = (packed if isinstance(packed, bool)
                     else all(can_pack(cfg, n_logical, p) for p in params))
-        trim_grp = (trim_pads and timeline_ops is None and not _endur)
+        trim_grp = (trim_pads and not _endur)
+        if timeline_ops is not None and trim_pads and _endur:
+            # the fallback used to be silent — a fleet that quietly
+            # forfeits the fast path just looks "slow" (DESIGN.md §13)
+            import warnings
+            warnings.warn(
+                f"sweep group {names}/{mode}: timeline requested on an "
+                "endurance group — no trimmed fast path for wear "
+                "tracking, falling back to the full per-op scan",
+                RuntimeWarning, stacklevel=2)
         if progress:
             progress(f"fleet {names}/{mode}: {n_cells} cells"
                      f"{f' (+{pad} pad)' if pad else ''} x {_t_len} ops"
@@ -271,6 +283,8 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
                         "summ": summ, "names": names, "mode": mode,
                         "spec": spec, "t_len": _t_len, "pad": pad,
                         "t_scan": t_scan, "packed": pack_grp,
+                        "exec_path": ("segment" if t_scan < _t_len
+                                      else "per_op"),
                         "dispatch_s": rec["dur_s"],
                         "compiles": rec["args"]["compiles"],
                         "tl": states.timeline})

@@ -23,6 +23,12 @@ Three layers, separable by dependency weight:
   histogram percentiles, cliff detection) and artifact export
   (`BENCH_timeline.json` payloads, Chrome trace-event files loadable in
   `chrome://tracing` / Perfetto).
+* `history` — the append-only, git-SHA-keyed perf-regression ledger
+  (`BENCH_history.json`, stdlib-only; DESIGN.md §13) every sweep /
+  search / bench_step run appends to, gated by
+  `python -m repro.telemetry.history --check`.
+* `profiling` — opt-in `jax.profiler` capture + device memory/compile
+  stats posted as span events (jax imported lazily; DESIGN.md §13).
 """
 from repro.telemetry.export import (chrome_trace, round_floats,
                                     timeline_payload)
@@ -35,4 +41,16 @@ __all__ = [
     "Tracer", "active_tracer", "span", "event",
     "timeline_to_numpy", "cell_timeline", "series", "detect_cliff",
     "percentile", "timeline_payload", "chrome_trace", "round_floats",
+    "append_record", "check_regression", "load_history",
 ]
+
+_HISTORY_NAMES = ("append_record", "check_regression", "load_history")
+
+
+def __getattr__(name):
+    # history stays un-imported at package import so that
+    # `python -m repro.telemetry.history` is not a runpy double-import
+    if name in _HISTORY_NAMES:
+        from repro.telemetry import history
+        return getattr(history, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

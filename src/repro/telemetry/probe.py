@@ -52,6 +52,7 @@ import numpy as np
 
 __all__ = ["TimelineState", "WindowedTimeline", "LAT_EDGES_MS",
            "N_LAT_BUCKETS", "init_timeline", "accumulate", "windowed",
+           "windowed_prefix", "windowed_segments", "tail_windows",
            "n_windows", "ROW_OCC", "ROW_IDLE", "ROW_WEAR"]
 
 # static histogram bucket edges (ms), quarter-decade-ish log spacing from
@@ -140,6 +141,53 @@ def accumulate(tl: TimelineState, *, is_pad, counters, occ_delta,
     return new_tl, (jnp.stack(cols), counters)
 
 
+def _assemble(occ_col, idle_col, snap, latency, is_write, arrival, *,
+              window_ops: int, t_len: int,
+              wear_bound=None) -> WindowedTimeline:
+    """Shared window assembly: the one op sequence every telemetry path
+    runs, so per-op, trimmed-fleet and segment-produced windows are
+    bit-identical by construction (not by tolerance).
+
+    occ_col/idle_col: (T,) per-op head columns (occupancy fraction with
+    pads zeroed, clamped idle claim); snap: (W, C) cumulative counter
+    snapshots at the window boundaries — how a path obtains them (a
+    per-op gather, per-segment boundary rows, or fixed-point tail
+    replay) is its own business; latency/is_write/arrival: the full
+    (T,) op-aligned arrays."""
+    wo = int(window_ops)
+    W = n_windows(t_len, wo)
+    pad = W * wo - t_len
+
+    def _win(x, red="sum"):
+        x = jnp.pad(x, (0, pad)).reshape(W, wo)
+        return x.sum(axis=1) if red == "sum" else x.max(axis=1)
+
+    live = (is_write >= 0).astype(jnp.float32)      # pads are < 0
+    wf = (is_write == 1).astype(jnp.float32)
+
+    prev = jnp.concatenate([jnp.zeros((1, snap.shape[1]),
+                                      snap.dtype), snap[:-1]])
+
+    bucket = jnp.searchsorted(jnp.asarray(LAT_EDGES_MS), latency,
+                              side="right").astype(jnp.int32)
+    win = jnp.arange(t_len, dtype=jnp.int32) // wo
+    hist = jnp.zeros(W * N_LAT_BUCKETS, jnp.float32).at[
+        win * N_LAT_BUCKETS + bucket].add(wf).reshape(W, N_LAT_BUCKETS)
+
+    return WindowedTimeline(
+        window_ops=jnp.int32(wo),
+        ops=_win(live),
+        writes=_win(wf),
+        lat_sum=_win(wf * latency),
+        lat_hist=hist,
+        occ_sum=_win(occ_col),
+        idle_ms=_win(idle_col),
+        t_last=_win(live * arrival, "max"),
+        ctr=snap - prev,
+        wear_peak=wear_bound,
+    )
+
+
 def windowed(rows, latency: jnp.ndarray, is_write: jnp.ndarray,
              arrival: jnp.ndarray, *, window_ops: int, t_len: int,
              endurance: bool = False) -> WindowedTimeline:
@@ -159,36 +207,98 @@ def windowed(rows, latency: jnp.ndarray, is_write: jnp.ndarray,
     head, ctr_rows = rows
     wo = int(window_ops)
     W = n_windows(t_len, wo)
-    pad = W * wo - t_len
-
-    def _win(x, red="sum"):
-        x = jnp.pad(x, (0, pad)).reshape(W, wo)
-        return x.sum(axis=1) if red == "sum" else x.max(axis=1)
-
-    live = (is_write >= 0).astype(jnp.float32)      # pads are < 0
-    wf = (is_write == 1).astype(jnp.float32)
-
     bound = jnp.minimum((jnp.arange(W, dtype=jnp.int32) + 1) * wo - 1,
                         t_len - 1)
-    snap = ctr_rows[bound]                          # (W, C)
-    prev = jnp.concatenate([jnp.zeros((1, ctr_rows.shape[1]),
-                                      ctr_rows.dtype), snap[:-1]])
+    return _assemble(
+        head[:, ROW_OCC], head[:, ROW_IDLE], ctr_rows[bound],
+        latency, is_write, arrival, window_ops=wo, t_len=t_len,
+        wear_bound=head[bound, ROW_WEAR] if endurance else None)
 
-    bucket = jnp.searchsorted(jnp.asarray(LAT_EDGES_MS), latency,
-                              side="right").astype(jnp.int32)
-    win = jnp.arange(t_len, dtype=jnp.int32) // wo
-    hist = jnp.zeros(W * N_LAT_BUCKETS, jnp.float32).at[
-        win * N_LAT_BUCKETS + bucket].add(wf).reshape(W, N_LAT_BUCKETS)
 
-    return WindowedTimeline(
-        window_ops=jnp.int32(wo),
-        ops=_win(live),
-        writes=_win(wf),
-        lat_sum=_win(wf * latency),
-        lat_hist=hist,
-        occ_sum=_win(head[:, ROW_OCC]),
-        idle_ms=_win(head[:, ROW_IDLE]),
-        t_last=_win(live * arrival, "max"),
-        ctr=snap - prev,
-        wear_peak=head[bound, ROW_WEAR] if endurance else None,
-    )
+def tail_windows(t_len: int, t_scan: int, window_ops: int):
+    """Static split of the window boundaries around the scanned/replayed
+    seam: windows 0..w0-1 end inside the scanned prefix [0, t_scan);
+    windows w0..W-1 end among the replayed tail pads.
+
+    Returns (w0, counts) — `counts[j]` is how many tail pads separate
+    tail-window j's boundary from the previous boundary (the first
+    counts from `t_scan - 1`), so `sum(counts) == t_len - t_scan` and a
+    fixed-point replayer can snapshot counters at exactly the per-op
+    boundary positions. Pure Python ints: both t_len and t_scan are
+    static shapes wherever this is called."""
+    wo = int(window_ops)
+    W = n_windows(t_len, wo)
+    bounds = [min((w + 1) * wo - 1, t_len - 1) for w in range(W)]
+    w0 = sum(1 for b in bounds if b < t_scan)
+    counts, prev = [], t_scan - 1
+    for b in bounds[w0:]:
+        counts.append(b - prev)
+        prev = b
+    return w0, counts
+
+
+def windowed_prefix(head, ctr_rows, tail_ctr, latency, is_write, arrival,
+                    *, window_ops: int, t_len: int,
+                    t_scan: int) -> WindowedTimeline:
+    """Per-op probe rows over a trimmed prefix + replayed-tail counter
+    snapshots -> the same per-window series `windowed` builds over the
+    full padded trace, bit-identical window for window.
+
+    head/ctr_rows: the probe's (t_scan, ...) rows from scanning only the
+    live prefix; tail_ctr: (W - w0, C) cumulative counter snapshots at
+    the tail-window boundaries (`sim.replay_pads_windowed`);
+    latency/is_write/arrival: full (t_len,) arrays — the caller rebuilds
+    the tail from the pad contract (latency 0.0, is_write -1, arrival
+    pad_t). Exactness: tail pads contribute literal zeros to every
+    window sum (x + 0.0 == x for the non-negative accumulators), the
+    occupancy/idle head columns are defined as 0.0 on pads, and the
+    counter snapshots replayed to the same op positions are the same
+    values the full scan would have emitted."""
+    wo = int(window_ops)
+    w0, _ = tail_windows(t_len, t_scan, wo)
+    n_tail = t_len - t_scan
+    bound = np.minimum((np.arange(w0) + 1) * wo - 1, t_len - 1)
+    snap = ctr_rows[jnp.asarray(bound, jnp.int32)]
+    if tail_ctr is not None and n_windows(t_len, wo) > w0:
+        snap = jnp.concatenate([snap, tail_ctr])
+    return _assemble(
+        jnp.pad(head[:, ROW_OCC], (0, n_tail)),
+        jnp.pad(head[:, ROW_IDLE], (0, n_tail)),
+        snap, latency, is_write, arrival, window_ops=wo, t_len=t_len)
+
+
+def windowed_segments(occ_col, idle_col, seg_ctr, tail_ctr, latency,
+                      is_write, arrival, *, window_ops: int, t_len: int,
+                      t_scan: int, seg_lanes: int) -> WindowedTimeline:
+    """Segment-executor telemetry -> per-window series, bit-identical to
+    the per-op path (DESIGN.md §13).
+
+    The segment executor emits counters once per K-lane segment, not per
+    op — enough exactly when every window boundary lands on a segment
+    end, i.e. `window_ops % seg_lanes == 0` (validated in
+    `sim.run_compressed`): boundary op (w+1)*wo - 1 is then the last
+    lane of segment (w+1)*wo/K - 1, whose post-segment counters equal
+    the per-op cumulative row at that op. occ_col/idle_col are the
+    (t_scan,) head columns the caller reconstructs from the per-lane
+    occ_delta/idle_claim outputs (exact: the deltas are integer-valued
+    f32, so their prefix sums are associativity-independent);
+    tail_ctr/latency/is_write/arrival as in `windowed_prefix`."""
+    wo = int(window_ops)
+    if wo % seg_lanes:
+        raise ValueError(
+            f"segment telemetry needs window_ops % {seg_lanes} == 0 "
+            f"(window boundaries must land on segment ends), got {wo}")
+    w0, _ = tail_windows(t_len, t_scan, wo)
+    n_tail = t_len - t_scan
+    # boundary op -> its segment: bounds below t_scan are either wo
+    # multiples minus one (wo % K == 0) or the clamped final op of a
+    # fully-scanned trace (t_scan % K == 0 by the compress contract),
+    # so bound + 1 is always a whole number of segments
+    bound = np.minimum((np.arange(w0) + 1) * wo - 1, t_len - 1)
+    idx = (bound + 1) // seg_lanes - 1
+    snap = seg_ctr[jnp.asarray(idx, jnp.int32)]
+    if tail_ctr is not None and n_windows(t_len, wo) > w0:
+        snap = jnp.concatenate([snap, tail_ctr])
+    return _assemble(
+        jnp.pad(occ_col, (0, n_tail)), jnp.pad(idle_col, (0, n_tail)),
+        snap, latency, is_write, arrival, window_ops=wo, t_len=t_len)

@@ -314,12 +314,23 @@ class TestFleetSatellites:
             assert q == math.lcm(bucket, n_dev)
             assert q % bucket == 0 and q % n_dev == 0
 
-    def test_shard_skipped_warns(self):
+    def test_shard_skipped_counted(self):
+        """A non-dividing cell axis falls back unsharded and increments
+        the structured `shard_skip_count` counter (surfaced in BENCH run
+        metadata + history records) instead of warning to stderr."""
         devices = list(jax.devices()) * 2     # synthetic 2-device mesh
         tree = {"x": jnp.ones((3, 4))}        # 3 cells don't divide 2
-        with pytest.warns(RuntimeWarning, match="do not divide"):
-            out = fleet.shard_cells(tree, devices=devices)
+        before = fleet.shard_skip_count()
+        out = fleet.shard_cells(tree, devices=devices)
         assert out is tree                    # unsharded, data untouched
+        assert fleet.shard_skip_count() == before + 1
+        # the single-device no-op (nothing to shard) must NOT count
+        # (a real dividing multi-device shard can't be exercised on one
+        # CPU: a duplicated-device mesh trips jax's reshard internals)
+        ok = fleet.shard_cells({"x": jnp.ones((4, 4))},
+                               devices=jax.devices()[:1])
+        assert fleet.shard_skip_count() == before + 1
+        assert ok is not None
 
 
 class TestCommittedArtifacts:

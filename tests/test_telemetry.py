@@ -20,12 +20,13 @@ import pytest
 from repro.configs.ssd_paper import PAPER_SSD
 from repro.core.ssd import fleet
 from repro.core.ssd.driver import _agc_waste_p
-from repro.core.ssd.sim import default_params, run_trace
+from repro.core.ssd.sim import default_params, run_compressed, run_trace
 from repro.core.ssd.workloads import make_trace, stack_traces, truncate_trace
 from repro.telemetry import (Tracer, active_tracer, cell_timeline,
                              detect_cliff, event, percentile, series, span,
                              timeline_to_numpy)
 from repro.telemetry.probe import LAT_EDGES_MS, n_windows
+from repro.workloads.compress import SEG_LANES, TRIM_QUANTUM, compress_ops
 
 CFG = PAPER_SSD.scaled(128)
 N_LOGICAL = min(CFG.total_pages, 1 << 16)
@@ -38,6 +39,34 @@ def _trace(mode, name="hm_0"):
     return truncate_trace(
         make_trace(name, N_LOGICAL, mode=mode,
                    capacity_pages=CFG.total_pages), MAX_OPS)
+
+
+def _padded_trace(mode, name="hm_0", n_pad=TRIM_QUANTUM):
+    """`_trace` + an `ir.pad_ops`-contract tail (constant arrival, lba 0,
+    is_write -1) so compression trims and telemetry windows span the
+    fixed-point tail replay — the load-bearing segment-telemetry path."""
+    tr = _trace(mode, name)
+    return {
+        "arrival_ms": np.concatenate(
+            [tr["arrival_ms"],
+             np.full(n_pad, tr["arrival_ms"][-1], np.float32)]),
+        "lba": np.concatenate(
+            [tr["lba"], np.zeros(n_pad, np.asarray(tr["lba"]).dtype)]),
+        "is_write": np.concatenate(
+            [tr["is_write"],
+             np.full(n_pad, -1, np.asarray(tr["is_write"]).dtype)]),
+    }
+
+
+def _assert_timelines_equal(ref, got, label=""):
+    assert got is not None and ref is not None
+    for field in ref._fields:
+        a, b = getattr(ref, field), getattr(got, field)
+        if a is None:
+            assert b is None, f"{label}: {field} should be None"
+            continue
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            f"{label}: timeline.{field} mismatch"
 
 
 @pytest.fixture(scope="module", params=["bursty", "daily"])
@@ -228,6 +257,201 @@ class TestSpans:
         with span("orphan", "test") as rec:
             pass
         assert rec["dur_s"] >= 0.0
+
+
+class TestSegmentWindows:
+    """Segment-aware telemetry (DESIGN.md §13): the compressed segment
+    executor's boundary snapshots must re-expand into the SAME per-window
+    series the per-op probe produces — bit-identical, field for field —
+    so cliff detection runs at compressed speed."""
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_segment_vs_per_op_bit_identical(self, mode, policy):
+        """Every WindowedTimeline field (incl. the latency histogram and
+        the counter deltas behind windowed WAF), the per-op latency and
+        the final state: segment path == per-op path, bit for bit.
+        Cliff detection over the two window sets is therefore identical
+        too (asserted on the derived series)."""
+        tr = _padded_trace(mode)
+        comp = compress_ops(tr)
+        assert comp.n_pad > 0          # tail-replay windows load-bearing
+        cl = mode == "bursty"
+        lat_r, st_r = run_trace(CFG, policy, tr, closed_loop=cl,
+                                n_logical=N_LOGICAL, timeline_ops=WINDOW)
+        lat_c, st_c = run_compressed(CFG, policy, comp, closed_loop=cl,
+                                     n_logical=N_LOGICAL,
+                                     timeline_ops=WINDOW)
+        assert np.array_equal(np.asarray(lat_r), np.asarray(lat_c))
+        _assert_timelines_equal(st_r.timeline, st_c.timeline,
+                                f"{policy}/{mode}")
+        for field in st_r._fields:
+            if field == "timeline":
+                continue
+            v = getattr(st_r, field)
+            if v is None:
+                assert getattr(st_c, field) is None
+                continue
+            assert np.array_equal(np.asarray(v),
+                                  np.asarray(getattr(st_c, field))), field
+        s_r = series(timeline_to_numpy(st_r.timeline))
+        s_c = series(timeline_to_numpy(st_c.timeline))
+        assert s_c["cliff"] == s_r["cliff"]
+
+    def test_segment_window_conservation(self, mode):
+        """Summing the segment-produced per-window counter deltas
+        reproduces the final CTR counters EXACTLY (telescoping boundary
+        snapshots), mirroring the per-op conservation test — including
+        the windows recovered from the fixed-point tail replay."""
+        tr = _padded_trace(mode)
+        comp = compress_ops(tr)
+        _, st = run_compressed(CFG, "baseline", comp,
+                               closed_loop=(mode == "bursty"),
+                               n_logical=N_LOGICAL, timeline_ops=WINDOW)
+        tl = st.timeline
+        is_w = np.asarray(tr["is_write"])
+        assert np.array_equal(
+            np.asarray(tl.ctr).sum(axis=0).astype(np.float32),
+            np.asarray(st.counters))
+        assert np.asarray(tl.ops).sum() == (is_w >= 0).sum()
+        assert np.asarray(tl.writes).sum() == (is_w == 1).sum()
+        assert np.asarray(tl.lat_hist).sum() == (is_w == 1).sum()
+
+    def test_window_must_align_with_segment_lanes(self):
+        """Segment snapshots exist only at segment ends: a window size
+        that is not a SEG_LANES multiple must be rejected loudly, not
+        silently misaligned."""
+        comp = compress_ops(_padded_trace("bursty"))
+        with pytest.raises(ValueError, match=f"% {SEG_LANES}"):
+            run_compressed(CFG, "baseline", comp, closed_loop=True,
+                           n_logical=N_LOGICAL,
+                           timeline_ops=WINDOW + 1)
+
+    def test_fleet_trim_timeline_identity(self):
+        """The trimmed fleet fast path with telemetry on == the full
+        per-op fleet, per cell and leaf for leaf (prefix rows + tail
+        snapshot windows; no lane-alignment constraint on this path —
+        hence the deliberately odd window size)."""
+        traces = [_padded_trace("daily", n) for n in ("hm_0", "hm_1")]
+        ops = fleet.stack_ops(traces)
+        params = fleet.stack_params(
+            [default_params(CFG, "ips") for _ in traces])
+        win = 480                      # NOT a SEG_LANES multiple: allowed
+        lat_f, st_f = fleet.run_fleet(CFG, "ips", ops, params,
+                                      closed_loop=False,
+                                      n_logical=N_LOGICAL,
+                                      timeline_ops=win)
+        lat_t, st_t = fleet.run_fleet(CFG, "ips", ops, params,
+                                      closed_loop=False,
+                                      n_logical=N_LOGICAL,
+                                      timeline_ops=win, trim_pads=True)
+        assert np.array_equal(np.asarray(lat_f), np.asarray(lat_t))
+        _assert_timelines_equal(st_f.timeline, st_t.timeline, "fleet")
+        for field in st_f._fields:
+            if field == "timeline":
+                continue
+            v = getattr(st_f, field)
+            if v is None:
+                assert getattr(st_t, field) is None
+                continue
+            assert np.array_equal(np.asarray(v),
+                                  np.asarray(getattr(st_t, field))), field
+
+
+class TestHistory:
+    """BENCH_history.json perf-regression ledger (DESIGN.md §13) —
+    stdlib-only, atomic, git-SHA-keyed."""
+
+    def _rec(self, tmp_path, ops, gm=1.0, config="ci:quick"):
+        from repro.telemetry import history
+        return history.append_record(
+            "sweep", config, directory=str(tmp_path), ops_per_s=ops,
+            geomeans={"daily/ips/wa_paper": gm}, compiles=3,
+            shard_skipped=0, git_sha="deadbeef")
+
+    def test_append_load_roundtrip(self, tmp_path):
+        from repro.telemetry import history
+        rec = self._rec(tmp_path, 1000.0)
+        assert rec["git_sha"] == "deadbeef" and rec["kind"] == "sweep"
+        doc = history.load_history(str(tmp_path))
+        assert doc["schema_version"] == 1
+        assert [r["ops_per_s"] for r in doc["records"]] == [1000.0]
+        self._rec(tmp_path, 1100.0)
+        doc = history.load_history(str(tmp_path))
+        assert len(doc["records"]) == 2   # append-only: nothing rewritten
+        assert doc["records"][0]["ops_per_s"] == 1000.0
+
+    def test_concurrent_appends_lose_nothing(self, tmp_path):
+        from repro.telemetry import history
+        errs = []
+
+        def add(n):
+            try:
+                history.append_record("bench_step", "c", ops_per_s=n,
+                                      directory=str(tmp_path),
+                                      git_sha="x")
+            except Exception as e:      # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=add, args=(float(n),))
+                   for n in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        recs = history.load_history(str(tmp_path))["records"]
+        assert sorted(r["ops_per_s"] for r in recs) == \
+            [float(n) for n in range(8)]
+        leftovers = [f for f in os.listdir(tmp_path)
+                     if f.endswith(".tmp")]
+        assert leftovers == []
+
+    def test_injected_2x_slowdown_caught(self, tmp_path):
+        from repro.telemetry import history
+        for _ in range(3):
+            self._rec(tmp_path, 1000.0)
+        recs = history.load_history(str(tmp_path))["records"]
+        assert history.check_regression(recs) == []   # steady: passes
+        self._rec(tmp_path, 500.0)                    # injected 2x slower
+        recs = history.load_history(str(tmp_path))["records"]
+        failures = history.check_regression(recs)
+        assert len(failures) == 1 and "throughput" in failures[0]
+        # 10% down is inside the 20% gate
+        history.append_record("sweep", "tp", directory=str(tmp_path),
+                              ops_per_s=1000.0, git_sha="x")
+        history.append_record("sweep", "tp", directory=str(tmp_path),
+                              ops_per_s=900.0, git_sha="x")
+        recs = [r for r in history.load_history(str(tmp_path))["records"]
+                if r["config"] == "tp"]
+        assert history.check_regression(recs) == []
+
+    def test_any_geomean_drift_fails(self, tmp_path):
+        from repro.telemetry import history
+        self._rec(tmp_path, 1000.0, gm=0.53)
+        self._rec(tmp_path, 1000.0, gm=0.530001)      # tiny, still drift
+        recs = history.load_history(str(tmp_path))["records"]
+        failures = history.check_regression(recs)
+        assert len(failures) == 1 and "drifted" in failures[0]
+
+    def test_series_isolation_and_first_run(self, tmp_path):
+        """Different (kind, config) series never compare; a lone first
+        record seeds its baseline and passes."""
+        from repro.telemetry import history
+        self._rec(tmp_path, 1000.0, config="grid_a")
+        self._rec(tmp_path, 100.0, config="grid_b")   # 10x apart: fine
+        recs = history.load_history(str(tmp_path))["records"]
+        assert history.check_regression(recs) == []
+
+    def test_cli_check_exit_codes(self, tmp_path, capsys):
+        from repro.telemetry.history import _main
+        assert _main(["--path", str(tmp_path), "--check"]) == 0
+        for _ in range(2):
+            self._rec(tmp_path, 1000.0)
+        assert _main(["--path", str(tmp_path), "--check"]) == 0
+        self._rec(tmp_path, 400.0)
+        assert _main(["--path", str(tmp_path), "--check"]) == 1
+        out = capsys.readouterr().out
+        assert "REGRESSION" in out
 
 
 class TestStoreAtomicity:

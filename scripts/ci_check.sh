@@ -38,6 +38,25 @@ echo "== zero-wear bit-identity vs the golden monolith =="
 python -m pytest -q tests/test_endurance.py -k "ZeroWearIdentity"
 
 echo
+echo "== smoke: host-tier cache grid (stacked block cache, DESIGN.md §14) =="
+hc_tmp=$(mktemp -d)
+python -m repro.sweep.cli --grid hostcache --max-ops 4096 \
+  --out-dir "$hc_tmp" --no-history
+python - "$hc_tmp" <<'EOF'
+import os, sys
+from repro.sweep.store import check_hostcache_sweep, load_bench
+doc = check_hostcache_sweep(load_bench(
+    os.path.join(sys.argv[1], "BENCH_sweep_hostcache.json")))
+print(f"hostcache artifact OK: {len(doc['results'])} cell(s), "
+      f"{len(doc['hostcache'])} summary row(s)")
+EOF
+rm -rf "$hc_tmp"
+
+echo
+echo "== host tier: off-path bit-identity vs the golden monolith =="
+python -m pytest -q tests/test_hostcache.py -k "OffPathGoldenIdentity"
+
+echo
 echo "== step engine: kernel interpret=True equivalence (DESIGN.md §12) =="
 python -m pytest -q tests/test_compress.py -k "FusedKernel"
 

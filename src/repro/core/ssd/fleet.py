@@ -118,35 +118,57 @@ def shard_cells(tree, devices=None):
 
 def init_fleet_state(cfg: SSDConfig, n_logical: int, n_cells: int, *,
                      endurance: bool = False, timeline=None,
-                     packed: bool = False) -> SimState:
+                     packed: bool = False, hostcache=None) -> SimState:
     """(C,)-stacked initial SimState (the donated fleet scan carry).
     `timeline` — ops per telemetry window, or None — attaches the
     per-cell in-scan probe (DESIGN.md §11). `packed` carries the integer
     plane fields int16 (gate on `policies.state.can_pack`; results are
     bit-identical, the donated carry just shrinks — DESIGN.md §12).
-    The carry dtypes key `_run_fleet`'s jit, so packing needs no static
-    flag of its own."""
+    `hostcache` — a `HostCacheSpec`, or None — attaches the per-cell
+    host-tier cache carry (DESIGN.md §14). The carry dtypes key
+    `_run_fleet`'s jit, so packing needs no static flag of its own."""
     return jax.vmap(
         lambda _: init_state(cfg, n_logical, endurance=endurance,
-                             timeline=timeline, packed=packed))(
+                             timeline=timeline, packed=packed,
+                             hostcache=hostcache))(
         jnp.arange(n_cells))
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "spec", "closed_loop",
-                                             "timeline_ops"),
+                                             "timeline_ops", "hostcache"),
                    donate_argnums=(2,))
 def _run_fleet(cfg: SSDConfig, spec, state0: SimState, ops: dict,
                params: CellParams, *, closed_loop: bool,
-               timeline_ops: int | None = None):
+               timeline_ops: int | None = None, hostcache=None):
     endurance = params.endurance is not None
 
     def one(cell_state, cell_ops, cell_params):
-        step = make_step(cfg, spec, closed_loop=closed_loop,
-                         params=cell_params)
+        if hostcache is not None:
+            from repro.hostcache.pipeline import build_tier_step
+            step = build_tier_step(cfg, spec, hostcache,
+                                   closed_loop=closed_loop,
+                                   params=cell_params)
+        else:
+            step = make_step(cfg, spec, closed_loop=closed_loop,
+                             params=cell_params)
         if timeline_ops is None:
             final, latency = jax.lax.scan(step, cell_state, cell_ops)
             return latency, final
         from repro.telemetry import probe
+        if hostcache is not None:
+            from repro.hostcache.model import host_windows
+            final, (latency, rows, hrows) = jax.lax.scan(
+                step, cell_state, cell_ops)
+            wtl = probe.windowed(rows, latency, cell_ops["is_write"],
+                                 cell_ops["arrival_ms"],
+                                 window_ops=timeline_ops,
+                                 t_len=cell_ops["lba"].shape[0],
+                                 endurance=False)
+            hw = host_windows(hrows, window_ops=timeline_ops,
+                              t_len=cell_ops["lba"].shape[0])
+            return latency, final._replace(
+                timeline=wtl,
+                hostcache=final.hostcache._replace(hwin=hw))
         final, (latency, rows) = jax.lax.scan(step, cell_state, cell_ops)
         wtl = probe.windowed(rows, latency, cell_ops["is_write"],
                              cell_ops["arrival_ms"],
@@ -262,7 +284,7 @@ def _trim_len(is_write: np.ndarray, quantum: int = TRIM_QUANTUM) -> int:
 def run_fleet(cfg: SSDConfig, policy, ops: dict, params: CellParams,
               *, closed_loop: bool, n_logical: int,
               timeline_ops: int | None = None, trim_pads: bool = False,
-              packed: bool = False):
+              packed: bool = False, hostcache=None):
     """Simulate a whole (composition, mode) fleet in one compiled scan.
 
     ops: (C, T) stacked op tensors from `stack_ops`; params: (C,)-stacked
@@ -281,11 +303,16 @@ def run_fleet(cfg: SSDConfig, policy, ops: dict, params: CellParams,
     DESIGN.md §13); only endurance runs skip it (tail reclamation keeps
     erasing into the wear state); `packed` shrinks the donated carry to
     int16 plane fields (gate on `policies.state.can_pack`). Results are
-    bit-identical either way (tests/test_compress.py)."""
+    bit-identical either way (tests/test_compress.py).
+
+    `hostcache` (static: a `HostCacheSpec`, or None) stacks the host
+    block-cache tier in front of every cell (DESIGN.md §14); such fleets
+    take the full per-op path (the tier pipeline rewrites the device op
+    stream in-scan, so there is no trimmed/compressed shortcut)."""
     spec = resolve_spec(policy)
     n_cells = ops["lba"].shape[0]
     endurance = params.endurance is not None
-    if trim_pads and not endurance:
+    if trim_pads and not endurance and hostcache is None:
         is_w = np.asarray(ops["is_write"])
         t_len = is_w.shape[1]
         t_trim = _trim_len(is_w)
@@ -303,9 +330,10 @@ def run_fleet(cfg: SSDConfig, policy, ops: dict, params: CellParams,
             return latency, final
     state0 = shard_cells(init_fleet_state(
         cfg, n_logical, n_cells, endurance=endurance,
-        timeline=timeline_ops, packed=packed))
+        timeline=timeline_ops, packed=packed, hostcache=hostcache))
     return _run_fleet(cfg, spec, state0, ops, params,
-                      closed_loop=closed_loop, timeline_ops=timeline_ops)
+                      closed_loop=closed_loop, timeline_ops=timeline_ops,
+                      hostcache=hostcache)
 
 
 def flush_fleet(cfg: SSDConfig, states: SimState, policy) -> SimState:

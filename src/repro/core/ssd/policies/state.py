@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.core.ssd.endurance.model import (EnduranceParams, WearState,
                                             as_params, init_wear)
 from repro.core.ssd.endurance.spec import EnduranceSpec
+from repro.hostcache.model import HCParams, HCState, init_hc
 from repro.telemetry.probe import TimelineState, init_timeline
 
 __all__ = ["CellParams", "SimState", "CTR", "init_state", "default_cell",
@@ -52,6 +53,9 @@ class CellParams(NamedTuple):
     #                                (DESIGN.md §9); None — endurance
     #                                tracking statically absent, keeping
     #                                the seed pytree and golden identity
+    hostcache: HCParams = None  # traced host-tier cache knobs
+    #                                (DESIGN.md §14); None — host cache
+    #                                statically absent, same contract
 
 
 class SimState(NamedTuple):
@@ -87,6 +91,13 @@ class SimState(NamedTuple):
     #                            it never changes latencies or counters.
     #                            run_trace/run_fleet swap in the reduced
     #                            per-window WindowedTimeline post-scan
+    hostcache: HCState = None  # host-tier block-cache carry
+    #                            (DESIGN.md §14); None == statically
+    #                            absent — the off path is the seed device
+    #                            scan, bit for bit. Present, the tier
+    #                            pipeline serves hits at host latency and
+    #                            rewrites misses/evictions/flushes into
+    #                            the device op stream in-scan
 
 
 CTR = {name: i for i, name in enumerate(
@@ -115,16 +126,20 @@ def can_pack(cfg, n_logical: int, params: CellParams) -> bool:
 
 
 def init_state(cfg, n_logical: int, *, endurance: bool = False,
-               timeline=None, packed: bool = False) -> SimState:
+               timeline=None, packed: bool = False,
+               hostcache=None) -> SimState:
     """Fresh scan carry. `timeline` — ops per telemetry window, or
     None — attaches the in-scan probe carry (DESIGN.md §11). `packed`
     carries the integer plane fields as int16 (caller gates on
-    `can_pack`); results are bit-identical either way."""
+    `can_pack`); results are bit-identical either way. `hostcache` — a
+    `HostCacheSpec`, or None — attaches the host-tier cache carry
+    (DESIGN.md §14) sized by the spec's static geometry."""
     p = cfg.num_planes
     dt_i = jnp.int16 if packed else jnp.int32
     return SimState(
         wear=init_wear(cfg) if endurance else None,
         timeline=init_timeline(timeline) if timeline else None,
+        hostcache=init_hc(hostcache) if hostcache is not None else None,
         busy=jnp.zeros(p, jnp.float32),
         slc_used=jnp.zeros(p, dt_i),
         rp_done=jnp.zeros(p, dt_i),

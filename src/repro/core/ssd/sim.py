@@ -96,10 +96,11 @@ def as_ops(trace):
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "closed_loop",
                                              "n_logical", "timeline_ops",
-                                             "packed"))
+                                             "packed", "hostcache"))
 def run_trace(cfg: SSDConfig, policy, trace, *, closed_loop: bool,
               n_logical: int, waste_p=0.0, params: CellParams | None = None,
-              timeline_ops: int | None = None, packed: bool = False):
+              timeline_ops: int | None = None, packed: bool = False,
+              hostcache=None):
     """Simulate one padded trace. Returns (per-op latency, final SimState).
 
     `params` (or the shorthand `waste_p`) are traced per-cell scalars
@@ -111,18 +112,42 @@ def run_trace(cfg: SSDConfig, policy, trace, *, closed_loop: bool,
     state then carries `SimState.timeline` (DESIGN.md §11); None keeps
     the seed carry structure. `packed` (static) carries the integer
     plane fields as int16 — bit-identical results when
-    `policies.state.can_pack` holds (DESIGN.md §12)."""
+    `policies.state.can_pack` holds (DESIGN.md §12). `hostcache`
+    (static: a `HostCacheSpec`) stacks the host-tier block cache in
+    front of the device (DESIGN.md §14) — the scan then runs the
+    composed tier pipeline and the final state carries
+    `SimState.hostcache`; None keeps the seed device scan, bit for bit
+    (the trailing-carry off-path contract)."""
     if params is None:
         params = default_params(cfg, policy, waste_p)
-    step = make_step(cfg, policy, closed_loop=closed_loop, params=params)
+    if hostcache is not None:
+        from repro.hostcache.model import as_hc_params, host_windows
+        from repro.hostcache.pipeline import build_tier_step
+        if params.hostcache is None:
+            params = params._replace(hostcache=as_hc_params(hostcache))
+        step = build_tier_step(cfg, policy, hostcache,
+                               closed_loop=closed_loop, params=params)
+    else:
+        step = make_step(cfg, policy, closed_loop=closed_loop,
+                         params=params)
     state0 = init_state(cfg, n_logical,
                         endurance=params.endurance is not None,
-                        timeline=timeline_ops, packed=packed)
+                        timeline=timeline_ops, packed=packed,
+                        hostcache=hostcache)
     ops = as_ops(trace)
     if timeline_ops is None:
         final, latency = jax.lax.scan(step, state0, ops)
         return latency, final
     from repro.telemetry import probe
+    if hostcache is not None:
+        final, (latency, rows, hrows) = jax.lax.scan(step, state0, ops)
+        wtl = probe.windowed(rows, latency, ops["is_write"],
+                             ops["arrival_ms"], window_ops=timeline_ops,
+                             t_len=ops["lba"].shape[0], endurance=False)
+        hw = host_windows(hrows, window_ops=timeline_ops,
+                          t_len=ops["lba"].shape[0])
+        return latency, final._replace(
+            timeline=wtl, hostcache=final.hostcache._replace(hwin=hw))
     final, (latency, rows) = jax.lax.scan(step, state0, ops)
     wtl = probe.windowed(rows, latency, ops["is_write"],
                          ops["arrival_ms"], window_ops=timeline_ops,
@@ -307,6 +332,10 @@ def run_compressed(cfg: SSDConfig, policy, comp, *, closed_loop: bool,
     if params.endurance is not None:
         raise ValueError("no compressed path for endurance runs; "
                          "use run_trace")
+    if params.hostcache is not None:
+        raise ValueError("no compressed path for host-cache runs; the "
+                         "tier pipeline rewrites the device op stream "
+                         "in-scan — use run_trace")
     if timeline_ops is not None:
         lanes = next(iter(comp.segs.values())).shape[1]
         if int(timeline_ops) % lanes:
@@ -352,7 +381,9 @@ def summarize(latency, trace, state: SimState, *,
     When the run carried endurance state (`state.wear`) and the caller
     supplies its `CellParams` + config, the lifetime/wear-leveling metrics
     (TBW projection, cycle skew, end-of-life step — DESIGN.md §9) are
-    merged into the summary."""
+    merged into the summary. A host-cache run (`state.hostcache`,
+    DESIGN.md §14) merges the host-tier metrics — hit rate, absorbed
+    ops, device-visible write fraction — the same way."""
     is_w = trace["is_write"] == 1
     lat_w = jnp.where(is_w, latency, 0.0)
     n_w = jnp.maximum(jnp.sum(is_w), 1)
@@ -368,7 +399,12 @@ def summarize(latency, trace, state: SimState, *,
         wear_metrics = wear_summary(state.wear, cell.endurance,
                                     cell.cap_basic, cell.cap_trad,
                                     cfg.page_bytes, c[CTR["host_w"]])
-    return wear_metrics | {
+    host_metrics = {}
+    if state.hostcache is not None:
+        from repro.hostcache.model import host_summary
+        host_metrics = host_summary(state.hostcache, c[CTR["host_w"]],
+                                    jnp.sum(is_w).astype(jnp.float32))
+    return wear_metrics | host_metrics | {
         "mean_write_latency_ms": mean_lat,
         "wa_paper": 1.0 + extra_paper / host,
         "wa_raw": 1.0 + extra_raw / host,

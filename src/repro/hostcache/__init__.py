@@ -1,0 +1,33 @@
+"""Host-tier block cache in front of the SSD sim (DESIGN.md §14).
+
+A datacenter SSD sees post-host-cache traffic, not raw application I/O:
+reads that hit host DRAM never reach the device, write-back caches absorb
+overwrites and later emit *flush bursts* that collide with the device's
+own SLC-cache reclamation. This package models that tier as a traced,
+scan-compatible pipeline stage stacked in front of the device scan:
+
+* `spec.HostCacheSpec` — the static axis set (cache mode, promotion
+  policy, set-associative geometry, dirty-flush scheduling), mirroring
+  the policy-engine pattern: the spec, not a name, keys the compiled
+  pipeline.
+* `model` — the traced carry (`HCState`, riding `SimState.hostcache`
+  through the same trailing-`None` contract as `wear`/`timeline`), the
+  traced knob vector (`HCParams`, riding `CellParams.hostcache`), and
+  the per-window host telemetry reduction (`host_windows`).
+* `pipeline.build_tier_step` — the composed scan step: the host tier
+  decides hit/miss/evict/flush per trace op and rewrites the device-
+  visible op stream in-scan (misses, eviction write-backs, flush bursts)
+  through the unmodified policy-engine core; host hits are served at
+  host latency and never touch the device.
+
+`pipeline` is imported lazily by `sim`/`fleet` (it pulls in the policy
+engine, which imports `policies.state`, which imports `model` from
+here — importing it at package level would cycle).
+"""
+from repro.hostcache.model import (H_CTR, HCParams, HCState, HostWindows,
+                                   as_hc_params, host_summary,
+                                   host_windows, init_hc)
+from repro.hostcache.spec import HostCacheSpec
+
+__all__ = ["HostCacheSpec", "HCParams", "HCState", "HostWindows", "H_CTR",
+           "as_hc_params", "host_summary", "host_windows", "init_hc"]

@@ -1,0 +1,166 @@
+"""Traced host-cache state, knobs and telemetry reduction (DESIGN.md §14).
+
+`HCState` rides `SimState.hostcache` through the trailing-`None` carry
+contract (like `wear` and `timeline`): absent, the device scan keeps the
+seed pytree structure bit for bit; present, the tier pipeline threads it
+through the same `lax.scan`, so fleets vmap/shard it like any other
+state leaf. `HCParams` rides `CellParams.hostcache` the same way — the
+traced float knobs of a `HostCacheSpec`, so knob sweeps within one
+static spec never recompile.
+
+`host_windows` is the PR 6 telescoping reduction applied to the host
+tier: the pipeline emits one cumulative host-counter row per op, window
+boundaries are gathered post-scan, and per-window deltas are differences
+of snapshots — summed window counters reproduce the final totals
+*exactly* (the conservation-test pattern).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.hostcache.spec import HostCacheSpec
+
+__all__ = ["H_CTR", "HCParams", "HCState", "HostWindows", "as_hc_params",
+           "host_summary", "host_windows", "init_hc"]
+
+# host-tier counter vector (cumulative f32, exact integer values):
+#   hits       — live ops whose lba was resident (read or write)
+#   read_hits  — reads served from the host tier
+#   write_hits — writes that found their line resident
+#   absorbed   — live ops fully served at host latency (no device op):
+#                read hits always; write hits/allocates in wb mode
+#   absorbed_w — the write subset of `absorbed`
+#   dev_ops    — live ops that issued a device op (miss or pass-through);
+#                absorbed + dev_ops == live trace ops, exactly
+#   flush_w    — dirty lines written back by scheduled flush bursts
+#   evict_w    — dirty victims written back on eviction
+H_CTR = {name: i for i, name in enumerate(
+    ["hits", "read_hits", "write_hits", "absorbed", "absorbed_w",
+     "dev_ops", "flush_w", "evict_w"])}
+
+
+class HCParams(NamedTuple):
+    """Traced knobs of one HostCacheSpec (CellParams.hostcache)."""
+    promote_n: jnp.ndarray     # f32 — Nth-access insert threshold
+    wm_hi: jnp.ndarray         # f32 — dirty fraction arming flush bursts
+    wm_lo: jnp.ndarray         # f32 — dirty fraction disarming them
+    hit_ms: jnp.ndarray        # f32 — host hit latency
+    flush_gap_ms: jnp.ndarray  # f32 — arrival gap opening an idle flush
+
+
+def as_hc_params(spec: HostCacheSpec) -> HCParams:
+    return HCParams(promote_n=jnp.float32(spec.promote_n),
+                    wm_hi=jnp.float32(spec.wm_hi),
+                    wm_lo=jnp.float32(spec.wm_lo),
+                    hit_ms=jnp.float32(spec.hit_ms),
+                    flush_gap_ms=jnp.float32(spec.flush_gap_ms))
+
+
+class HostWindows(NamedTuple):
+    """Per-window host-tier series (post-scan reduction of the per-op
+    cumulative rows — see `host_windows`). Counter leaves are exact
+    per-window deltas; `dirty_frac` is the boundary snapshot."""
+    window_ops: jnp.ndarray    # () i32
+    hits: jnp.ndarray          # (W,) f32
+    absorbed: jnp.ndarray      # (W,) f32
+    dev_ops: jnp.ndarray       # (W,) f32
+    flush_w: jnp.ndarray       # (W,) f32
+    evict_w: jnp.ndarray       # (W,) f32
+    dirty_frac: jnp.ndarray    # (W,) f32 — dirty lines / lines at boundary
+    dev_lat_ms: jnp.ndarray    # (W,) f32 — summed device-visible sub-op
+    #                            latency: the tier's view of the device,
+    #                            unmasked by host-absorbed ops — the series
+    #                            the flush-burst-vs-reclamation cliff
+    #                            detection runs on (detect_cliff over
+    #                            dev_lat_ms / device ops per window)
+
+
+class HCState(NamedTuple):
+    """Host-tier scan carry (SimState.hostcache). Shapes are fixed by the
+    static spec: (S, W) line arrays, sets indexed by `lba % S`, LRU via
+    per-line age stamps (victim = argmin age; invalid lines hold age 0
+    and the tick starts at 1, so they always lose)."""
+    tag: jnp.ndarray          # (S, W) i32 — resident lba, -1 invalid
+    dirty: jnp.ndarray        # (S, W) i32 — host copy newer than device
+    age: jnp.ndarray          # (S, W) i32 — tick at last touch (LRU)
+    shadow_tag: jnp.ndarray   # (S,) i32 — promotion-filter candidate lba
+    shadow_cnt: jnp.ndarray   # (S,) i32 — its observed access count
+    tick: jnp.ndarray         # () i32 — live-op clock (starts at 0)
+    dirty_n: jnp.ndarray      # () i32 — total dirty lines (incremental)
+    flushing: jnp.ndarray     # () i32 — watermark burst latch
+    fcur: jnp.ndarray         # () i32 — round-robin flush set cursor
+    prev_t: jnp.ndarray       # () f32 — last live arrival (idle flush)
+    hctr: jnp.ndarray         # (len(H_CTR),) f32 — see H_CTR
+    dev_lat_ms: jnp.ndarray   # () f32 — cumulative device-visible sub-op
+    #                           latency (miss/pass-through service +
+    #                           eviction/flush write-backs)
+    hwin: HostWindows = None  # attached post-scan by run_trace/run_fleet
+    #                           when the telemetry probe is on; None ==
+    #                           statically absent (same contract as
+    #                           SimState.timeline)
+
+
+def init_hc(spec: HostCacheSpec) -> HCState:
+    s, w = spec.sets, spec.ways
+    return HCState(
+        tag=jnp.full((s, w), -1, jnp.int32),
+        dirty=jnp.zeros((s, w), jnp.int32),
+        age=jnp.zeros((s, w), jnp.int32),
+        shadow_tag=jnp.full(s, -1, jnp.int32),
+        shadow_cnt=jnp.zeros(s, jnp.int32),
+        tick=jnp.int32(0),
+        dirty_n=jnp.int32(0),
+        flushing=jnp.int32(0),
+        fcur=jnp.int32(0),
+        prev_t=jnp.float32(0.0),
+        hctr=jnp.zeros(len(H_CTR), jnp.float32),
+        dev_lat_ms=jnp.float32(0.0),
+    )
+
+
+def host_windows(hrows, *, window_ops: int, t_len: int) -> HostWindows:
+    """Reduce the per-op host rows — (T, len(H_CTR)+2) with the cumulative
+    counter vector, the dirty-line *fraction* level, and the cumulative
+    device-visible latency — to per-window series. Boundary-gather +
+    snapshot differencing (the PR 6 telescoping identity): summing any
+    counter leaf over windows equals its final cumulative value exactly."""
+    wo = int(window_ops)
+    n_win = -(-t_len // wo)
+    bound = jnp.minimum((jnp.arange(n_win) + 1) * wo - 1, t_len - 1)
+    snap = hrows[bound]                               # (W, H+1)
+    prev = jnp.concatenate([jnp.zeros((1, snap.shape[1]), snap.dtype),
+                            snap[:-1]])
+    delta = snap - prev
+    return HostWindows(
+        window_ops=jnp.int32(wo),
+        hits=delta[:, H_CTR["hits"]],
+        absorbed=delta[:, H_CTR["absorbed"]],
+        dev_ops=delta[:, H_CTR["dev_ops"]],
+        flush_w=delta[:, H_CTR["flush_w"]],
+        evict_w=delta[:, H_CTR["evict_w"]],
+        dirty_frac=snap[:, len(H_CTR)],
+        dev_lat_ms=delta[:, len(H_CTR) + 1],
+    )
+
+
+def host_summary(hc: HCState, host_w, n_trace_writes) -> dict:
+    """Host-tier metrics merged into `sim.summarize` when the run carried
+    a host cache. `host_w` is the device counter CTR["host_w"] — every
+    write the *device* saw (pass-throughs + eviction write-backs + flush
+    bursts); `host_dev_write_frac` below 1.0 is the host tier absorbing
+    write traffic (device-visible writes strictly under trace writes)."""
+    h = hc.hctr
+    live = h[H_CTR["absorbed"]] + h[H_CTR["dev_ops"]]
+    return {
+        "host_hit_rate": h[H_CTR["hits"]] / jnp.maximum(live, 1.0),
+        "host_absorbed": h[H_CTR["absorbed"]],
+        "host_absorbed_w": h[H_CTR["absorbed_w"]],
+        "host_dev_ops": h[H_CTR["dev_ops"]],
+        "host_flush_w": h[H_CTR["flush_w"]],
+        "host_evict_w": h[H_CTR["evict_w"]],
+        "host_dev_write_frac": (host_w
+                                / jnp.maximum(n_trace_writes, 1.0)),
+        "host_dev_lat_ms": hc.dev_lat_ms,
+    }

@@ -30,6 +30,7 @@ from repro.sweep.grid import SweepPoint
 
 if TYPE_CHECKING:                                     # typing only, no jax
     from repro.core.ssd.endurance.spec import EnduranceSpec
+    from repro.hostcache.spec import HostCacheSpec
 
 __all__ = ["Candidate", "auto_name", "register_space", "build_space",
            "group_key", "group_candidates", "SPACES"]
@@ -58,6 +59,10 @@ class Candidate:
     idle_threshold_ms: Optional[float] = None
     cap_boost_frac: Optional[float] = None
     endurance: Optional["EnduranceSpec"] = None
+    # host-tier cache spec (DESIGN.md §14) — unlike the float knobs this
+    # splits the compilation group (spec is the jit key), so `full` keeps
+    # the host-cache axis small
+    hostcache: Optional["HostCacheSpec"] = None
 
     @property
     def label(self) -> str:
@@ -71,6 +76,8 @@ class Candidate:
             quals.append(f"boost={self.cap_boost_frac:g}")
         if self.endurance is not None:
             quals.append(f"endur={self.endurance.tag}")
+        if self.hostcache is not None:
+            quals.append(f"hc={self.hostcache.tag}")
         return self.policy + (f"@{','.join(quals)}" if quals else "")
 
     def point(self, trace: str, mode: str, seed: int = 0,
@@ -87,6 +94,7 @@ class Candidate:
             seed=seed, cache_frac=self.cache_frac,
             idle_threshold_ms=self.idle_threshold_ms,
             cap_boost_frac=self.cap_boost_frac, endurance=e,
+            hostcache=self.hostcache,
             baseline=baseline_of(self.policy))
 
     def to_json(self) -> Dict:
@@ -96,6 +104,8 @@ class Candidate:
                 "cap_boost_frac": self.cap_boost_frac,
                 "endurance": (None if self.endurance is None
                               else self.endurance.tag),
+                "hostcache": (None if self.hostcache is None
+                              else self.hostcache.tag),
                 "label": self.label}
 
 
@@ -141,9 +151,10 @@ def group_key(cand: Candidate):
     endurance knobs (the candidate's own or the tuner's scoring
     default), so a candidate's own `endurance` being None is a knob-only
     difference here, not a group split. Knob-only differences stay
-    inside one group."""
+    inside one group. The host-cache spec DOES split: its mode/flush
+    select code paths and its geometry fixes carry shapes (§14)."""
     from repro.core.ssd.policies.registry import get_spec
-    return get_spec(cand.policy)
+    return (get_spec(cand.policy), cand.hostcache)
 
 
 def group_candidates(cands: Sequence[Candidate]) -> Dict[tuple, list]:
@@ -158,7 +169,8 @@ def _knob_variants(policy: str, *, cache_fracs: Sequence[float],
                    idle_thrs: Sequence[float],
                    boost_fracs: Sequence[float],
                    gate_budgets: Sequence[float],
-                   gate_hysteresis: Sequence[float]) -> List[Candidate]:
+                   gate_hysteresis: Sequence[float],
+                   hostcaches: Sequence[str] = ()) -> List[Candidate]:
     """Default + one-knob-at-a-time variants around it (the sensitivity-
     style axis walk: knob interactions are the *tuner's* job across
     rounds, not the space's to pre-enumerate)."""
@@ -184,6 +196,13 @@ def _knob_variants(policy: str, *, cache_fracs: Sequence[float],
                     w_rp=4.0, w_erase=1.0, cycle_budget=15.0,
                     rp_budget=b, rp_hysteresis=h))
                 for b in gate_budgets for h in gate_hysteresis]
+    if hostcaches:
+        # each spec string is a HostCacheSpec.parse recipe; each distinct
+        # spec splits a compilation group (DESIGN.md §14), so presets keep
+        # this axis short
+        from repro.hostcache.spec import HostCacheSpec
+        out += [Candidate(policy, hostcache=HostCacheSpec.parse(s))
+                for s in hostcaches]
     return out
 
 
@@ -234,5 +253,7 @@ SPACES: Dict[str, Dict] = {
                   "idle_thrs": (1.0, 2.0, 10.0),
                   "boost_fracs": (0.25, 0.5, 2.0, 4.0),
                   "gate_budgets": (1.0, 2.0, 4.0, 8.0),
-                  "gate_hysteresis": (0.0, 0.5, 1.0)}},
+                  "gate_hysteresis": (0.0, 0.5, 1.0),
+                  "hostcaches": ("mode=wb,flush=watermark",
+                                 "mode=wb,flush=idle")}},
 }

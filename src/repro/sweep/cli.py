@@ -15,6 +15,9 @@ Examples (run with PYTHONPATH=src):
       # registry smoke: replay a named grid's workloads under any
       # registered policies (declared baselines are added automatically)
   python -m repro.sweep.cli --grid endurance      # wear/lifetime columns
+  python -m repro.sweep.cli --grid hostcache      # host-tier cache columns
+  python -m repro.sweep.cli --traces hm_0 --hostcache mode=wb,flush=idle
+      # host cache knobs on a custom grid (DESIGN.md §14)
   python -m repro.sweep.cli --grid sensitivity    # one-axis deltas vs ips
   python -m repro.sweep.cli --traces hm_0 --policies ips,ips_raro \
       --endurance w_rp=4,rp_budget=2   # endurance knobs on a custom grid
@@ -87,6 +90,13 @@ def _parse(argv):
                     "fields, e.g. w_rp=4,rp_budget=2,cycle_budget=60,"
                     "read_penalty_ms=0.05 (bare flag: defaults). "
                     "Overrides a named grid's pinned knobs")
+    ap.add_argument("--hostcache", nargs="?", const="", default=None,
+                    metavar="K=V[,K=V...]",
+                    help="put the host-tier block cache (DESIGN.md §14) in "
+                    "front of every cell; optional knobs over "
+                    "HostCacheSpec fields, e.g. mode=wb,flush=watermark,"
+                    "sets=128,ways=8,wm_hi=0.75 (bare flag: write-back "
+                    "defaults). Overrides a named grid's pinned specs")
     ap.add_argument("--search", choices=("smoke", "quick", "full"),
                     default=None, metavar="BUDGET",
                     help="run the search engine (repro.search) instead of "
@@ -168,9 +178,9 @@ def main(argv=None) -> int:
     from repro import workloads
     from repro.configs.ssd_paper import PAPER_SSD
     from repro.sweep.grid import expand_grid, named_grid
-    from repro.sweep.report import (endurance_summary, policy_geomeans,
-                                    policy_geomeans_ci, sensitivity_deltas,
-                                    throughput_table)
+    from repro.sweep.report import (endurance_summary, hostcache_summary,
+                                    policy_geomeans, policy_geomeans_ci,
+                                    sensitivity_deltas, throughput_table)
     from repro.sweep.runner import bench_fleet_vs_loop, run_sweep
     from repro.sweep.store import save_bench
 
@@ -194,6 +204,15 @@ def main(argv=None) -> int:
 
     endurance = (None if args.endurance is None
                  else EnduranceSpec.parse(args.endurance))
+    if args.hostcache is None:
+        hostcache = None
+    else:
+        from repro.hostcache.spec import HostCacheSpec
+        try:
+            hostcache = HostCacheSpec.parse(args.hostcache)
+        except ValueError as e:
+            print(f"error: --hostcache: {e}", file=sys.stderr)
+            return 2
     cfg = PAPER_SSD.scaled(args.scale)
     seeds = tuple(int(s) for s in args.seeds.split(","))
 
@@ -203,6 +222,7 @@ def main(argv=None) -> int:
             ("--trace-file", args.trace_file),
             ("--policies", args.policies),
             ("--endurance", args.endurance is not None),
+            ("--hostcache", args.hostcache is not None),
             ("--modes", args.modes != "bursty,daily"),
             ("--cache-fracs", args.cache_fracs != "1.0"),
             ("--bench", args.bench),
@@ -249,14 +269,16 @@ def main(argv=None) -> int:
                 sum(((p, baseline_of(p)) for p in req), ())))
             coords = list(dict.fromkeys(
                 (pt.trace, pt.mode, pt.seed, pt.repeat, pt.cache_frac,
-                 pt.idle_threshold_ms, pt.cap_boost_frac, pt.endurance)
+                 pt.idle_threshold_ms, pt.cap_boost_frac, pt.endurance,
+                 pt.hostcache)
                 for pt in points))
             from repro.sweep.grid import SweepPoint
             points = [SweepPoint(trace=t, mode=m, policy=p, seed=s,
                                  repeat=r, cache_frac=c,
                                  idle_threshold_ms=i, cap_boost_frac=b,
-                                 endurance=e, baseline=baseline_of(p))
-                      for (t, m, s, r, c, i, b, e) in coords
+                                 endurance=e, hostcache=h,
+                                 baseline=baseline_of(p))
+                      for (t, m, s, r, c, i, b, e, h) in coords
                       for p in wanted]
     else:
         traces = tuple((args.traces.split(",") if args.traces else
@@ -326,6 +348,9 @@ def main(argv=None) -> int:
     if endurance is not None:
         from dataclasses import replace
         points = [replace(pt, endurance=endurance) for pt in points]
+    if hostcache is not None:
+        from dataclasses import replace
+        points = [replace(pt, hostcache=hostcache) for pt in points]
 
     if args.timeline_overhead_check and not args.timeline:
         print("error: --timeline-overhead-check requires --timeline",
@@ -433,6 +458,11 @@ def main(argv=None) -> int:
         _print_endurance_table(endur)
         payload["endurance"] = {f"{m}/{p}": v for (m, p), v in
                                 endur.items()}
+    if any("host_hit_rate" in v for v in results.values()):
+        hc = hostcache_summary(results)
+        _print_hostcache_table(hc)
+        payload["hostcache"] = {f"{m}/{p}/{t}": v for (m, p, t), v in
+                                hc.items()}
     if args.grid == "sensitivity":
         deltas = sensitivity_deltas(results)
         _print_sensitivity_table(deltas)
@@ -485,6 +515,12 @@ def main(argv=None) -> int:
                    for k, v in payload["geomeans"].items()
                    for metric in ("mean_write_latency_ms", "wa_paper")
                    if metric in v}
+        # host-tier ratios are deterministic (fixed specs, fixed traces),
+        # so the history gate guards them like the device geomeans
+        flat_gm |= {f"hc:{k}/{metric}": v[metric]
+                    for k, v in payload.get("hostcache", {}).items()
+                    for metric in ("lat_vs_off", "wa_vs_off")
+                    if v.get(metric) is not None}
         rec = history.append_record(
             "sweep", f"{args.grid or 'custom'}:scale={args.scale}"
                      f":max_ops={args.max_ops}:seeds={len(seeds)}",
@@ -655,6 +691,19 @@ def _print_endurance_table(endur) -> None:
         print(f"{mode:>7} {policy:<9}{fmt(v['tbw_ratio']):>9}"
               f"{fmt(v['eol_ratio']):>9}{v['eff_cycles_max']:>9.1f}"
               f"{v['cycle_skew']:>7.3f}{v['eol_frac']:>6.0%}")
+
+
+def _print_hostcache_table(hc) -> None:
+    print("\n=== host-tier cache: hit rate + device-visible writes "
+          "(DESIGN.md §14) ===")
+    print(f"{'mode':>7} {'policy':<9}{'hostcache':<22}{'hit':>7}"
+          f"{'devw':>7}{'lat/off':>9}{'wa/off':>8}")
+    for (mode, policy, tag), v in sorted(hc.items()):
+        def fmt(x):
+            return f"{x:.3f}" if x is not None else "n/a"
+        print(f"{mode:>7} {policy:<9}{tag:<22}"
+              f"{v['host_hit_rate']:>7.3f}{v['host_dev_write_frac']:>7.3f}"
+              f"{fmt(v['lat_vs_off']):>9}{fmt(v['wa_vs_off']):>8}")
 
 
 def _print_sensitivity_table(deltas) -> None:

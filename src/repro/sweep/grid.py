@@ -21,7 +21,8 @@ from typing import TYPE_CHECKING, Iterable, Optional, Sequence
 
 __all__ = ["SweepPoint", "expand_grid", "matrix_grid", "paper_grid",
            "quick_grid", "stress_grid", "mixed_grid", "beyond_grid",
-           "endurance_grid", "sensitivity_grid", "named_grid", "GRIDS"]
+           "endurance_grid", "sensitivity_grid", "hostcache_grid",
+           "named_grid", "GRIDS"]
 
 # NB: no repro.core.ssd import at module level — `import repro.sweep` must
 # stay jax-free so the CLI can pin XLA_FLAGS before jax initializes.
@@ -31,6 +32,7 @@ __all__ = ["SweepPoint", "expand_grid", "matrix_grid", "paper_grid",
 
 if TYPE_CHECKING:                                     # typing only, no jax
     from repro.core.ssd.endurance.spec import EnduranceSpec
+    from repro.hostcache.spec import HostCacheSpec
 
 
 @dataclass(frozen=True)
@@ -50,6 +52,9 @@ class SweepPoint:
     # unless the policy's composition requires it (the runner then
     # attaches default knobs)
     endurance: Optional["EnduranceSpec"] = None
+    # host-tier block-cache spec (DESIGN.md §14); None — the host tier is
+    # statically absent and the cell runs the seed device scan bit for bit
+    hostcache: Optional["HostCacheSpec"] = None
     # declared normalization policy — metadata, not cell identity:
     # compare=False keeps hash/eq (and hence baseline_point() pairing)
     # independent of who a cell normalizes against
@@ -75,6 +80,8 @@ class SweepPoint:
             quals.append(f"boost={self.cap_boost_frac:g}")
         if self.endurance is not None:
             quals.append(f"endur={self.endurance.tag}")
+        if self.hostcache is not None:
+            quals.append(f"hc={self.hostcache.tag}")
         base = f"{self.trace}/{self.mode}/{self.policy}"
         return base + (f"&{','.join(quals)}" if quals else "")
 
@@ -217,9 +224,33 @@ def sensitivity_grid() -> list[SweepPoint]:
                        policies=(center, *neighbors), baseline=center)
 
 
+def hostcache_grid() -> list[SweepPoint]:
+    """Host-tier cache hierarchy (DESIGN.md §14): the diurnal flush-burst
+    scenario under all four paper policies, crossed with the host-cache
+    axis — off (the device-only reference every cell normalizes its
+    host-tier columns against), write-back under both flush schedulers
+    (watermark bursts vs idle-gap draining), write-through and
+    write-around. Both access modes, so write-back flush bursts meet both
+    the paper's bursty closed-loop reclamation cliffs and the daily
+    replay's idle windows. The flush axis only exists for write-back
+    (wt/wa never hold dirty lines), so wt/wa carry the inert default."""
+    # HostCacheSpec is jax-free, but importing it pulls the package
+    # __init__ (which is not) — keep the import function-local.
+    from repro.hostcache.spec import HostCacheSpec
+    hcs = (None,
+           HostCacheSpec(mode="wb", flush="watermark"),
+           HostCacheSpec(mode="wb", flush="idle"),
+           HostCacheSpec(mode="wt"),
+           HostCacheSpec(mode="wa"))
+    pts = expand_grid(traces=("flush_burst",),
+                      policies=("baseline", "ips", "ips_agc", "coop"))
+    return [replace(p, hostcache=hc) for p in pts for hc in hcs]
+
+
 GRIDS = {"paper": paper_grid, "quick": quick_grid, "matrix": matrix_grid,
          "stress": stress_grid, "mixed": mixed_grid, "beyond": beyond_grid,
-         "endurance": endurance_grid, "sensitivity": sensitivity_grid}
+         "endurance": endurance_grid, "sensitivity": sensitivity_grid,
+         "hostcache": hostcache_grid}
 
 
 def named_grid(name: str) -> list[SweepPoint]:

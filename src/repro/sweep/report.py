@@ -18,7 +18,7 @@ import numpy as np
 
 __all__ = ["geomean", "normalize_to_baseline", "normalize_points",
            "policy_geomeans", "bootstrap_ci", "policy_geomeans_ci",
-           "endurance_summary", "sensitivity_deltas",
+           "endurance_summary", "hostcache_summary", "sensitivity_deltas",
            "search_rounds_table", "search_front_table",
            "throughput_table"]
 
@@ -89,6 +89,8 @@ def policy_geomeans(results: Mapping, metrics=("mean_write_latency_ms",
             if (point.seed, point.repeat, point.cache_frac,
                     point.idle_threshold_ms) != (0, 1, 1.0, None):
                 continue
+            if point.hostcache is not None:
+                continue        # host-tier cells report via hostcache_summary
             agg.setdefault((point.mode, point.policy), {}).setdefault(
                 metric, []).append(ratio)
     return {k: {m: geomean(v) for m, v in d.items()}
@@ -135,6 +137,40 @@ def endurance_summary(results: Mapping) -> Dict:
                 "eol_frac": float(np.mean(d["eol_hit"])),
                 "is_ref": d["is_ref"],
                 "n": len(d["skew"])}
+            for k, d in agg.items()}
+
+
+def hostcache_summary(results: Mapping) -> Dict:
+    """Per-(mode, policy, host-cache tag) host-tier columns (DESIGN.md
+    §14) over cells that carried a host cache:
+
+    * `host_hit_rate` — mean fraction of live ops resident in the host
+      tier; `host_dev_write_frac` — mean device-visible writes over trace
+      writes (< 1.0 == the host tier absorbing write traffic);
+    * `lat_vs_off` / `wa_vs_off` — geomean of the cell's latency / paper
+      WAF against the SAME trace/mode/policy cell with `hostcache=None`
+      (the device-only reference the grid carries alongside) — the
+      end-to-end value of the host tier, not of the device policy.
+    """
+    from dataclasses import replace
+    agg: Dict = {}
+    for point, val in results.items():
+        if point.hostcache is None or "host_hit_rate" not in val:
+            continue
+        off = results.get(replace(point, hostcache=None))
+        d = agg.setdefault((point.mode, point.policy, point.hostcache.tag),
+                           {"hit": [], "devw": [], "lat": [], "wa": []})
+        d["hit"].append(val["host_hit_rate"])
+        d["devw"].append(val["host_dev_write_frac"])
+        if off is not None:
+            d["lat"].append(val["mean_write_latency_ms"]
+                            / max(off["mean_write_latency_ms"], 1e-12))
+            d["wa"].append(val["wa_paper"] / max(off["wa_paper"], 1e-12))
+    return {k: {"host_hit_rate": float(np.mean(d["hit"])),
+                "host_dev_write_frac": float(np.mean(d["devw"])),
+                "lat_vs_off": geomean(d["lat"]) if d["lat"] else None,
+                "wa_vs_off": geomean(d["wa"]) if d["wa"] else None,
+                "n": len(d["hit"])}
             for k, d in agg.items()}
 
 
@@ -248,6 +284,8 @@ def policy_geomeans_ci(results: Mapping,
             if (point.repeat, point.cache_frac,
                     point.idle_threshold_ms) != (1, 1.0, None):
                 continue
+            if point.hostcache is not None:
+                continue        # host-tier cells report via hostcache_summary
             key = (point.mode, point.policy)
             agg.setdefault(key, {}).setdefault(metric, []).append(ratio)
             seeds.setdefault(key, set()).add(point.seed)

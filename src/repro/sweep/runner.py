@@ -86,6 +86,9 @@ def _cell_params(cfg: SSDConfig, point: SweepPoint, waste_p: float):
         p = p._replace(
             cap_boost=jnp.int32(int(int(p.cap_boost)
                                     * point.cap_boost_frac)))
+    if point.hostcache is not None:
+        from repro.hostcache.model import as_hc_params
+        p = p._replace(hostcache=as_hc_params(point.hostcache))
     return p
 
 
@@ -182,14 +185,18 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
         return fitted_waste[key]
 
     # compilation groups: (composition, mode, padded length, endurance
-    # presence) — names with the same PolicySpec share one compiled fleet;
-    # wear tracking changes the carry pytree, so endurance-on and -off
-    # cells of one composition cannot share a stacked fleet
+    # presence, host-cache spec) — names with the same PolicySpec share one
+    # compiled fleet; wear tracking changes the carry pytree, so
+    # endurance-on and -off cells of one composition cannot share a
+    # stacked fleet. The host-cache *spec* (not just presence) splits
+    # groups: its mode/promote/flush select code paths and sets/ways fix
+    # carry shapes (DESIGN.md §14) — only the float knobs are traced.
     groups: Dict[tuple, list] = defaultdict(list)
     for pt in points:
         groups[(get_spec(pt.policy), pt.mode,
                 len(cell_trace(pt)["arrival_ms"]),
-                _endurance_of(pt) is not None)].append(pt)
+                _endurance_of(pt) is not None,
+                pt.hostcache)].append(pt)
 
     results: Dict[SweepPoint, Dict[str, float]] = {}
 
@@ -227,9 +234,9 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
 
     # ---- phase 1: dispatch every group (async — results are futures) ----
     pending = []
-    for (spec, mode, _t_len, _endur), pts in sorted(
+    for (spec, mode, _t_len, _endur, _hc), pts in sorted(
             groups.items(), key=lambda kv: (kv[0][0], kv[0][1], kv[0][2],
-                                            kv[0][3])):
+                                            kv[0][3], str(kv[0][4]))):
         if max_pending is not None and len(pending) >= max_pending:
             drain(pending.pop(0))       # bounded window: free the oldest
         traces = [cell_trace(p) for p in pts]
@@ -248,7 +255,11 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
         # every cell's caps must provably fit int16
         pack_grp = (packed if isinstance(packed, bool)
                     else all(can_pack(cfg, n_logical, p) for p in params))
-        trim_grp = (trim_pads and not _endur)
+        if _hc is not None:
+            # the tier pipeline rewrites ops in-scan (K sub-op slots per
+            # trace op) — no trimmed/packed fast path (DESIGN.md §14)
+            pack_grp = False
+        trim_grp = (trim_pads and not _endur and _hc is None)
         if timeline_ops is not None and trim_pads and _endur:
             # the fallback used to be silent — a fleet that quietly
             # forfeits the fast path just looks "slow" (DESIGN.md §13)
@@ -273,7 +284,7 @@ def run_sweep(cfg: SSDConfig, points: Sequence[SweepPoint], *,
                 cfg, spec, ops, stacked,
                 closed_loop=(mode == "bursty"), n_logical=n_logical,
                 timeline_ops=timeline_ops, trim_pads=trim_grp,
-                packed=pack_grp)
+                packed=pack_grp, hostcache=_hc)
             if mode == "daily":
                 states = fleet.flush_fleet(cfg, states, spec)
             summ = fleet.summarize_fleet(latency, ops["is_write"], states,

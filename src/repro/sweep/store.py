@@ -16,7 +16,7 @@ import time
 from typing import Dict, Optional
 
 __all__ = ["save_bench", "load_bench", "list_benches",
-           "check_step_throughput"]
+           "check_hostcache_sweep", "check_step_throughput"]
 
 SCHEMA_VERSION = 1
 
@@ -114,6 +114,50 @@ def check_step_throughput(doc: Dict, *, min_speedup: float = 0.0) -> Dict:
         assert gm["compressed"] >= min_speedup, (
             f"step throughput gate: compressed geomean speedup "
             f"{gm['compressed']:.2f}x < required {min_speedup:.2f}x")
+    return doc
+
+
+def check_hostcache_sweep(doc: Dict) -> Dict:
+    """Validate a BENCH_sweep_hostcache.json document (the `hostcache`
+    grid, DESIGN.md §14) and return it. Raises AssertionError on a
+    malformed artifact — the CI smoke gate (scripts/ci_check.sh):
+
+    * results must carry both host-tier cells (`&...hc=` qualified keys
+      with the host_* columns) and their device-only references;
+    * a `hostcache` summary block with the per-(mode, policy, tag)
+      columns, every entry paired against an off cell (`lat_vs_off` set);
+    * every write-back row must absorb write traffic (device-visible
+      writes strictly below trace writes); daily write-back rows must
+      additionally show a host hit rate above zero. (Bursty mode's
+      sequential-rewrite transform has no address reuse by construction,
+      so bursty hit rates are legitimately zero — absorption there is
+      pure write-allocation.)
+    """
+    results = doc.get("results")
+    assert results, "no results"
+    on = {k: v for k, v in results.items() if "hc=" in k}
+    off = {k: v for k, v in results.items() if "hc=" not in k}
+    assert on and off, "need host-tier cells AND device-only references"
+    host_cols = {"host_hit_rate", "host_dev_write_frac", "host_absorbed",
+                 "host_flush_w", "host_evict_w"}
+    for key, row in on.items():
+        assert host_cols <= set(row), (key, sorted(row))
+    for key, row in off.items():
+        assert not (host_cols & set(row)), (
+            f"device-only cell {key} grew host columns")
+    hc = doc.get("hostcache")
+    assert hc, "missing hostcache summary block"
+    for key, v in hc.items():
+        assert {"host_hit_rate", "host_dev_write_frac", "lat_vs_off",
+                "wa_vs_off", "n"} <= set(v), (key, sorted(v))
+        assert v["lat_vs_off"] is not None, (
+            f"{key}: no device-only reference cell to normalize against")
+        if "/wb" in key:
+            assert v["host_dev_write_frac"] < 1.0, (
+                f"{key}: write-back absorbed no write traffic")
+            if key.startswith("daily/"):
+                assert v["host_hit_rate"] > 0, (
+                    f"{key}: write-back host tier never hit")
     return doc
 
 

@@ -23,6 +23,12 @@ Scenarios (all seeded, all deterministic):
   * tenant_mix   — multi-tenant interleave (`mix_traces`) of a hot
                    overwriter, a reader and a sequential streamer, each in
                    its own partition of the logical window.
+  * flush_burst  — diurnal day/night phase alternation built from an
+                   explicit `TraceStats` sequence (`synthesize_phases`):
+                   hot skewed write bursts, then read-mostly idle — the
+                   host-tier write-back cache stressor (DESIGN.md §14),
+                   whose watermark flush bursts collide with device
+                   reclamation on the day phases.
   * adv_ips_base — adversarial scenario found by the search engine
                    (`repro.search.scenario.separation_search(ips,
                    baseline)`, DESIGN.md §10): a write-saturated,
@@ -46,13 +52,14 @@ from repro.workloads import ir
 from repro.workloads.synth import TraceStats
 
 __all__ = ["zipf_overwrite", "diurnal", "read_burst", "gc_pressure",
-           "tenant_mix", "adv_ips_base", "ADV_IPS_BASE_STATS",
+           "tenant_mix", "adv_ips_base", "flush_burst",
+           "ADV_IPS_BASE_STATS", "FLUSH_BURST_DAY", "FLUSH_BURST_NIGHT",
            "mix_traces", "SCENARIOS", "SCENARIO_NAMES", "VERSION"]
 
 # bump whenever any generator's sampling or default parameters change:
 # it is part of the content-addressed trace-cache recipe, so stale disk
 # entries invalidate without mtime heuristics
-VERSION = 1
+VERSION = 2
 
 
 def _rng(label: str, seed: int) -> np.random.Generator:
@@ -250,6 +257,42 @@ ADV_IPS_BASE_STATS = TraceStats(
     interarrival_ms=0.057, idle_every=24800, idle_ms=124.0)
 
 
+# flush_burst phase stats (DESIGN.md §14): the day phase is a hot,
+# heavily-skewed overwrite burst — a tiny working set the host tier's
+# 1024-line default geometry can actually hold, so a write-back cache
+# accumulates dirty lines fast and its watermark flush bursts land
+# *inside* the device's own reclamation pressure window; the night phase
+# is read-mostly with explicit idle gaps, the window an idle-gap flush
+# scheduler (flush=idle) drains in instead. Built as a phase sequence
+# (synthesize_phases) rather than a sampler so fit_stats(windows=2*cycles)
+# recovers the alternation — the drift round-trip test.
+FLUSH_BURST_DAY = TraceStats(
+    n_requests=2600, write_ratio=0.92, mean_req_pages=3.0, seq_prob=0.1,
+    working_set_frac=0.008, skew=2.2, interarrival_ms=0.12,
+    idle_every=10000, idle_ms=0.0)
+FLUSH_BURST_NIGHT = TraceStats(
+    n_requests=400, write_ratio=0.10, mean_req_pages=2.0, seq_prob=0.2,
+    working_set_frac=0.008, skew=1.2, interarrival_ms=2.0,
+    idle_every=50, idle_ms=400.0)
+
+
+def flush_burst(total_logical_pages: int,
+                capacity_pages: Optional[int] = None, seed: int = 0, *,
+                cycles: int = 6) -> ir.Trace:
+    """Diurnal flush-burst scenario: `cycles` day/night alternations of
+    `FLUSH_BURST_DAY` / `FLUSH_BURST_NIGHT` (see the stats' comment).
+    The write-back host-cache stress workload: day bursts fill the host
+    tier and arm watermark flushes against the device's reclamation
+    cliff; night idle is where idle-gap flushing (and the device's own
+    idle reclamation) catches up."""
+    from repro.workloads.synth import synthesize_phases
+    phases = [FLUSH_BURST_DAY, FLUSH_BURST_NIGHT] * cycles
+    req = synthesize_phases(phases, total_logical_pages, seed,
+                            capacity_pages, label="flush_burst")
+    return ir.from_requests(req, total_logical_pages,
+                            f"gen:flush_burst/seed={seed}")
+
+
 # name -> builder(total_logical_pages, capacity_pages, seed) -> Trace
 SCENARIOS: Dict[str, Callable] = {
     "zipf_hot": zipf_overwrite,
@@ -258,6 +301,7 @@ SCENARIOS: Dict[str, Callable] = {
     "gc_pressure": gc_pressure,
     "tenant_mix": tenant_mix,
     "adv_ips_base": adv_ips_base,
+    "flush_burst": flush_burst,
 }
 
 SCENARIO_NAMES = tuple(SCENARIOS)

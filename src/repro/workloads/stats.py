@@ -53,9 +53,36 @@ def request_view(trace: Trace):
 
 
 def fit_stats(trace: Trace, total_logical_pages: int,
-              capacity_pages: Optional[int] = None) -> TraceStats:
-    """Fit the synthesizer's `TraceStats` from any Trace."""
+              capacity_pages: Optional[int] = None, *,
+              windows: Optional[int] = None):
+    """Fit the synthesizer's `TraceStats` from any Trace.
+
+    `windows=N` splits the trace into N equal request-count slices and
+    fits each independently, returning a tuple of N `TraceStats` — the
+    phase-drift view of a non-stationary workload (a diurnal trace's day
+    slices fit write-heavy bursty stats, its night slices read-mostly
+    idle ones). Feed the sequence to `synth.synthesize_phases` to replay
+    the drift as a synthetic twin. `windows=None` (default) fits the
+    whole trace as one phase and returns a single `TraceStats`, exactly
+    as before."""
     arrival, lba, pages, is_write = request_view(trace)
+    if windows is None:
+        return _fit_from_requests(arrival, lba, pages, is_write,
+                                  total_logical_pages, capacity_pages)
+    if windows < 1:
+        raise ValueError(f"windows wants a positive count, got {windows}")
+    bounds = np.linspace(0, len(arrival), windows + 1).astype(np.int64)
+    return tuple(
+        _fit_from_requests(arrival[a:b], lba[a:b], pages[a:b],
+                           is_write[a:b], total_logical_pages,
+                           capacity_pages)
+        for a, b in zip(bounds[:-1], bounds[1:]))
+
+
+def _fit_from_requests(arrival, lba, pages, is_write,
+                       total_logical_pages: int,
+                       capacity_pages: Optional[int]) -> TraceStats:
+    """One-phase estimator over request-level arrays (module docstring)."""
     n = len(arrival)
     if n == 0:
         return TraceStats(0, 0.0, 1.0, 0.0, 0.0, 1.0, 1.0, 1, 0.0)

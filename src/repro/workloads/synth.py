@@ -35,7 +35,8 @@ import numpy as np
 from repro.workloads import ir
 
 __all__ = ["TraceStats", "TRACES", "TRACE_NAMES", "synthesize",
-           "synthesize_stats", "synth_trace", "make_trace"]
+           "synthesize_stats", "synthesize_phases", "synth_trace",
+           "make_trace"]
 
 
 @dataclass(frozen=True)
@@ -127,6 +128,33 @@ def synthesize_stats(st: TraceStats, total_logical_pages: int,
     arrival = np.cumsum(gaps) - gaps[0]
     return {"arrival_ms": arrival, "lba": lba, "pages": sizes,
             "is_write": is_write}
+
+
+def synthesize_phases(stats_seq, total_logical_pages: int, seed: int = 0,
+                      capacity_pages: int | None = None,
+                      label: str = "phases") -> Dict:
+    """Concatenate per-phase syntheses into one request-level trace.
+
+    Each `TraceStats` in `stats_seq` synthesizes one phase (RNG stream
+    `{label}.{i}`, so phases decorrelate even with identical stats) and
+    phases tile along the arrival axis with cumulative span offsets —
+    the `_repeat_requests` scheme, but with the stats free to drift
+    between phases. Pair with `stats.fit_stats(trace, windows=N)`: the
+    fitted phase sequence replays a non-stationary workload's drift
+    (e.g. the diurnal write-burst/idle alternation the `flush_burst`
+    scenario is built from)."""
+    stats_seq = list(stats_seq)
+    if not stats_seq:
+        raise ValueError("synthesize_phases wants at least one TraceStats")
+    parts, offset = [], 0.0
+    for i, st in enumerate(stats_seq):
+        req = synthesize_stats(st, total_logical_pages, seed,
+                               capacity_pages, label=f"{label}.{i}")
+        arrival = req["arrival_ms"] + offset
+        if len(arrival):
+            offset = float(arrival[-1]) + 1.0
+        parts.append({**req, "arrival_ms": arrival})
+    return {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
 
 
 def synthesize(name: str, total_logical_pages: int, seed: int = 0,

@@ -1,0 +1,354 @@
+"""Host-tier block-cache subsystem tests (DESIGN.md §14).
+
+Load-bearing contracts:
+
+* Off-path bit-identity — `hostcache=None` keeps the seed device scan
+  exactly: latencies and every SimState field of the four paper policies
+  stay bit-identical to the vendored golden monolith (the trailing-carry
+  `None` contract; ci_check's off-path gate).
+* Conservation — the tier pipeline loses no ops and no writes:
+  absorbed + dev_ops equals the live op count exactly, and the device
+  write counter equals trace writes minus host-absorbed writes plus
+  flush/eviction write-backs, exactly.
+* Window telescoping — `HostWindows` per-window deltas sum to the final
+  cumulative host counters exactly (the PR 6 snapshot-differencing
+  identity), including the device-visible latency column.
+* The write-back tier absorbs write traffic (device-visible writes
+  strictly below trace writes) and the flush-burst-vs-reclamation cliff
+  is visible on the device-visible latency series: the baseline policy
+  cliffs early on the bursty flush_burst scenario and IPS shrinks it.
+* Fleet/single-cell equivalence extends to the host-cache state.
+
+Satellite coverage rides along: HostCacheSpec parse/tag validation, the
+`hostcache` sweep grid, and report-layer pairing (`hostcache_summary`,
+headline geomeans excluding host-tier cells).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from golden_sim import golden_run_trace
+from repro.configs.ssd_paper import PAPER_SSD
+from repro.core.ssd import fleet
+from repro.core.ssd.driver import _agc_waste_p
+from repro.core.ssd.sim import (CTR, SimState, default_params, run_trace,
+                                summarize)
+from repro.core.ssd.workloads import make_trace, truncate_trace
+from repro.hostcache import HostCacheSpec
+from repro.hostcache.model import H_CTR, HostWindows, as_hc_params
+from repro.sweep.grid import SweepPoint, hostcache_grid, named_grid
+from repro.sweep.report import hostcache_summary, policy_geomeans
+from repro.telemetry.timeline import detect_cliff
+from repro.workloads.generators import flush_burst
+
+CFG = PAPER_SSD.scaled(128)
+N_LOGICAL = min(CFG.total_pages, 1 << 16)
+MAX_OPS = 4096
+PAPER_POLICIES = ("baseline", "ips", "ips_agc", "coop")
+
+
+def _hm0(mode, max_ops=MAX_OPS):
+    return truncate_trace(
+        make_trace("hm_0", N_LOGICAL, mode=mode,
+                   capacity_pages=CFG.total_pages), max_ops)
+
+
+def _fb(mode, max_ops=None):
+    """flush_burst scenario trace, mode-resolved (bursty == the paper's
+    sequential-rewrite transform, closed loop)."""
+    tr = flush_burst(N_LOGICAL, capacity_pages=CFG.total_pages)
+    if mode == "bursty":
+        tr = tr.to_bursty(N_LOGICAL)
+    if max_ops is not None:
+        tr = tr.truncate(max_ops)
+    return tr.compile()
+
+
+def _run_hc(policy, trace, mode, hc, **kw):
+    lat, st = run_trace(CFG, policy, trace, closed_loop=mode == "bursty",
+                        n_logical=N_LOGICAL, hostcache=hc, **kw)
+    return lat, st
+
+
+def _hctr(st):
+    return np.asarray(st.hostcache.hctr, np.float64)
+
+
+class TestOffPathGoldenIdentity:
+    """hostcache=None == the golden monolith, bit for bit."""
+
+    @pytest.mark.parametrize("mode", ["bursty", "daily"])
+    @pytest.mark.parametrize("policy", PAPER_POLICIES)
+    def test_off_path_vs_golden(self, policy, mode):
+        trace = _hm0(mode)
+        waste = _agc_waste_p("hm_0")
+        closed = mode == "bursty"
+        lat_g, st_g = golden_run_trace(CFG, policy, trace,
+                                       closed_loop=closed,
+                                       n_logical=N_LOGICAL, waste_p=waste)
+        lat_o, st_o = run_trace(CFG, policy, trace, closed_loop=closed,
+                                n_logical=N_LOGICAL, waste_p=waste,
+                                hostcache=None)
+        assert st_o.hostcache is None      # statically absent, not zeroed
+        assert np.array_equal(np.asarray(lat_g), np.asarray(lat_o)), \
+            f"latency mismatch [{policy}/{mode}]"
+        for f, val in zip(type(st_g)._fields, st_g):
+            assert np.array_equal(np.asarray(val),
+                                  np.asarray(getattr(st_o, f))), \
+                f"state.{f} mismatch [{policy}/{mode}]"
+
+    def test_default_cell_has_no_hostcache_params(self):
+        assert default_params(CFG, "ips").hostcache is None
+
+
+class TestConservation:
+    """The tier pipeline loses no ops and no writes — exact identities."""
+
+    @pytest.mark.parametrize("hc", [
+        HostCacheSpec(mode="wb", flush="watermark"),
+        HostCacheSpec(mode="wb", flush="idle"),
+        HostCacheSpec(mode="wt"),
+        HostCacheSpec(mode="wa"),
+    ], ids=lambda hc: hc.tag)
+    def test_op_and_write_conservation(self, hc):
+        trace = _fb("daily", max_ops=8192)
+        isw = np.asarray(trace["is_write"])
+        live = int((isw >= 0).sum())
+        trace_w = int((isw == 1).sum())
+        _, st = _run_hc("ips", trace, "daily", hc)
+        h = _hctr(st)
+        # every live op either absorbed at host latency or sent down
+        assert h[H_CTR["absorbed"]] + h[H_CTR["dev_ops"]] == live
+        assert h[H_CTR["hits"]] == (h[H_CTR["read_hits"]]
+                                    + h[H_CTR["write_hits"]])
+        # device write counter == trace writes - absorbed + write-backs
+        dev_w = float(np.asarray(st.counters)[CTR["host_w"]])
+        assert dev_w == (trace_w - h[H_CTR["absorbed_w"]]
+                         + h[H_CTR["flush_w"]] + h[H_CTR["evict_w"]])
+        if hc.mode in ("wt", "wa"):
+            # no dirty lines ever: nothing to flush or write back
+            assert h[H_CTR["absorbed_w"]] == 0
+            assert h[H_CTR["flush_w"]] == 0 and h[H_CTR["evict_w"]] == 0
+            assert dev_w == trace_w
+
+    def test_idle_flush_statically_off_in_closed_loop(self):
+        """Bursty replay has no arrival gaps — the idle-gap scheduler
+        never fires (and the watermark variant is the only flusher)."""
+        trace = _fb("bursty", max_ops=16384)
+        _, st = _run_hc("ips", trace, "bursty",
+                        HostCacheSpec(mode="wb", flush="idle"))
+        assert _hctr(st)[H_CTR["flush_w"]] == 0
+
+
+class TestWindowTelescoping:
+    """HostWindows deltas sum to the final cumulative counters exactly."""
+
+    def test_window_deltas_telescope(self):
+        hc = HostCacheSpec()
+        trace = _hm0("daily", max_ops=8192)
+        _, st = _run_hc("ips", trace, "daily", hc, timeline_ops=512)
+        hw = st.hostcache.hwin
+        assert isinstance(hw, HostWindows)
+        h = _hctr(st)
+        for leaf in ("hits", "absorbed", "dev_ops", "flush_w", "evict_w"):
+            total = float(np.asarray(getattr(hw, leaf), np.float64).sum())
+            assert total == h[H_CTR[leaf]], leaf
+        # the device-visible latency column telescopes the same way
+        assert (float(np.asarray(hw.dev_lat_ms, np.float64).sum())
+                == pytest.approx(float(st.hostcache.dev_lat_ms), rel=1e-6))
+        # dirty_frac is a boundary level, not a delta: last snapshot is
+        # the final dirty fraction
+        assert float(hw.dirty_frac[-1]) == pytest.approx(
+            float(st.hostcache.dirty_n) / hc.lines)
+
+    def test_no_probe_no_windows(self):
+        trace = _hm0("daily", max_ops=2048)
+        _, st = _run_hc("ips", trace, "daily", HostCacheSpec())
+        assert st.hostcache.hwin is None
+
+
+class TestWriteBackAbsorption:
+    """The acceptance story: wb absorbs writes, the summary reports it."""
+
+    def test_daily_wb_hits_and_absorbs(self):
+        trace = _fb("daily")
+        hc = HostCacheSpec(mode="wb", flush="watermark")
+        lat, st = _run_hc("ips", trace, "daily", hc)
+        isw = np.asarray(trace["is_write"])
+        trace_w = int((isw == 1).sum())
+        s = summarize(lat, {"is_write": isw}, st,
+                      cell=default_params(CFG, "ips")._replace(
+                          hostcache=as_hc_params(hc)), cfg=CFG)
+        assert float(s["host_hit_rate"]) > 0
+        # device-visible writes strictly below trace writes
+        dev_w = float(np.asarray(st.counters)[CTR["host_w"]])
+        assert dev_w < trace_w
+        assert float(s["host_dev_write_frac"]) == pytest.approx(
+            dev_w / trace_w)
+        # host hits serve at hit_ms: mean write latency collapses vs off
+        lat_o, st_o = run_trace(CFG, "ips", trace, closed_loop=False,
+                                n_logical=N_LOGICAL)
+        s_o = summarize(lat_o, {"is_write": isw}, st_o)
+        assert (float(s["mean_write_latency_ms"])
+                < float(s_o["mean_write_latency_ms"]))
+        assert "host_hit_rate" not in s_o
+
+    def test_bursty_wb_absorbs_without_reuse(self):
+        """The sequential-rewrite transform has no address reuse: zero
+        hits by construction, yet write-allocation still keeps some dirty
+        residue host-side (device writes strictly below trace writes)."""
+        trace = _fb("bursty")
+        _, st = _run_hc("ips", trace, "bursty", HostCacheSpec())
+        h = _hctr(st)
+        isw = np.asarray(trace["is_write"])
+        trace_w = int((isw == 1).sum())
+        assert h[H_CTR["hits"]] == 0
+        dev_w = float(np.asarray(st.counters)[CTR["host_w"]])
+        assert dev_w < trace_w
+
+    def test_watermark_flushes_more_than_idle_gap(self):
+        """On the diurnal scenario the watermark scheduler drains in
+        bursts while the idle-gap scheduler rarely opens — evictions
+        carry the write-backs instead."""
+        trace = _fb("daily")
+        flw = {}
+        for flush in ("watermark", "idle"):
+            _, st = _run_hc("ips", trace, "daily",
+                            HostCacheSpec(mode="wb", flush=flush))
+            flw[flush] = _hctr(st)
+        assert flw["watermark"][H_CTR["flush_w"]] > \
+            flw["idle"][H_CTR["flush_w"]]
+        assert flw["idle"][H_CTR["evict_w"]] > \
+            flw["watermark"][H_CTR["evict_w"]]
+
+    def test_nth_promotion_filters_inserts(self):
+        """promote=nth withholds miss-inserts until the shadow filter
+        sees N accesses: hit volume can only drop vs promote=always."""
+        trace = _hm0("daily", max_ops=8192)
+        hits = {}
+        for promote in ("always", "nth"):
+            _, st = _run_hc("ips", trace, "daily",
+                            HostCacheSpec(promote=promote))
+            hits[promote] = _hctr(st)[H_CTR["hits"]]
+        assert hits["nth"] <= hits["always"]
+
+
+class TestFlushBurstCliff:
+    """The ISSUE acceptance: the telemetry cliff detector surfaces a
+    flush-burst-induced window on the baseline policy that IPS removes
+    or shrinks — on the device-visible latency series (the host-visible
+    write latency is flat under wb absorption; the cliff lives in what
+    the device sees)."""
+
+    def test_baseline_cliffs_ips_shrinks(self):
+        hc = HostCacheSpec(mode="wb", flush="watermark")
+        trace = _fb("bursty")
+        out = {}
+        for pol in ("baseline", "ips"):
+            _, st = _run_hc(pol, trace, "bursty", hc, timeline_ops=1024)
+            hw = st.hostcache.hwin
+            dev_n = np.asarray(hw.dev_ops + hw.flush_w + hw.evict_w,
+                               np.float64)
+            dev_lat = np.asarray(hw.dev_lat_ms, np.float64)
+            mean = np.where(dev_n > 0, dev_lat / np.maximum(dev_n, 1),
+                            np.nan)
+            out[pol] = (detect_cliff(mean, dev_n, window_ops=1024),
+                        float(st.hostcache.dev_lat_ms))
+        cliff_b, tot_b = out["baseline"]
+        cliff_i, tot_i = out["ips"]
+        assert cliff_b["detected"]               # baseline hits the cliff
+        if cliff_i["detected"]:                  # ... which IPS shrinks:
+            assert cliff_i["window"] > cliff_b["window"]   # later onset
+        assert tot_i < tot_b                     # less total device time
+
+
+class TestFleetEquivalence:
+    def test_fleet_matches_single_cell_with_hostcache(self):
+        hc = HostCacheSpec(mode="wb", flush="watermark")
+        traces = [_hm0("daily", 8192),
+                  truncate_trace(
+                      make_trace("hm_1", N_LOGICAL, mode="daily",
+                                 capacity_pages=CFG.total_pages), 8192)]
+        params = [default_params(CFG, "ips")._replace(
+            hostcache=as_hc_params(hc))] * 2
+        lat_f, st_f = fleet.run_fleet(
+            CFG, "ips", fleet.stack_ops(traces),
+            fleet.stack_params(params), closed_loop=False,
+            n_logical=N_LOGICAL, hostcache=hc)
+        for i, tr in enumerate(traces):
+            lat_r, st_r = run_trace(CFG, "ips", tr, closed_loop=False,
+                                    n_logical=N_LOGICAL, params=params[i],
+                                    hostcache=hc)
+            assert np.array_equal(np.asarray(lat_r), np.asarray(lat_f[i]))
+            for f, val in zip(type(st_r.hostcache)._fields,
+                              st_r.hostcache):
+                if f == "hwin":
+                    continue
+                assert np.array_equal(
+                    np.asarray(val),
+                    np.asarray(getattr(st_f.hostcache, f)[i])), \
+                    f"hostcache.{f} mismatch cell {i}"
+
+
+class TestSpecAndGrid:
+    def test_parse_round_trip_and_tag(self):
+        hc = HostCacheSpec.parse("mode=wt,sets=64,ways=4,wm_hi=0.9")
+        assert hc.mode == "wt" and hc.sets == 64 and hc.ways == 4
+        assert hc.wm_hi == 0.9 and hc.lines == 256
+        assert hc.tag == "wt:watermark:64x4:wm0.9-0.5"
+        assert HostCacheSpec.parse("") == HostCacheSpec()
+        assert HostCacheSpec().tag == "wb:watermark"
+
+    @pytest.mark.parametrize("text", [
+        "nope=1", "mode=magic", "sets=abc", "mode", "flush=never"])
+    def test_parse_rejects_bad_knobs(self, text):
+        with pytest.raises(ValueError):
+            HostCacheSpec.parse(text)
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="flush_per_op < sets"):
+            HostCacheSpec(sets=2, flush_per_op=2)
+        with pytest.raises(ValueError, match="off == omit"):
+            HostCacheSpec(mode="off")
+
+    def test_point_key_carries_hostcache_tag(self):
+        hc = HostCacheSpec(mode="wb", flush="idle")
+        pt = SweepPoint("flush_burst", "daily", "ips", hostcache=hc)
+        assert "hc=wb:idle" in pt.key
+        bare = SweepPoint("flush_burst", "daily", "ips")
+        assert "hc=" not in bare.key
+
+    def test_hostcache_grid_shape(self):
+        pts = hostcache_grid()
+        assert pts == named_grid("hostcache")
+        assert len(pts) == 40                      # 4 pol x 2 mode x 5 hc
+        assert {p.trace for p in pts} == {"flush_burst"}
+        off = [p for p in pts if p.hostcache is None]
+        assert len(off) == 8                       # paired references
+        tags = {p.hostcache.tag for p in pts if p.hostcache is not None}
+        assert tags == {"wb:watermark", "wb:idle", "wt:watermark",
+                        "wa:watermark"}
+
+
+class TestSweepAndReport:
+    def test_sweep_pairs_and_headline_excludes_host_cells(self):
+        from repro.sweep.runner import run_sweep
+        hc = HostCacheSpec()
+        pts = [SweepPoint("hm_0", "daily", pol, hostcache=h)
+               for pol in ("baseline", "ips") for h in (None, hc)]
+        res = run_sweep(CFG, pts, max_ops=2048)
+        assert set(res) == set(pts)
+        for p in pts:
+            has_host = "host_hit_rate" in res[p]
+            assert has_host == (p.hostcache is not None), p.key
+        summ = hostcache_summary(res)
+        assert set(summ) == {("daily", "baseline", hc.tag),
+                             ("daily", "ips", hc.tag)}
+        for row in summ.values():
+            assert row["lat_vs_off"] is not None
+            assert row["host_dev_write_frac"] < 1.0
+        # the headline geomeans stay a device-only story
+        gm = policy_geomeans(res)
+        assert ("daily", "ips") in gm
+        off = {p: v for p, v in res.items() if p.hostcache is None}
+        assert gm == policy_geomeans(off)

@@ -18,12 +18,15 @@ import pytest
 from repro import workloads as wl
 from repro.workloads import ir
 from repro.workloads.cache import TraceCache
-from repro.workloads.generators import (gc_pressure, mix_traces,
-                                        read_burst, zipf_overwrite)
+from repro.workloads.generators import (FLUSH_BURST_DAY, FLUSH_BURST_NIGHT,
+                                        flush_burst, gc_pressure,
+                                        mix_traces, read_burst,
+                                        zipf_overwrite)
 from repro.workloads.parsers import (HAVE_ZSTD, load_trace, parse_requests,
                                      sniff_format)
 from repro.workloads.stats import fit_stats, request_view, synthesize_like
-from repro.workloads.synth import TRACES, TraceStats, synthesize_stats
+from repro.workloads.synth import (TRACES, TraceStats, synthesize_phases,
+                                   synthesize_stats)
 
 N_LOGICAL = 1 << 16
 CAPACITY = 786432               # scale-128 drive
@@ -411,6 +414,69 @@ class TestGenerators:
             assert (np.diff(tr.arrival_ms.astype(np.float64))
                     >= -1e-3).all(), name
             assert tr.lba.min() >= 0 and tr.lba.max() < N_LOGICAL, name
+
+
+class TestPhaseFitting:
+    """fit_stats(windows=N) <-> synthesize_phases: the drift round-trip."""
+
+    _DAY = TraceStats(4000, 0.95, 3.0, 0.1, 0.01, 2.0, 0.12, 10000, 0.0)
+    _NIGHT = TraceStats(4000, 0.05, 2.0, 0.2, 0.01, 1.2, 2.0, 10000, 0.0)
+
+    def test_windows_one_matches_whole_trace_fit(self):
+        """A single window is the old single-phase estimator exactly."""
+        tr = gc_pressure(N_LOGICAL, CAPACITY, seed=2)
+        whole = fit_stats(tr, N_LOGICAL, CAPACITY)
+        (windowed,) = fit_stats(tr, N_LOGICAL, CAPACITY, windows=1)
+        assert windowed == whole
+
+    @pytest.mark.parametrize("windows", [0, -3])
+    def test_windows_must_be_positive(self, windows):
+        tr = gc_pressure(N_LOGICAL, CAPACITY, seed=2)
+        with pytest.raises(ValueError, match="positive"):
+            fit_stats(tr, N_LOGICAL, CAPACITY, windows=windows)
+
+    def test_windowed_fit_recovers_phase_drift(self):
+        """Equal-length phases land on window boundaries: each window's
+        fit recovers its own phase's stats, not a blended average."""
+        req = synthesize_phases([self._DAY, self._NIGHT], N_LOGICAL,
+                                capacity_pages=CAPACITY, label="drift")
+        tr = ir.trace_from_requests(req, "daily", N_LOGICAL, "drift")
+        day, night = fit_stats(tr, N_LOGICAL, CAPACITY, windows=2)
+        assert day.n_requests == night.n_requests == 4000
+        assert day.write_ratio == pytest.approx(0.95, abs=0.02)
+        assert night.write_ratio == pytest.approx(0.05, abs=0.02)
+        assert day.interarrival_ms == pytest.approx(0.12, rel=0.2)
+        assert night.interarrival_ms == pytest.approx(2.0, rel=0.2)
+        # the blended single-phase fit sits between the two
+        blended = fit_stats(tr, N_LOGICAL, CAPACITY)
+        assert (night.write_ratio < blended.write_ratio
+                < day.write_ratio)
+
+    def test_synthesize_phases_concatenates_monotonically(self):
+        req = synthesize_phases([self._DAY, self._NIGHT, self._DAY],
+                                N_LOGICAL, capacity_pages=CAPACITY)
+        assert len(req["arrival_ms"]) == 12000
+        assert (np.diff(req["arrival_ms"]) >= 0).all()
+        # phases decorrelate: identical stats, different RNG streams
+        a = req["lba"][:4000]
+        c = req["lba"][8000:]
+        assert not np.array_equal(a, c)
+        with pytest.raises(ValueError, match="at least one"):
+            synthesize_phases([], N_LOGICAL)
+
+    def test_flush_burst_is_diurnal(self):
+        """The scenario alternates write-heavy day bursts with idle
+        read-mostly nights; the page-level write ratio sits between the
+        two phase stats and the scenario registry carries it."""
+        assert "flush_burst" in wl.SCENARIO_NAMES
+        tr = flush_burst(N_LOGICAL, CAPACITY, cycles=2)
+        arrival, _, _, is_write = request_view(tr)
+        assert (np.diff(arrival) >= 0).all()
+        wr = float(is_write.mean())
+        assert FLUSH_BURST_NIGHT.write_ratio < wr \
+            < FLUSH_BURST_DAY.write_ratio
+        # night idle gaps are present and long vs the day arrival process
+        assert float(np.max(np.diff(arrival))) > 100.0
 
 
 class TestMixer:
